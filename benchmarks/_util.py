@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing, table printing, result registry."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+
+
+def block(x):
+    return jax.tree.map(
+        lambda a: a.block_until_ready()
+        if hasattr(a, "block_until_ready") else a, x)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time of fn(*args) with device sync."""
+    for _ in range(warmup):
+        block(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def print_table(title: str, headers, rows):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    line = "  ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+
+
+def save_results(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

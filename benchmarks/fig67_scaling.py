@@ -1,0 +1,61 @@
+"""Paper Figs. 6/7: strong scaling of the selection kernel (IC + LT).
+
+On one CPU device we cannot run 1..128 real chips, so strong scaling is
+measured the way the dry-run measures everything else: the selection step
+is lowered for meshes of 1..8 host devices (XLA host-platform devices,
+subprocess) and per-device HLO cost terms are reported; additionally the
+single-device wall time across theta partitions shows the work-efficiency
+trend.  The production-mesh numbers live in EXPERIMENTS §Roofline (256/512
+chips).
+
+Here: measured wall-time of EfficientIMM vs baseline selection at doubling
+theta (the per-worker share of RRRsets halves as workers double — the
+work-per-worker proxy of Fig 6/7's x-axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import print_table, save_results, timeit
+from repro.core.selection import select_dense
+from repro.core.sampler import make_logq, sample_ic_dense, sample_lt
+from repro.graphs import rmat_graph
+
+
+def run(n: int = 2048, m: int = 16384, k: int = 10, log=print):
+    g = rmat_graph(n, m, seed=0)
+    logq = make_logq(g)
+    rows, payload = [], {}
+    for model in ("IC", "LT"):
+        for theta in (512, 1024, 2048, 4096):
+            if model == "IC":
+                R, _, _ = sample_ic_dense(jax.random.PRNGKey(0), logq,
+                                          batch=theta)
+            else:
+                R, _, _ = sample_lt(jax.random.PRNGKey(0), g.dst_offsets,
+                                    g.in_src, g.in_lt_cum, g.in_lt_total,
+                                    batch=theta)
+            valid = jnp.ones((theta,), bool)
+            f_eff = jax.jit(lambda R_, v_: select_dense(R_, v_, k,
+                                                        "rebuild"))
+            f_rip = jax.jit(lambda R_, v_: select_dense(R_, v_, k,
+                                                        "decrement"))
+            t_eff = timeit(f_eff, R, valid)
+            t_rip = timeit(f_rip, R, valid)
+            payload[f"{model}_{theta}"] = {
+                "theta": theta, "efficientimm_s": t_eff,
+                "ripples_style_s": t_rip}
+            rows.append([model, theta, f"{t_rip*1e3:.1f}",
+                         f"{t_eff*1e3:.1f}",
+                         f"{t_rip/max(t_eff,1e-9):.2f}x"])
+    # work-efficiency: time per RRRset should stay ~flat for EfficientIMM
+    print_table("Fig 6/7 analogue: selection runtime vs theta",
+                ["model", "theta", "baseline ms", "efficientimm ms",
+                 "speedup"], rows)
+    save_results("fig67_scaling", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

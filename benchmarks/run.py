@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all, CPU-scale
+    PYTHONPATH=src python -m benchmarks.run table3 fig5
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    table1_coverage, table2_layout, table3_runtime, table4_memory,
+    fig5_adaptive, fig67_scaling,
+)
+
+ALL = {
+    "table1": table1_coverage.run,
+    "table2": table2_layout.run,
+    "table3": table3_runtime.run,
+    "table4": table4_memory.run,
+    "fig5": fig5_adaptive.run,
+    "fig67": fig67_scaling.run,
+}
+
+
+def main(argv=None):
+    names = (argv if argv is not None else sys.argv[1:]) or list(ALL)
+    failures = []
+    for name in names:
+        print(f"\n########## {name} ##########", flush=True)
+        t0 = time.time()
+        try:
+            ALL[name]()
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("FAILED:", failures)
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Paper Table I: input graphs + RRRset coverage characteristics (IC,
+eps=0.5).  CPU-scale replicas of the 8 SNAP graphs; validates the paper's observation
+that social graphs' SCC structure yields dense RRRsets (avg coverage >30%
+for community graphs) while road-like topologies stay sparse.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks._util import print_table, save_results
+from repro.configs.imm_snap import IMM_EXPERIMENTS
+from repro.core.sampler import make_logq, sample_ic_dense
+from repro.graphs.datasets import scaled_snap
+
+
+def run(theta: int = 512, log=print):
+    rows, payload = [], {}
+    for name, exp in IMM_EXPERIMENTS.items():
+        g = scaled_snap(name, exp.bench_scale, seed=0)
+        if g.n > 4096:
+            g = scaled_snap(name, exp.bench_scale * 2048 / g.n, seed=0)
+        logq = make_logq(g)
+        visited, _, _ = sample_ic_dense(
+            jax.random.PRNGKey(0), logq, batch=theta)
+        sizes = np.asarray(visited).sum(axis=1) / g.n
+        rows.append([name, g.n, g.m,
+                     f"{sizes.mean() * 100:.1f}%",
+                     f"{sizes.max() * 100:.1f}%"])
+        payload[name] = {"n": g.n, "m": g.m,
+                         "avg_coverage": float(sizes.mean()),
+                         "max_coverage": float(sizes.max())}
+    print_table("Table I (scaled replicas): RRRset coverage under IC",
+                ["graph", "nodes", "edges", "avg RRR cov", "max RRR cov"],
+                rows)
+    save_results("table1_coverage", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

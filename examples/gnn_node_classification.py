@@ -1,0 +1,69 @@
+"""GraphSAGE node classification on a planted-partition graph with REAL
+neighbor sampling (the minibatch_lg training pattern at CPU scale).
+
+    PYTHONPATH=src python examples/gnn_node_classification.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.graph_feats import synthetic_node_features
+from repro.graphs import rmat_graph
+from repro.graphs.sampler import neighbor_sampler
+from repro.models.gnn.graphsage import (
+    SageConfig, init_sage, forward_blocks, loss_blocks,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def main(n_nodes=2_000, n_edges=16_000, n_classes=5, d_feat=32,
+         steps=150, batch=64):
+    g = rmat_graph(n_nodes, n_edges, seed=0)
+    feats_np, labels_np = synthetic_node_features(
+        g.n, d_feat, n_classes, seed=0, noise=1.5)
+    feats = jnp.asarray(feats_np)
+    labels = jnp.asarray(labels_np)
+
+    cfg = SageConfig(n_layers=2, d_hidden=64, d_feat=d_feat,
+                     n_classes=n_classes, sample_sizes=(10, 5))
+    params = init_sage(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=3e-3, weight_decay=0.0)
+    opt = adamw_init(params, opt_cfg)
+    f1, f2 = cfg.sample_sizes
+
+    @jax.jit
+    def step(params, opt, key, seeds):
+        k1, k2 = jax.random.split(key)
+        n1 = neighbor_sampler(k1, g.dst_offsets, g.in_src, seeds, f1)
+        n2 = neighbor_sampler(k2, g.dst_offsets, g.in_src,
+                              n1.reshape(-1), f2)
+        pad = jnp.zeros((1, d_feat), feats.dtype)
+        table = jnp.concatenate([feats, pad])          # sentinel row n
+        x_seed = table[seeds]
+        x_n1 = table[n1]
+        x_n2 = table[n2]
+        loss, grads = jax.value_and_grad(loss_blocks)(
+            params, cfg, x_seed, x_n1, x_n2, labels[seeds])
+        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        logits = forward_blocks(params, cfg, x_seed, x_n1, x_n2)
+        acc = jnp.mean(jnp.argmax(logits, -1) == labels[seeds])
+        return params, opt, loss, acc
+
+    key = jax.random.PRNGKey(1)
+    accs, losses = [], []
+    for i in range(steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        seeds = jax.random.randint(k1, (batch,), 0, g.n)
+        params, opt, loss, acc = step(params, opt, k2, seeds)
+        losses.append(float(loss))
+        accs.append(float(acc))
+        if i % 30 == 0:
+            print(f"step {i:4d}  loss {loss:.4f}  minibatch acc {acc:.3f}")
+    first, last = np.mean(accs[:10]), np.mean(accs[-10:])
+    print(f"[gnn] minibatch accuracy {first:.3f} -> {last:.3f}")
+    assert last > first + 0.1, "accuracy did not improve"
+    print("[gnn] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end influence-maximization campaign (the paper's workload kind).
+
+Picks seed users for a viral campaign on a YouTube-scale synthetic network,
+under both diffusion models, then Monte-Carlo-validates the influence
+estimate by simulating the IC diffusion from the chosen seeds.
+
+    PYTHONPATH=src python examples/influence_campaign.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import imm, IMMConfig
+from repro.graphs.datasets import scaled_snap
+
+
+def simulate_ic(graph, seeds, n_trials: int = 50, seed: int = 1):
+    """Forward Monte-Carlo IC simulation (independent check of sigma(S))."""
+    rng = np.random.default_rng(seed)
+    src = np.asarray(graph.edge_src)
+    dst = np.asarray(graph.edge_dst)
+    prob = np.asarray(graph.in_prob)
+    total = 0
+    for _ in range(n_trials):
+        live = rng.random(graph.m) < prob
+        active = np.zeros(graph.n, bool)
+        active[list(seeds)] = True
+        frontier = list(seeds)
+        while frontier:
+            # forward edges whose src is active & live
+            mask = live & active[src] & ~active[dst]
+            nxt = np.unique(dst[mask])
+            if nxt.size == 0:
+                break
+            active[nxt] = True
+            frontier = nxt
+        total += active.sum()
+    return total / n_trials
+
+
+def main():
+    print("building YouTube-scale synthetic network (1% replica)...")
+    g = scaled_snap("com-YouTube", 0.004)
+    print(f"  n={g.n:,} m={g.m:,}")
+
+    for model in ("IC", "LT"):
+        t0 = time.time()
+        res = imm(g, IMMConfig(k=20, eps=0.5, model=model,
+                               max_theta=8192))
+        dt = time.time() - t0
+        print(f"\n[{model}] {dt:.1f}s  theta={res.theta}  "
+              f"rep={res.representation}")
+        print(f"  top seeds: {list(res.seeds[:8])}")
+        print(f"  estimated influence: {res.influence:.0f} nodes")
+        if model == "IC":
+            mc = simulate_ic(g, res.seeds, n_trials=20)
+            print(f"  Monte-Carlo validation: {mc:.0f} nodes "
+                  f"({abs(mc - res.influence) / max(mc, 1) * 100:.1f}% gap)")
+
+
+if __name__ == "__main__":
+    main()

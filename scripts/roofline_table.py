@@ -1,0 +1,63 @@
+"""Build the EXPERIMENTS.md §Roofline table from experiments/cells/*.json.
+
+    PYTHONPATH=src python scripts/roofline_table.py [--md]
+"""
+import argparse
+import glob
+import json
+
+
+def load_cells(pattern="experiments/cells/*.json"):
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        for r in json.load(open(f)):
+            rows.append(r)
+    return rows
+
+
+def fmt(rows, md=False):
+    hdr = ["arch", "shape", "mesh", "fits", "GB/dev",
+           "compute_s", "memory_s(adj)", "collective_s", "dominant",
+           "useful", "frac"]
+    out = []
+    for r in rows:
+        if not r.get("ok"):
+            out.append([r["arch"], r["shape"], r["mesh"], "FAIL",
+                        "-", "-", "-", "-",
+                        r.get("error", "")[:40], "-", "-"])
+            continue
+        rf = r["roofline"]
+        out.append([
+            r["arch"], r["shape"], r["mesh"],
+            "yes" if r["fits_hbm"] else "NO",
+            f"{r['bytes_per_device']/2**30:.2f}",
+            f"{rf['compute_s']:.4f}",
+            f"{rf['memory_s']:.3f} ({rf['memory_adjusted_s']:.3f})",
+            f"{rf['collective_s']:.3f}",
+            rf["dominant_adjusted"].replace("_s", ""),
+            f"{rf['useful_flops_ratio']:.2f}",
+            f"{rf['roofline_fraction_adjusted']:.3f}",
+        ])
+    if md:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "|".join(["---"] * len(hdr)) + "|"]
+        for r in out:
+            lines.append("| " + " | ".join(str(c) for c in r) + " |")
+        return "\n".join(lines)
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in out))
+              for i, h in enumerate(hdr)]
+    lines = ["  ".join(str(h).ljust(w) for h, w in zip(hdr, widths))]
+    for r in out:
+        lines.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load_cells()
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh]
+    print(fmt(rows, md=args.md))

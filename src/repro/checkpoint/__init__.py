@@ -1,0 +1,7 @@
+from repro.checkpoint.store import (
+    save_checkpoint,
+    load_checkpoint,
+    CheckpointManager,
+)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]

@@ -1,0 +1,188 @@
+"""Sharded checkpointing with atomic commit, rolling retention, auto-resume.
+
+Design (multi-thousand-node ready, filesystem-backed here):
+  * every pytree leaf is saved as one npz entry keyed by its tree path —
+    restore works across *any* mesh shape because leaves are saved
+    un-sharded logical arrays; the restoring job re-applies its own
+    shardings (elastic up/down-scale of the data axis);
+  * writes go to ``<dir>/step_<n>.tmp`` then ``os.replace`` → crash-safe
+    (a half-written checkpoint is never visible under its final name);
+  * a ``latest`` pointer file is written after the rename; restart reads it
+    and falls back to scanning if the pointer is stale/corrupt;
+  * rolling retention keeps the newest ``keep`` checkpoints;
+  * on a real multi-host pod only process 0 writes (guarded by
+    ``jax.process_index()``), all hosts read.
+
+The pytree may contain jnp/np arrays, python/np scalars, and nested
+dict/list/tuple. Dataclass configs are NOT stored — they belong to code.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+
+import numpy as np
+import jax
+
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    """-> dict[path, leaf] with deterministic ordering + structure spec."""
+    out = {}
+    if isinstance(tree, dict):
+        spec = {"__kind__": "dict", "keys": sorted(tree.keys())}
+        children = {}
+        for k in sorted(tree.keys()):
+            sub_spec, sub_leaves = _flatten(tree[k], f"{prefix}{k}{_SEP}")
+            children[k] = sub_spec
+            out.update(sub_leaves)
+        spec["children"] = children
+        return spec, out
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        spec = {"__kind__": kind, "n": len(tree)}
+        children = []
+        for i, v in enumerate(tree):
+            sub_spec, sub_leaves = _flatten(v, f"{prefix}{i}{_SEP}")
+            children.append(sub_spec)
+            out.update(sub_leaves)
+        spec["children"] = children
+        return spec, out
+    # leaf
+    key = prefix[:-1] if prefix.endswith(_SEP) else prefix
+    out[key] = np.asarray(tree)
+    return {"__kind__": "leaf", "key": key}, out
+
+
+def _unflatten(spec, leaves):
+    kind = spec["__kind__"]
+    if kind == "leaf":
+        return leaves[spec["key"]]
+    if kind == "dict":
+        return {k: _unflatten(spec["children"][k], leaves)
+                for k in spec["keys"]}
+    children = [_unflatten(c, leaves) for c in spec["children"]]
+    return children if kind == "list" else tuple(children)
+
+
+def _is_writer() -> bool:
+    try:
+        return jax.process_index() == 0
+    except Exception:
+        return True
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3):
+    """Atomic write of ``tree`` at ``step``; prunes to ``keep`` newest."""
+    if not _is_writer():
+        return None
+    os.makedirs(directory, exist_ok=True)
+    spec, leaves = _flatten(tree)
+    # device -> host transfer happens here (np.asarray in _flatten)
+    fname = os.path.join(directory, f"step_{step:010d}.npz")
+    # NOTE: np.savez appends ".npz" when missing — keep the suffix on the
+    # temp name so the atomic rename moves the real payload.
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, __spec__=json.dumps(spec), **leaves)
+        os.replace(tmp, fname)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    with open(os.path.join(directory, "latest.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(directory, "latest.tmp"),
+               os.path.join(directory, "latest"))
+    _prune(directory, keep)
+    return fname
+
+
+def _list_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for f in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)\.npz", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def _prune(directory: str, keep: int):
+    steps = _list_steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        try:
+            os.remove(os.path.join(directory, f"step_{s:010d}.npz"))
+        except OSError:
+            pass
+
+
+def latest_step(directory: str):
+    """Newest complete checkpoint step, or None."""
+    ptr = os.path.join(directory, "latest")
+    steps = _list_steps(directory)
+    if not steps:
+        return None
+    if os.path.exists(ptr):
+        try:
+            with open(ptr) as f:
+                s = int(f.read().strip())
+            if s in steps:
+                return s
+        except (ValueError, OSError):
+            pass
+    return steps[-1]
+
+
+def load_checkpoint(directory: str, step: int | None = None):
+    """-> (step, tree of np arrays) or (None, None) if nothing to restore.
+
+    Leaves come back as host numpy; callers ``jax.device_put`` with their own
+    shardings (this is what makes restore mesh-elastic).
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        return None, None
+    fname = os.path.join(directory, f"step_{step:010d}.npz")
+    with np.load(fname, allow_pickle=False) as z:
+        spec = json.loads(str(z["__spec__"]))
+        leaves = {k: z[k] for k in z.files if k != "__spec__"}
+    return step, _unflatten(spec, leaves)
+
+
+class CheckpointManager:
+    """Rolling save/restore driver used by the runtime loop.
+
+    save_every steps; keep newest ``keep``; ``restore_or_init`` returns
+    (step, tree) resuming from the newest checkpoint else (0, init_fn()).
+    """
+
+    def __init__(self, directory: str, *, save_every: int = 100,
+                 keep: int = 3):
+        self.directory = directory
+        self.save_every = save_every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree):
+        if step % self.save_every == 0 and step > 0:
+            return save_checkpoint(self.directory, step, tree, keep=self.keep)
+        return None
+
+    def save(self, step: int, tree):
+        return save_checkpoint(self.directory, step, tree, keep=self.keep)
+
+    def restore_or_init(self, init_fn):
+        step, tree = load_checkpoint(self.directory)
+        if step is None:
+            return 0, init_fn()
+        return step, tree
+
+    def wipe(self):
+        if os.path.isdir(self.directory):
+            shutil.rmtree(self.directory)

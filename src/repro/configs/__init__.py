@@ -1,0 +1,30 @@
+"""Architecture + experiment registry.
+
+Importing this package registers all 10 assigned architectures:
+
+    from repro.configs import get_arch, all_archs, all_cells
+    arch = get_arch("grok-1-314b")
+"""
+from repro.configs.base import (
+    ArchDef, ShapeDef, register, get_arch, all_archs, all_cells,
+)
+
+# importing the modules registers the archs
+from repro.configs import (          # noqa: F401
+    moonshot_v1_16b_a3b,
+    grok_1_314b,
+    h2o_danube_3_4b,
+    minicpm_2b,
+    qwen1_5_0_5b,
+    graphcast,
+    equiformer_v2,
+    egnn,
+    graphsage_reddit,
+    fm,
+)
+from repro.configs.imm_snap import IMM_EXPERIMENTS, IMM_DRYRUN_CELLS
+
+__all__ = [
+    "ArchDef", "ShapeDef", "register", "get_arch", "all_archs", "all_cells",
+    "IMM_EXPERIMENTS", "IMM_DRYRUN_CELLS",
+]

@@ -1,0 +1,50 @@
+"""Shared scaffolding for the 5 LM-family architecture configs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeDef
+from repro.models.transformer import (
+    LMConfig, init_lm, lm_loss, prefill, decode_step, init_kv_cache,
+)
+
+
+def lm_shapes(*, window: int = 0, arch_note: str = ""):
+    """The assigned LM shape set.  ``long_500k`` runs only for sub-quadratic
+    archs (sliding-window attention -> fixed-size ring KV cache)."""
+    full_attn = window <= 0
+    return {
+        "train_4k": ShapeDef(
+            "train_4k", "train",
+            {"seq_len": 4096, "global_batch": 256}),
+        "prefill_32k": ShapeDef(
+            "prefill_32k", "prefill",
+            {"seq_len": 32768, "global_batch": 32}),
+        "decode_32k": ShapeDef(
+            "decode_32k", "decode",
+            {"seq_len": 32768, "global_batch": 128}),
+        "long_500k": ShapeDef(
+            "long_500k", "decode",
+            {"seq_len": 524288, "global_batch": 1},
+            skip=full_attn,
+            skip_reason=(
+                "pure full-attention arch: 500k decode needs a sub-quadratic"
+                " attention variant, none specified in the source"
+                + (f" ({arch_note})" if arch_note else ""))),
+    }
+
+
+def lm_smoke_step(params, cfg: LMConfig, key):
+    """One forward+backward+decode on tiny shapes; returns checkable dict."""
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((2, 1), -1, tokens.dtype)], axis=1)
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, labels)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    logits, cache = prefill(params, cfg, tokens)
+    dc = init_kv_cache(cfg, 2, max(cfg.window, 32) if cfg.window else 32)
+    nxt, dc = decode_step(params, cfg, dc, tokens[:, :1])
+    return {"loss": loss, "grad_norm": gnorm, "prefill_logits": logits,
+            "next_token": nxt}

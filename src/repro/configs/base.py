@@ -1,0 +1,76 @@
+"""Architecture registry scaffolding.
+
+Each assigned architecture contributes an ``ArchDef``:
+  * ``config``        — the exact published configuration (full scale),
+  * ``smoke_config``  — a reduced same-family configuration for CPU tests,
+  * ``shapes``        — its assigned input-shape cells (name -> ShapeDef),
+  * hooks used by launch/dryrun.py, tests and benchmarks.
+
+The FULL configs are only ever touched via ``jax.eval_shape`` /
+``.lower()`` (ShapeDtypeStruct, no allocation); smoke configs run for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str                  # "train" | "prefill" | "decode" | "serve"
+    dims: dict                 # free-form dims (seq_len, batch, n_nodes, ...)
+    note: str = ""
+    skip: bool = False         # e.g. long_500k on pure full-attention archs
+    skip_reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    family: str                # "lm" | "gnn" | "recsys"
+    source: str                # citation tag from the assignment
+    config: Any
+    smoke_config: Any
+    shapes: dict
+    # smoke hooks (run for real on CPU):
+    #   init_fn(key, cfg) -> params
+    #   smoke_step(params, cfg, key) -> dict of output arrays (checked
+    #       finite + shape by tests)
+    init_fn: Callable = None
+    smoke_step: Callable = None
+    technique_applicable: bool = False   # paper's scatter/partition scheme
+    technique_note: str = ""
+
+    def shape(self, name: str) -> ShapeDef:
+        return self.shapes[name]
+
+
+_REGISTRY: dict[str, ArchDef] = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    _REGISTRY[arch.arch_id] = arch
+    return arch
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> dict[str, ArchDef]:
+    return dict(_REGISTRY)
+
+
+def all_cells(include_skipped: bool = False):
+    """[(arch_id, shape_name)] for every assigned cell (40 total)."""
+    cells = []
+    for aid, arch in sorted(_REGISTRY.items()):
+        for sname, sdef in arch.shapes.items():
+            if sdef.skip and not include_skipped:
+                continue
+            cells.append((aid, sname))
+    return cells

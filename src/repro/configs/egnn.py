@@ -1,0 +1,47 @@
+"""egnn — E(n)-equivariant GNN (Satorras et al. 2021).
+
+[arXiv:2102.09844; paper] — assigned config: n_layers=4 d_hidden=64,
+equivariance=E(n).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, register
+from repro.configs._gnn_common import gnn_shapes
+from repro.models.gnn.egnn import (
+    EGNNConfig, init_egnn, forward_edges, loss_edges,
+)
+
+FULL = EGNNConfig(n_layers=4, d_hidden=64)
+
+SMOKE = EGNNConfig(n_layers=2, d_hidden=16, d_feat=8)
+
+
+def _smoke_step(params, cfg, key):
+    n, e = 16, 48
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    nf = jax.random.normal(k1, (n, cfg.d_feat))
+    pos = jax.random.normal(k2, (n, 3))
+    es = jax.random.randint(k3, (e,), 0, n)
+    ed = jax.random.randint(k4, (e,), 0, n)
+    h, x, energy = forward_edges(params, cfg, nf, pos, es, ed, n)
+    loss, grads = jax.value_and_grad(loss_edges)(
+        params, cfg, nf, pos, es, ed, pos, n)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    return {"h": h, "x": x, "energy": energy, "loss": loss,
+            "grad_norm": gnorm}
+
+
+ARCH = register(ArchDef(
+    arch_id="egnn",
+    family="gnn",
+    source="arXiv:2102.09844",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=gnn_shapes(),
+    init_fn=init_egnn,
+    smoke_step=_smoke_step,
+    technique_applicable=True,
+    technique_note="direct: message passing = gather -> segment reduce",
+))

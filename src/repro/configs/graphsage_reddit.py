@@ -1,0 +1,65 @@
+"""graphsage-reddit — GraphSAGE with mean aggregator, 25-10 fan-out.
+
+[arXiv:1706.02216; paper] — assigned config: n_layers=2 d_hidden=128
+aggregator=mean sample_sizes=25-10.  The ``minibatch_lg`` cell uses the
+native sampled-block form (its own fan-out 15-10 per the shape assignment);
+the full-graph cells use the edge-list form.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, register
+from repro.configs._gnn_common import gnn_shapes
+from repro.models.gnn.graphsage import (
+    SageConfig, init_sage, forward_blocks, forward_edges,
+    loss_blocks, loss_edges,
+)
+
+FULL = SageConfig(
+    n_layers=2, d_hidden=128, d_feat=602, n_classes=41,
+    aggregator="mean", sample_sizes=(25, 10),
+)
+
+SMOKE = SageConfig(
+    n_layers=2, d_hidden=16, d_feat=12, n_classes=5,
+    aggregator="mean", sample_sizes=(3, 2),
+)
+
+
+def _smoke_step(params, cfg, key):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # block mode
+    B, (f1, f2) = 4, cfg.sample_sizes
+    x_seed = jax.random.normal(k1, (B, cfg.d_feat))
+    x_n1 = jax.random.normal(k2, (B, f1, cfg.d_feat))
+    x_n2 = jax.random.normal(k3, (B * f1, f2, cfg.d_feat))
+    labels = jax.random.randint(k4, (B,), 0, cfg.n_classes)
+    logits = forward_blocks(params, cfg, x_seed, x_n1, x_n2)
+    loss, grads = jax.value_and_grad(loss_blocks)(
+        params, cfg, x_seed, x_n1, x_n2, labels)
+    # edge mode
+    n, e = 20, 60
+    nf = jax.random.normal(k5, (n, cfg.d_feat))
+    es = jax.random.randint(k1, (e,), 0, n)
+    ed = jax.random.randint(k2, (e,), 0, n)
+    logits_full = forward_edges(params, cfg, nf, es, ed, n)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    return {"logits": logits, "logits_full": logits_full, "loss": loss,
+            "grad_norm": gnorm}
+
+
+ARCH = register(ArchDef(
+    arch_id="graphsage-reddit",
+    family="gnn",
+    source="arXiv:1706.02216",
+    config=FULL,
+    smoke_config=SMOKE,
+    shapes=gnn_shapes(),
+    init_fn=init_sage,
+    smoke_step=_smoke_step,
+    technique_applicable=True,
+    technique_note=("direct: mean-aggregate = gather -> segment reduce;"
+                    " the neighbor sampler (graphs/sampler.py) feeds the"
+                    " minibatch cells"),
+))

@@ -1,0 +1,63 @@
+"""IMM experiment configs for the paper's 8 SNAP graphs (Table I / III).
+
+Each entry pairs the SNAP graph stats with the paper's hyper-parameters
+(k=50, eps=0.5) and the CPU-scale replica factor the benchmarks use.
+``imm_dryrun_shapes`` defines the sharded-IMM cells the dry-run lowers
+(theta x |V| bitmap selection + IC sampling steps on the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.imm import IMMConfig
+from repro.graphs.datasets import SNAP_STATS
+
+
+@dataclasses.dataclass(frozen=True)
+class IMMExperiment:
+    graph: str
+    n: int
+    m: int
+    directed: bool
+    cfg_ic: IMMConfig
+    cfg_lt: IMMConfig
+    bench_scale: float        # CPU benchmark shrink factor
+
+
+def _mk(graph: str, bench_scale: float) -> IMMExperiment:
+    n, m, directed = SNAP_STATS[graph]
+    return IMMExperiment(
+        graph=graph, n=n, m=m, directed=directed,
+        cfg_ic=IMMConfig(k=50, eps=0.5, model="IC"),
+        cfg_lt=IMMConfig(k=50, eps=0.5, model="LT"),
+        bench_scale=bench_scale,
+    )
+
+
+IMM_EXPERIMENTS = {
+    "com-Amazon":  _mk("com-Amazon", 0.01),
+    "com-YouTube": _mk("com-YouTube", 0.004),
+    "com-DBLP":    _mk("com-DBLP", 0.01),
+    "com-LJ":      _mk("com-LJ", 0.001),
+    "soc-Pokec":   _mk("soc-Pokec", 0.002),
+    "as-Skitter":  _mk("as-Skitter", 0.002),
+    "web-Google":  _mk("web-Google", 0.004),
+    "Twitter7":    _mk("Twitter7", 0.0001),
+}
+
+
+# Sharded-IMM dry-run cells: (theta, n) selection problems at production
+# scale.  theta per the paper's regimes (IC ~1e4, LT ~1e8 is capped by the
+# bitmap-memory budget — the adaptive representation handles LT's sparse
+# sets; the dry-run lowers the dense path, which dominates compute).
+IMM_DRYRUN_CELLS = {
+    "imm_select_youtube_ic": {
+        "n": 1_134_890, "theta": 16_384, "k": 50, "model": "IC",
+        "note": "dense bitmap selection, com-YouTube scale"},
+    "imm_select_lj_ic": {
+        "n": 3_997_962, "theta": 8_192, "k": 50, "model": "IC",
+        "note": "dense bitmap selection, com-LJ scale"},
+    "imm_sample_google_ic": {
+        "n": 875_713, "m": 5_105_039, "batch": 4_096, "bfs_steps": 16,
+        "model": "IC", "note": "sparse frontier sampling, web-Google scale"},
+}

@@ -1,0 +1,33 @@
+"""IMM (Influence Maximization via Martingales) — EfficientIMM edition.
+
+The paper's primary contribution, as a composable JAX module:
+  * martingale.py  — Tang'15 sampling bounds (theta estimation, OPT LB)
+  * sampler.py     — batched RRR-set generation (IC dense/sparse, LT walk)
+                     with fused in-place counter accumulation (paper C3)
+  * selection.py   — greedy max-coverage: EfficientIMM RRR-partitioned
+                     rebuild (C1+C5) and Ripples-style decremental baseline
+  * adaptive.py    — bitmap vs index-list representation choice (C4)
+  * imm.py         — Algorithm-1 driver + mesh-sharded selection/sampling
+"""
+from repro.core.martingale import IMMBounds, compute_bounds, theta_from_lb
+from repro.core.sampler import (
+    sample_ic_dense,
+    sample_ic_sparse,
+    sample_lt,
+)
+from repro.core.selection import (
+    greedy_select,
+    select_dense,
+    select_sparse,
+    select_dense_sharded,
+)
+from repro.core.adaptive import choose_representation, bitmap_to_indices, indices_to_bitmap
+from repro.core.imm import imm, IMMResult, IMMConfig
+
+__all__ = [
+    "IMMBounds", "compute_bounds", "theta_from_lb",
+    "sample_ic_dense", "sample_ic_sparse", "sample_lt",
+    "greedy_select", "select_dense", "select_sparse", "select_dense_sharded",
+    "choose_representation", "bitmap_to_indices", "indices_to_bitmap",
+    "imm", "IMMResult", "IMMConfig",
+]

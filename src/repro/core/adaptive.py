@@ -1,0 +1,55 @@
+"""Adaptive RRRset representation (paper C4).
+
+Bitmaps cost n bits per set and give O(1) membership + MXU mat-vec counters;
+index lists cost 32·L bits and give O(L) scatter counters.  The paper switches
+per-set; under SPMD we switch per-*batch* (shape stability), using the same
+byte/compute trade-off: prefer bitmaps once the average set covers more than
+``1/switch_ratio`` of the graph (default 1/32 — the int32-vs-bit storage
+break-even), or when the padded index length would exceed the bitmap width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def choose_representation(avg_coverage: float, n: int, l_max: int,
+                          switch_ratio: int = 32) -> str:
+    """Returns "bitmap" or "indices" (paper's dynamic threshold)."""
+    if l_max * switch_ratio >= n:
+        return "bitmap"
+    return "bitmap" if avg_coverage > 1.0 / switch_ratio else "indices"
+
+
+def bitmap_to_indices(R, l_max: int):
+    """(theta, n) uint8 -> (theta, l_max) int32 index lists, sentinel n.
+
+    Sets longer than l_max are truncated — callers size l_max from the
+    observed max set size (the paper sizes its adaptive threshold the same
+    way).  Indices are emitted in ascending order (sorted sets, as Ripples
+    keeps them).
+    """
+    theta, n = R.shape
+
+    def row(r):
+        # top_k over (flag, -index) picks set members first, ascending ids
+        score = r.astype(jnp.int32) * n - jnp.arange(n, dtype=jnp.int32)
+        vals, idx = jax.lax.top_k(score, l_max)
+        return jnp.where(vals > 0, idx, n).astype(jnp.int32)
+
+    out = jax.vmap(row)(R)
+    return jnp.sort(out, axis=1)
+
+
+def indices_to_bitmap(R_idx, n: int):
+    """(theta, L) int32 (sentinel >= n) -> (theta, n) uint8."""
+    theta, L = R_idx.shape
+    R = jnp.zeros((theta, n), jnp.uint8)
+    ones = jnp.ones(R_idx.shape, jnp.uint8)
+    return R.at[jnp.arange(theta)[:, None], R_idx].max(ones, mode="drop")
+
+
+def set_sizes(R_or_idx, representation: str, n: int):
+    if representation == "bitmap":
+        return R_or_idx.sum(axis=1, dtype=jnp.int32)
+    return (R_or_idx < n).sum(axis=1, dtype=jnp.int32)

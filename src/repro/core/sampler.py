@@ -1,0 +1,161 @@
+"""Batched RRR-set samplers (Generate_RRRsets, paper Alg. 3).
+
+All samplers return the batch as **visited bitmaps** ``(B, n) uint8`` plus the
+fused in-place counter contribution (paper C3: counting is folded into
+generation, no re-gather pass).  The adaptive layer converts to index lists
+when sets are sparse (paper C4).
+
+Three implementations:
+  * ``sample_ic_dense``  — probabilistic reverse BFS as a *log-semiring
+    mat-vec* on the dense IC matrix: P(u activated by frontier F) =
+    1 - prod_{v in F} (1 - p_{u->v-reversed}); exact in distribution for
+    reachability (see DESIGN §2).  TPU-native: the expansion runs on the MXU
+    (Pallas kernel: kernels/ic_frontier.py).
+  * ``sample_ic_sparse`` — per-edge Bernoulli coins + segment_max frontier
+    expansion over the CSC edge list; exact live-edge semantics, scales to
+    graphs where the dense matrix does not fit.
+  * ``sample_lt``        — the LT random walk: each step picks at most one
+    in-neighbor with probability proportional to its LT weight (stops with
+    prob 1 - sum w), terminating on revisits. Binary search over the
+    per-dst cumulative weights (CSC layout).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import Graph, dense_ic_matrix
+
+_LOGQ_CLAMP = -30.0  # exp(-30) ~ 1e-13: treat p=1 edges as prob 1-1e-13
+
+
+def make_logq(graph: Graph) -> jnp.ndarray:
+    """Dense (n, n) log(1-p) matrix in *reverse-traversal* orientation:
+    logq[v, u] = log(1 - p_{u->v}) so that ``frontier @ logq`` accumulates
+    over frontier nodes v the log-survival of u w.r.t. its out-edges into v.
+    """
+    P = dense_ic_matrix(graph)  # P[u, v] = p(u -> v)
+    return jnp.maximum(jnp.log1p(-P.T), _LOGQ_CLAMP)
+
+
+@partial(jax.jit, static_argnames=("batch", "max_steps"))
+def sample_ic_dense(key, logq, *, batch: int, max_steps: int = 0):
+    """Returns (visited (B,n) uint8, counter (n,) int32, roots (B,))."""
+    n = logq.shape[0]
+    max_steps = max_steps or n
+    kroot, kstep = jax.random.split(key)
+    roots = jax.random.randint(kroot, (batch,), 0, n)
+    visited0 = jax.nn.one_hot(roots, n, dtype=jnp.bool_)
+    frontier0 = visited0
+
+    def cond(state):
+        step, frontier, visited, _ = state
+        return jnp.logical_and(step < max_steps, frontier.any())
+
+    def body(state):
+        step, frontier, visited, k = state
+        k, sub = jax.random.split(k)
+        acc = frontier.astype(jnp.float32) @ logq          # (B, n) log-survival
+        p_act = -jnp.expm1(acc)                            # 1 - exp(acc)
+        coin = jax.random.uniform(sub, p_act.shape)
+        new = jnp.logical_and(coin < p_act, ~visited)
+        return step + 1, new, jnp.logical_or(visited, new), k
+
+    _, _, visited, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), frontier0, visited0, kstep)
+    )
+    counter = visited.sum(axis=0, dtype=jnp.int32)          # fused count (C3)
+    return visited.astype(jnp.uint8), counter, roots
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps"))
+def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
+                     batch: int, max_steps: int = 0):
+    """Edge-list frontier expansion with per-edge coins.
+
+    edge_* are CSC-ordered (sorted by dst) but any order works.
+    Returns (visited, counter, roots).
+    """
+    m = edge_src.shape[0]
+    max_steps = max_steps or n_nodes
+    kroot, kstep = jax.random.split(key)
+    roots = jax.random.randint(kroot, (batch,), 0, n_nodes)
+    visited0 = jax.nn.one_hot(roots, n_nodes, dtype=jnp.bool_)
+
+    def cond(state):
+        step, frontier, visited, _ = state
+        return jnp.logical_and(step < max_steps, frontier.any())
+
+    def body(state):
+        step, frontier, visited, k = state
+        k, sub = jax.random.split(k)
+        coin = jax.random.uniform(sub, (batch, m)) < edge_prob[None, :]
+        # reverse traversal: edge u->v is usable when v is in the frontier
+        live = frontier[:, edge_dst] & coin & ~visited[:, edge_src]
+        # scatter-or into src — the segment_max counter-update pattern (C1)
+        new = jnp.zeros_like(visited).at[:, edge_src].max(live)
+        new = jnp.logical_and(new, ~visited)
+        return step + 1, new, jnp.logical_or(visited, new), k
+
+    _, _, visited, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), visited0, visited0, kstep)
+    )
+    counter = visited.sum(axis=0, dtype=jnp.int32)
+    return visited.astype(jnp.uint8), counter, roots
+
+
+@partial(jax.jit, static_argnames=("batch", "max_steps", "max_indeg_log2"))
+def sample_lt(key, dst_offsets, in_src, in_lt_cum, in_lt_total, *,
+              batch: int, max_steps: int = 0, max_indeg_log2: int = 32):
+    """LT-model RRR walk. Returns (visited (B,n) uint8, counter, roots)."""
+    n = dst_offsets.shape[0] - 1
+    max_steps = max_steps or n
+    kroot, kstep = jax.random.split(key)
+    roots = jax.random.randint(kroot, (batch,), 0, n)
+    visited0 = jax.nn.one_hot(roots, n, dtype=jnp.bool_)
+
+    def pick_in_neighbor(cur, r):
+        """Binary search within CSC segment of ``cur`` for lt_cum >= r."""
+        lo = dst_offsets[cur]
+        hi = dst_offsets[cur + 1]
+
+        def step_fn(_, lohi):
+            lo_, hi_ = lohi
+            mid = (lo_ + hi_) // 2
+            val = in_lt_cum[jnp.clip(mid, 0, in_lt_cum.shape[0] - 1)]
+            go_right = val < r
+            return (jnp.where(go_right, mid + 1, lo_),
+                    jnp.where(go_right, hi_, mid))
+
+        lo_f, _ = jax.lax.fori_loop(0, max_indeg_log2, step_fn, (lo, hi))
+        idx = jnp.clip(lo_f, 0, in_src.shape[0] - 1)
+        return in_src[idx]
+
+    def cond(state):
+        step, cur, active, visited, _ = state
+        return jnp.logical_and(step < max_steps, active.any())
+
+    def body(state):
+        step, cur, active, visited, k = state
+        k, sub = jax.random.split(k)
+        r = jax.random.uniform(sub, (batch,))
+        total = in_lt_total[cur]
+        go = jnp.logical_and(active, r < total)
+        nxt = jax.vmap(pick_in_neighbor)(cur, r)
+        revisit = jnp.take_along_axis(visited, nxt[:, None], axis=1)[:, 0]
+        go = jnp.logical_and(go, ~revisit)
+        visited = jnp.logical_or(
+            visited, jax.nn.one_hot(nxt, visited.shape[1], dtype=jnp.bool_)
+            & go[:, None]
+        )
+        cur = jnp.where(go, nxt, cur)
+        return step + 1, cur, go, visited, k
+
+    _, _, _, visited, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), roots, jnp.ones((batch,), jnp.bool_),
+                     visited0, kstep)
+    )
+    counter = visited.sum(axis=0, dtype=jnp.int32)
+    return visited.astype(jnp.uint8), counter, roots

@@ -1,0 +1,254 @@
+"""Find_Most_Influential_Set (paper Alg. 2) — greedy max-coverage.
+
+Two strategies, both over bitmap ``R (theta, n) uint8`` or index-list
+``R_idx (theta, L) int32`` representations:
+
+  * ``method="rebuild"``   — EfficientIMM (paper C5 "adaptive counter
+    update"): every round recomputes the counter from the *surviving* sets:
+    ``counter = alive @ R`` — on TPU a masked mat-vec that runs on the MXU
+    (Pallas kernel: kernels/coverage_matvec.py / fused_select.py).
+  * ``method="decrement"`` — Ripples-faithful baseline: keep a running
+    counter and subtract the contribution of the sets covered by the newly
+    selected seed.
+
+The two are algebraically identical (property-tested); their cost profiles
+differ exactly as the paper describes — with skewed graphs most sets contain
+the first seeds, so the decremental update touches far more rows.
+
+``select_dense_sharded`` is the multi-device version: the theta axis is
+sharded across the mesh (paper C1 RRRset partitioning), each device reduces a
+partial counter, and a ``psum`` plays the role of the atomic global counter.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sparse.scatter import bincount_weighted
+
+
+# ---------------------------------------------------------------- dense ----
+
+@partial(jax.jit, static_argnames=("k", "method"))
+def select_dense(R, valid, k: int, method: str = "rebuild"):
+    """R: (theta, n) uint8 bitmaps; valid: (theta,) bool (generated sets).
+
+    Returns (seeds (k,) int32, covered_frac () f32, gains (k,) int32).
+    """
+    theta, n = R.shape
+    Rf = R.astype(jnp.float32)
+    alive0 = valid
+
+    def rebuild_round(alive):
+        counter = alive.astype(jnp.float32) @ Rf            # (n,)
+        v = jnp.argmax(counter).astype(jnp.int32)
+        covered = (R[:, v] > 0) & alive
+        gain = covered.sum(dtype=jnp.int32)
+        return v, gain, alive & ~covered, counter
+
+    if method == "rebuild":
+        def body(i, state):
+            alive, seeds, gains = state
+            v, gain, alive, _ = rebuild_round(alive)
+            return alive, seeds.at[i].set(v), gains.at[i].set(gain)
+
+        alive, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (alive0, jnp.zeros((k,), jnp.int32), jnp.zeros((k,), jnp.int32)),
+        )
+    elif method == "decrement":
+        counter0 = alive0.astype(jnp.float32) @ Rf
+
+        def body(i, state):
+            alive, counter, seeds, gains = state
+            v = jnp.argmax(counter).astype(jnp.int32)
+            covered = (R[:, v] > 0) & alive
+            gain = covered.sum(dtype=jnp.int32)
+            counter = counter - covered.astype(jnp.float32) @ Rf
+            return (alive & ~covered, counter,
+                    seeds.at[i].set(v), gains.at[i].set(gain))
+
+        alive, _, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (alive0, counter0, jnp.zeros((k,), jnp.int32),
+             jnp.zeros((k,), jnp.int32)),
+        )
+    else:
+        raise ValueError(f"unknown method {method}")
+
+    n_valid = jnp.maximum(valid.sum(dtype=jnp.float32), 1.0)
+    covered_frac = gains.sum(dtype=jnp.float32) / n_valid
+    return seeds, covered_frac, gains
+
+
+# --------------------------------------------------------------- sparse ----
+
+@partial(jax.jit, static_argnames=("n", "k", "method"))
+def select_sparse(R_idx, valid, n: int, k: int, method: str = "rebuild"):
+    """R_idx: (theta, L) int32 with sentinel ``n`` padding."""
+    theta, L = R_idx.shape
+
+    def counter_of(alive):
+        return bincount_weighted(R_idx, alive.astype(jnp.float32)[:, None], n)
+
+    def contains(v):
+        return (R_idx == v).any(axis=1)
+
+    if method == "rebuild":
+        def body(i, state):
+            alive, seeds, gains = state
+            counter = counter_of(alive)
+            v = jnp.argmax(counter).astype(jnp.int32)
+            covered = contains(v) & alive
+            gain = covered.sum(dtype=jnp.int32)
+            return alive & ~covered, seeds.at[i].set(v), gains.at[i].set(gain)
+
+        alive, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (valid, jnp.zeros((k,), jnp.int32), jnp.zeros((k,), jnp.int32)),
+        )
+    elif method == "decrement":
+        counter0 = counter_of(valid)
+
+        def body(i, state):
+            alive, counter, seeds, gains = state
+            v = jnp.argmax(counter).astype(jnp.int32)
+            covered = contains(v) & alive
+            gain = covered.sum(dtype=jnp.int32)
+            counter = counter - bincount_weighted(
+                R_idx, covered.astype(jnp.float32)[:, None], n)
+            return (alive & ~covered, counter,
+                    seeds.at[i].set(v), gains.at[i].set(gain))
+
+        alive, _, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (valid, counter0, jnp.zeros((k,), jnp.int32),
+             jnp.zeros((k,), jnp.int32)),
+        )
+    else:
+        raise ValueError(f"unknown method {method}")
+
+    n_valid = jnp.maximum(valid.sum(dtype=jnp.float32), 1.0)
+    return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
+
+
+# -------------------------------------------------------------- sharded ----
+
+def select_dense_sharded(mesh, R, valid, k: int, *,
+                         theta_axes=("data",), vertex_axis=None):
+    """EfficientIMM selection with the theta axis sharded over ``theta_axes``
+    (paper C1) and, optionally, the vertex axis over ``vertex_axis``.
+
+    Inside shard_map each device owns a (theta_local, n[_local]) block,
+    reduces its partial counter, and the cross-device ``psum`` replaces the
+    paper's atomic adds.  The greedy argmax is computed redundantly on every
+    device (cheap, avoids a broadcast).
+    """
+    axes = tuple(theta_axes)
+
+    def local_select(R_local, valid_local):
+        Rf = R_local.astype(jnp.float32)
+
+        def body(i, state):
+            alive, seeds, gains = state
+            partial_counter = alive.astype(jnp.float32) @ Rf
+            counter = jax.lax.psum(partial_counter, axes)       # global counter
+            if vertex_axis is not None:
+                # vertex-sharded counter: argmax over local block, then a
+                # global argmax over (value, global index) pairs.
+                nloc = counter.shape[0]
+                vloc = jnp.argmax(counter)
+                val = counter[vloc]
+                shard = jax.lax.axis_index(vertex_axis)
+                gidx = shard * nloc + vloc
+                vals = jax.lax.all_gather(val, vertex_axis)
+                gidxs = jax.lax.all_gather(gidx, vertex_axis)
+                v = gidxs[jnp.argmax(vals)].astype(jnp.int32)
+                member = (R_local[:, jnp.clip(v - shard * nloc, 0, nloc - 1)] > 0)
+                member = jnp.where(
+                    (v >= shard * nloc) & (v < (shard + 1) * nloc), member, False)
+                member = jax.lax.psum(
+                    member.astype(jnp.int32), vertex_axis) > 0
+            else:
+                v = jnp.argmax(counter).astype(jnp.int32)
+                member = R_local[:, v] > 0
+            covered = member & alive
+            gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+            return alive & ~covered, seeds.at[i].set(v), gains.at[i].set(gain)
+
+        alive, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (valid_local, jnp.zeros((k,), jnp.int32),
+             jnp.zeros((k,), jnp.int32)),
+        )
+        n_valid = jnp.maximum(
+            jax.lax.psum(valid_local.sum(dtype=jnp.float32), axes), 1.0)
+        return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
+
+    in_specs = (P(axes, vertex_axis), P(axes))
+    out_specs = (P(), P(), P())
+    fn = jax.shard_map(
+        local_select, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+    return fn(R, valid)
+
+
+def greedy_select(R_or_idx, valid, k: int, *, n: int | None = None,
+                  representation: str = "bitmap", method: str = "rebuild"):
+    """Unified entry point used by the IMM driver."""
+    if representation == "bitmap":
+        return select_dense(R_or_idx, valid, k, method)
+    if representation == "indices":
+        assert n is not None
+        return select_sparse(R_or_idx, valid, n, k, method)
+    raise ValueError(representation)
+
+
+# ------------------------------------------- Ripples-faithful baseline ----
+
+@partial(jax.jit, static_argnames=("n", "k"))
+def select_vertex_partitioned(R_idx, valid, n: int, k: int):
+    """The Ripples work pattern the paper profiles (§III Challenge 1):
+    vertices are partitioned across workers and every worker BINARY-SEARCHES
+    every (sorted) RRRset for its vertices — O(n * theta * log L) loads per
+    counter build vs EfficientIMM's O(theta * L) scatter.  Used as the
+    memory-traffic baseline in benchmarks/table4_memory.py.
+
+    R_idx: (theta, L) ascending index lists, sentinel ``n`` padding.
+    """
+    theta, L = R_idx.shape
+
+    def contains_v(v):
+        pos = jnp.clip(
+            jax.vmap(lambda row: jnp.searchsorted(row, v))(R_idx), 0, L - 1)
+        return jnp.take_along_axis(R_idx, pos[:, None], 1)[:, 0] == v
+
+    def counter_of(alive):
+        return jax.vmap(
+            lambda v: jnp.sum(contains_v(v) & alive, dtype=jnp.float32)
+        )(jnp.arange(n))
+
+    counter0 = counter_of(valid)
+
+    def body(i, state):
+        alive, counter, seeds, gains = state
+        v = jnp.argmax(counter).astype(jnp.int32)
+        covered = contains_v(v) & alive
+        gain = covered.sum(dtype=jnp.int32)
+        # decremental update: re-search every covered set per vertex
+        dec = jax.vmap(
+            lambda u: jnp.sum(contains_v(u) & covered, dtype=jnp.float32)
+        )(jnp.arange(n))
+        return (alive & ~covered, counter - dec,
+                seeds.at[i].set(v), gains.at[i].set(gain))
+
+    alive, counter, seeds, gains = jax.lax.fori_loop(
+        0, k, body,
+        (valid, counter0, jnp.zeros((k,), jnp.int32),
+         jnp.zeros((k,), jnp.int32)))
+    n_valid = jnp.maximum(valid.sum(dtype=jnp.float32), 1.0)
+    return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains

@@ -1,0 +1,12 @@
+from repro.data.tokens import synthetic_token_batches, TokenPipeline
+from repro.data.clicks import synthetic_click_batches
+from repro.data.graph_feats import synthetic_node_features
+from repro.data.prefetch import Prefetcher
+
+__all__ = [
+    "synthetic_token_batches",
+    "TokenPipeline",
+    "synthetic_click_batches",
+    "synthetic_node_features",
+    "Prefetcher",
+]

@@ -1,0 +1,19 @@
+from repro.graphs.csr import Graph, build_graph
+from repro.graphs.generators import rmat_graph, erdos_graph, star_graph, path_graph
+from repro.graphs.datasets import SNAP_STATS, synthetic_snap, scaled_snap
+from repro.graphs.partition import partition_edges_by_dst
+from repro.graphs.sampler import neighbor_sampler
+
+__all__ = [
+    "Graph",
+    "build_graph",
+    "rmat_graph",
+    "erdos_graph",
+    "star_graph",
+    "path_graph",
+    "SNAP_STATS",
+    "synthetic_snap",
+    "scaled_snap",
+    "partition_edges_by_dst",
+    "neighbor_sampler",
+]

@@ -1,0 +1,131 @@
+"""Fixed-shape graph container for JAX.
+
+The graph is stored as an edge list sorted two ways (by src = CSR order, by
+dst = CSC order) plus offset arrays, all as dense jnp arrays so every kernel
+is shape-stable under jit.  IMM's reverse BFS traverses *in*-edges (CSC view),
+GNN message passing traverses src→dst (CSR/edge view).
+
+Edge weights:
+  * IC model: ``prob[e]`` — independent activation probability of edge e.
+  * LT model: ``lt_weight[e]`` — incoming weight; per-dst weights sum to <= 1.
+    ``lt_cum[e]`` is the within-dst-segment cumulative weight so a single
+    uniform draw r selects an in-neighbor by searchsorted (or "none" when
+    r > total weight), which is exactly the LT RRR random walk of Tang'15.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    n: int
+    m: int
+    # CSR (sorted by src): out-edges
+    src_offsets: jnp.ndarray  # (n+1,) int32
+    out_dst: jnp.ndarray      # (m,) int32 — dst of each out-edge
+    # CSC (sorted by dst): in-edges
+    dst_offsets: jnp.ndarray  # (n+1,) int32
+    in_src: jnp.ndarray       # (m,) int32 — src of each in-edge
+    in_prob: jnp.ndarray      # (m,) float32 — IC prob, CSC order
+    in_lt_cum: jnp.ndarray    # (m,) float32 — LT cumulative weight, CSC order
+    in_lt_total: jnp.ndarray  # (n,) float32 — per-node total LT weight
+    # edge view (CSC order) for message passing / vectorized IC steps
+    edge_src: jnp.ndarray     # (m,) int32 (== in_src)
+    edge_dst: jnp.ndarray     # (m,) int32
+
+    def in_degree(self):
+        return self.dst_offsets[1:] - self.dst_offsets[:-1]
+
+    def out_degree(self):
+        return self.src_offsets[1:] - self.src_offsets[:-1]
+
+    def max_in_degree(self) -> int:
+        return int(np.max(np.asarray(self.in_degree()))) if self.m else 0
+
+
+def _offsets_from_sorted(keys: np.ndarray, n: int) -> np.ndarray:
+    counts = np.bincount(keys, minlength=n)
+    return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+
+def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
+                weighted_ic: str = "uniform") -> Graph:
+    """Build a Graph from numpy edge arrays.
+
+    ic_prob: explicit per-edge IC probabilities (aligned with (src,dst)), or
+    None → generated: "uniform" U(0,1) per the paper's setup, or "wc" (weighted
+    cascade, 1/in_degree).  LT weights are normalized per-dst so they sum to
+    <= 1 (paper: "probabilities of either activating a neighbor or activating
+    none sum to one").
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    m = src.shape[0]
+    rng = np.random.default_rng(seed)
+
+    if ic_prob is None:
+        if weighted_ic == "wc":
+            indeg = np.bincount(dst, minlength=n).astype(np.float64)
+            ic_prob = 1.0 / np.maximum(indeg[dst], 1.0)
+        else:
+            ic_prob = rng.uniform(0.0, 1.0, size=m)
+    ic_prob = np.asarray(ic_prob, dtype=np.float32)
+
+    # CSR order
+    order_src = np.argsort(src, kind="stable")
+    src_offsets = _offsets_from_sorted(src[order_src], n)
+    out_dst = dst[order_src]
+
+    # CSC order
+    order_dst = np.argsort(dst, kind="stable")
+    dst_sorted = dst[order_dst]
+    dst_offsets = _offsets_from_sorted(dst_sorted, n)
+    in_src = src[order_dst]
+    in_prob = ic_prob[order_dst]
+
+    # LT weights: raw U(0,1) normalized per dst by (indeg draw totals ~<=1).
+    raw = rng.uniform(0.0, 1.0, size=m).astype(np.float64)
+    indeg = (dst_offsets[1:] - dst_offsets[:-1]).astype(np.int64)
+    # per-dst sum of raw
+    seg_sum = np.zeros(n, dtype=np.float64)
+    np.add.at(seg_sum, dst_sorted, raw)
+    # scale so the per-node total weight is total0 = U(0,1) * (indeg>0)
+    total0 = rng.uniform(0.3, 1.0, size=n)
+    total0 = np.where(indeg > 0, total0, 0.0)
+    scale = np.where(seg_sum > 0, total0 / np.maximum(seg_sum, 1e-30), 0.0)
+    w = raw * scale[dst_sorted]
+    # within-segment cumulative sums
+    cum = np.cumsum(w)
+    seg_start_cum = np.concatenate([[0.0], cum])[dst_offsets[:-1]]
+    lt_cum = cum - seg_start_cum[dst_sorted] if m else np.zeros(0)
+    lt_total = np.zeros(n, dtype=np.float64)
+    np.add.at(lt_total, dst_sorted, w)
+
+    return Graph(
+        n=n,
+        m=m,
+        src_offsets=jnp.asarray(src_offsets),
+        out_dst=jnp.asarray(out_dst),
+        dst_offsets=jnp.asarray(dst_offsets),
+        in_src=jnp.asarray(in_src),
+        in_prob=jnp.asarray(in_prob),
+        in_lt_cum=jnp.asarray(lt_cum, dtype=jnp.float32),
+        in_lt_total=jnp.asarray(lt_total, dtype=jnp.float32),
+        edge_src=jnp.asarray(in_src),
+        edge_dst=jnp.asarray(dst_sorted),
+    )
+
+
+def dense_ic_matrix(g: Graph) -> jnp.ndarray:
+    """Dense (n, n) matrix P with P[u, v] = IC prob of edge u->v.
+
+    Used by the dense (bitmap) sampling branch; only valid for small n.
+    """
+    P = np.zeros((g.n, g.n), dtype=np.float32)
+    P[np.asarray(g.in_src), np.asarray(g.edge_dst)] = np.asarray(g.in_prob)
+    return jnp.asarray(P)

@@ -1,0 +1,36 @@
+"""Uniform fan-out neighbor sampler (GraphSAGE minibatch training).
+
+Pure-JAX, shape-stable: for each seed node, samples ``fanout`` in-neighbors
+uniformly with replacement from the CSC adjacency (standard GraphSAGE
+estimator).  Zero-degree nodes sample the sentinel ``n`` (masked downstream).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def neighbor_sampler(key, dst_offsets, in_src, seeds, fanout: int):
+    """seeds: (B,) int32 → (B, fanout) sampled neighbor ids (sentinel n for
+    isolated nodes)."""
+    n = dst_offsets.shape[0] - 1
+    start = dst_offsets[seeds]
+    deg = dst_offsets[seeds + 1] - start
+    u = jax.random.uniform(key, (seeds.shape[0], fanout))
+    pick = start[:, None] + jnp.floor(u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    nbrs = in_src[jnp.clip(pick, 0, in_src.shape[0] - 1)]
+    return jnp.where(deg[:, None] > 0, nbrs, n)
+
+
+def sample_blocks(key, dst_offsets, in_src, seeds, fanouts):
+    """Multi-hop sampling: returns list of (frontier, nbrs) per hop, where
+    hop i samples fanouts[i] neighbors for every node in the previous
+    frontier. frontier_0 = seeds."""
+    blocks = []
+    frontier = seeds
+    for i, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nbrs = neighbor_sampler(sub, dst_offsets, in_src, frontier, f)
+        blocks.append((frontier, nbrs))
+        frontier = nbrs.reshape(-1)
+    return blocks

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+<name>.py          pl.pallas_call + BlockSpec implementation (TPU target)
+ref.py             pure-jnp oracles (CPU + dry-run execution path)
+ops.py             jit'd dispatch wrappers (backend auto-detect)
+
+Validated in interpret mode against ref.py (tests/test_kernels.py).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    coverage_matvec,
+    fused_select,
+    ic_frontier_step,
+    fm_interaction,
+    flash_attention,
+)
+
+__all__ = [
+    "ops", "ref", "coverage_matvec", "fused_select", "ic_frontier_step",
+    "fm_interaction", "flash_attention",
+]

@@ -1,0 +1,19 @@
+"""Tile-multiple padding helpers shared by the kernel wrappers.
+
+Pallas pads out-of-bounds blocks with undefined values (NaN in interpret
+mode), so every wrapper pads its operands explicitly with neutral elements
+and slices the result back.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_to(x, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: EfficientIMM counter rebuild ``counter = alive @ R``.
+
+The RRRset bitmap block streams HBM->VMEM tile by tile and the masked
+mat-vec runs on the MXU; the theta axis is the minor grid dimension so the
+output tile accumulates in place across theta tiles (revisited output block —
+the canonical TPU accumulation pattern).
+
+Block shapes: alive (1, Tt), R (Tt, Tn), out (1, Tn) — all 2D and
+128-aligned on the lane axis for MXU/VPU friendliness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import _pad
+
+
+DEFAULT_TILE_THETA = 256
+DEFAULT_TILE_N = 512
+
+
+def _kernel(alive_ref, r_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = alive_ref[...].astype(jnp.float32)          # (1, Tt)
+    r = r_ref[...].astype(jnp.float32)              # (Tt, Tn)
+    out_ref[...] += jnp.dot(a, r, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_theta", "tile_n", "interpret"))
+def coverage_matvec(alive, R, *, tile_theta: int = DEFAULT_TILE_THETA,
+                    tile_n: int = DEFAULT_TILE_N, interpret: bool = False):
+    """alive: (theta,) f32/bool; R: (theta, n) uint8 -> (n,) f32 counter."""
+    theta, n = R.shape
+    tt = min(tile_theta, theta)
+    tn = min(tile_n, n)
+    alive2 = _pad.pad_to(alive.astype(jnp.float32), 0, tt)[None, :]
+    Rp = _pad.pad_to(_pad.pad_to(R, 0, tt), 1, tn)
+    grid = (pl.cdiv(n, tn), pl.cdiv(theta, tt))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tt), lambda i, j: (0, j)),
+            pl.BlockSpec((tt, tn), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Rp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(alive2, Rp)
+    return out[0, :n]

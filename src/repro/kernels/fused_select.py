@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused counter rebuild + arg-max (paper C3 applied to
+Find_Most_Influential_Set).
+
+One greedy round = mat-vec + global arg-max.  Unfused, the (n,) counter
+round-trips HBM between the two; fused, each counter tile lives only in a
+VMEM scratch accumulator and is reduced to a per-tile (max, argmax) pair the
+moment its theta accumulation completes.  The tiny (n/Tn,) pair vector is
+reduced in jnp by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _pad
+
+
+def _kernel(alive_ref, r_ref, max_ref, idx_ref, acc_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = alive_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a, r, preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _reduce():
+        c = acc_ref[0, :]                            # (Tn,)
+        local = jnp.argmax(c)
+        tn = c.shape[0]
+        max_ref[0, 0] = c[local]
+        idx_ref[0, 0] = (i * tn + local).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_theta", "tile_n", "interpret"))
+def fused_select(alive, R, *, tile_theta: int = 256, tile_n: int = 512,
+                 interpret: bool = False):
+    """-> (max_count () f32, argmax () int32) over counter = alive @ R."""
+    theta, n = R.shape
+    tt = min(tile_theta, theta)
+    tn = min(tile_n, n)
+    alive2 = _pad.pad_to(alive.astype(jnp.float32), 0, tt)[None, :]
+    Rp = _pad.pad_to(_pad.pad_to(R, 0, tt), 1, tn)
+    ni, nj = pl.cdiv(n, tn), pl.cdiv(theta, tt)
+    maxs, idxs = pl.pallas_call(
+        _kernel,
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((1, tt), lambda i, j: (0, j)),
+            pl.BlockSpec((tt, tn), lambda i, j: (j, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, ni), jnp.float32),
+            jax.ShapeDtypeStruct((1, ni), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, tn), jnp.float32)],
+        interpret=interpret,
+    )(alive2, Rp)
+    # padded columns carry counter 0; mask them so argmax stays in-range
+    masked = jnp.where(idxs[0] < n, maxs[0], -jnp.inf)
+    best_tile = jnp.argmax(masked)
+    return maxs[0, best_tile], idxs[0, best_tile]

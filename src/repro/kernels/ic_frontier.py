@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: one IC probabilistic-BFS frontier expansion step.
+
+The beyond-paper MXU formulation (DESIGN §2): the probability that vertex u
+is activated by the current frontier is 1 - prod_{v in F}(1 - p), so one BFS
+step is ``new = (rand < 1 - exp(frontier @ logq)) & ~visited`` — a matmul in
+the log-semiring fused with Bernoulli sampling and the visited-bitmap mask
+(the paper's hottest data structure, Alg. 3 line 8).
+
+Grid: (B/Tb, n/Tn, n/Tk) with the contraction axis minor; the logits
+accumulate in VMEM scratch and the sampling epilogue fires on the last k
+tile, so the (B, n) logit matrix never materializes in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _pad
+
+
+def _kernel(front_ref, logq_ref, rand_ref, visited_ref, out_ref, acc_ref):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    f = front_ref[...].astype(jnp.float32)          # (Tb, Tk)
+    q = logq_ref[...]                               # (Tk, Tn)
+    acc_ref[...] += jnp.dot(f, q, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _sample():
+        p_act = -jnp.expm1(acc_ref[...])            # 1 - exp(acc)
+        new = (rand_ref[...] < p_act) & (visited_ref[...] == 0)
+        out_ref[...] = new.astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_b", "tile_n", "tile_k", "interpret"))
+def ic_frontier_step(frontier, visited, logq, rand, *, tile_b: int = 128,
+                     tile_n: int = 512, tile_k: int = 512,
+                     interpret: bool = False):
+    """frontier/visited: (B, n) uint8/bool; logq: (n, n) f32; rand: (B, n).
+
+    Returns new activations (B, n) uint8.
+    """
+    B, n = frontier.shape
+    tb, tn, tk = min(tile_b, B), min(tile_n, n), min(tile_k, n)
+    # neutral-element padding: frontier 0 (no contribution), visited 1
+    # (suppresses activation in padded columns), rand 1 (coin never fires)
+    fp = _pad.pad_to(_pad.pad_to(frontier.astype(jnp.uint8), 0, tb), 1, tk)
+    lp = _pad.pad_to(_pad.pad_to(logq, 0, tk), 1, tn)
+    rp = _pad.pad_to(_pad.pad_to(rand, 0, tb, 1.0), 1, tn, 1.0)
+    vp = _pad.pad_to(_pad.pad_to(visited.astype(jnp.uint8), 0, tb, 1), 1, tn, 1)
+    grid = (pl.cdiv(B, tb), pl.cdiv(n, tn), pl.cdiv(n, tk))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tk), lambda b, i, k: (b, k)),
+            pl.BlockSpec((tk, tn), lambda b, i, k: (k, i)),
+            pl.BlockSpec((tb, tn), lambda b, i, k: (b, i)),
+            pl.BlockSpec((tb, tn), lambda b, i, k: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda b, i, k: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((fp.shape[0], rp.shape[1]), jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((tb, tn), jnp.float32)],
+        interpret=interpret,
+    )(fp, lp, rp, vp)
+    return out[:B, :n]

@@ -1,0 +1,53 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, ref.py oracle elsewhere.
+
+``use_pallas=None`` auto-detects the backend.  ``interpret=True`` forces the
+Pallas path through the interpreter (CPU validation — what the tests use).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.coverage_matvec import coverage_matvec as _coverage_pallas
+from repro.kernels.fused_select import fused_select as _select_pallas
+from repro.kernels.ic_frontier import ic_frontier_step as _frontier_pallas
+from repro.kernels.fm_interaction import fm_interaction as _fm_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def coverage_matvec(alive, R, *, use_pallas=None, interpret=False, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _coverage_pallas(alive, R, interpret=interpret, **kw)
+    return ref.coverage_matvec_ref(alive, R)
+
+
+def fused_select(alive, R, *, use_pallas=None, interpret=False, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _select_pallas(alive, R, interpret=interpret, **kw)
+    return ref.fused_select_ref(alive, R)
+
+
+def ic_frontier_step(frontier, visited, logq, rand, *, use_pallas=None,
+                     interpret=False, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _frontier_pallas(frontier, visited, logq, rand,
+                                interpret=interpret, **kw)
+    return ref.ic_frontier_ref(frontier, visited, logq, rand).astype("uint8")
+
+
+def fm_interaction(v, *, use_pallas=None, interpret=False, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _fm_pallas(v, interpret=interpret, **kw)
+    return ref.fm_interaction_ref(v)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, use_pallas=None,
+                    interpret=False, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=interpret, **kw)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the CPU/dry-run execution path).
+
+Each function is the semantic ground truth that the corresponding kernel in
+this package must match (tests/test_kernels.py sweeps shapes/dtypes in
+interpret mode against these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coverage_matvec_ref(alive, R):
+    """alive: (theta,) f32/bool, R: (theta, n) uint8 -> counter (n,) f32.
+
+    The EfficientIMM counter rebuild (paper C5): counter[v] = #survivor sets
+    containing v.
+    """
+    return alive.astype(jnp.float32) @ R.astype(jnp.float32)
+
+
+def fused_select_ref(alive, R):
+    """-> (max_count () f32, argmax () int32): one greedy round's reduction."""
+    counter = coverage_matvec_ref(alive, R)
+    return jnp.max(counter), jnp.argmax(counter).astype(jnp.int32)
+
+
+def ic_frontier_ref(frontier, visited, logq, rand):
+    """One probabilistic-BFS step in the log-semiring formulation.
+
+    frontier/visited: (B, n) bool; logq: (n, n) f32 (log(1-p), reverse
+    orientation); rand: (B, n) uniform draws.
+    Returns new activations (B, n) bool.
+    """
+    acc = frontier.astype(jnp.float32) @ logq
+    p_act = -jnp.expm1(acc)
+    return jnp.logical_and(rand < p_act, ~visited)
+
+
+def fm_interaction_ref(v):
+    """FM 2-way interaction via the O(nk) sum-square trick (Rendle ICDM'10).
+
+    v: (B, F, K) field embeddings (already multiplied by feature values).
+    Returns (B,) f32: sum_k 0.5 * ((sum_f v)^2 - sum_f v^2).
+    """
+    s = v.sum(axis=1)
+    s2 = (v * v).sum(axis=1)
+    return (0.5 * (s * s - s2)).sum(axis=-1)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """Grouped-query attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    window > 0 adds sliding-window masking (attend to keys in
+    (pos - window, pos]).  Query positions are right-aligned to the keys
+    (q position i corresponds to absolute position Skv - Sq + i), which
+    covers both prefill (Sq == Skv) and decode (Sq == 1).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + (Skv - Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window and window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

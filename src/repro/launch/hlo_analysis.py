@@ -1,0 +1,353 @@
+"""Trip-count-aware analysis of optimized HLO.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — for
+scan-over-layers programs that under-counts flops/bytes by ~n_layers and,
+worse, misses per-layer collectives entirely.  This analyzer re-walks the
+scheduled HLO text multiplying loop bodies by their ``known_trip_count``:
+
+  * flops          — dot ops (2 x out_elems x contracted_elems), including
+                     dots inside fusion computations
+  * bytes          — operand + output bytes at fusion/op boundaries (the
+                     HBM-traffic model for a TPU-like memory hierarchy:
+                     fusions stream internally, boundaries hit HBM)
+  * collectives    — per-kind counts + wire-byte model (ring conventions:
+                     all-reduce 2x, others 1x), trip-multiplied
+
+Loops with data-dependent conditions have no known_trip_count; they count
+once and are reported in ``unknown_trip_loops`` (the dry-run cells are built
+with fixed trip counts so this stays 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# ops whose boundary IO we do NOT count as memory traffic (views/control)
+_VIEW_OPS = {
+    "get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+}
+# ops where we count output bytes only (no real operand reads)
+_OUT_ONLY_OPS = {"broadcast", "iota", "rng", "rng-bit-generator"}
+
+
+def _type_dims(type_str: str):
+    """All arrays in a type string -> [(dtype, [dims])]."""
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((dt, dims))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _type_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_type: str
+    operands: list
+    line: str
+
+    @property
+    def op_name(self) -> str:
+        m = re.search(r'op_name="([^"]*)"', self.line)
+        return m.group(1) if m else ""
+
+
+def _parse_op_line(line: str):
+    s = line.strip()
+    m = re.match(r"(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$", s)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # type: parenthesized tuple or single token
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        out_type = rest[: i + 1]
+        rest2 = rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        out_type = rest[:sp]
+        rest2 = rest[sp + 1:].strip()
+    m2 = re.match(r"([a-z0-9\-]+)\(", rest2)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    # operand names: %refs inside the top-level call parens
+    depth = 0
+    start = rest2.find("(")
+    operands = []
+    for i in range(start, len(rest2)):
+        ch = rest2[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    call_str = rest2[start: i + 1]
+    operands = re.findall(r"%([\w.\-]+)", call_str)
+    return Op(name, opcode, out_type, operands, s)
+
+
+def parse_module(hlo_text: str):
+    """-> (computations: dict name -> [Op], types: dict name -> type str,
+    entry_name)."""
+    computations = {}
+    types = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        if raw.startswith("ENTRY ") or (raw.startswith("%")
+                                        and raw.rstrip().endswith("{")):
+            m = re.match(r"(ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->", raw)
+            if m:
+                cur = m.group(2)
+                computations[cur] = []
+                if m.group(1):
+                    entry = cur
+                # parameter types from the signature
+                sig = m.group(3)
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^()]*\))|"
+                                      r"(?:\w+\[[0-9,]*\](?:\{[^}]*\})?))",
+                                      sig):
+                    types[pm.group(1)] = pm.group(2)
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None or not raw.strip().startswith(("%", "ROOT")):
+            continue
+        op = _parse_op_line(raw)
+        if op is None:
+            continue
+        computations[cur].append(op)
+        types[op.name] = op.out_type
+    return computations, types, entry
+
+
+def _dot_flops(op: Op, types: dict) -> float:
+    out_elems = 1
+    arrs = _type_dims(op.out_type)
+    if arrs:
+        for d in arrs[0][1]:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs_type = types.get(op.operands[0], "") if op.operands else ""
+    lhs_arrs = _type_dims(lhs_type)
+    contracted = 1
+    if m and m.group(1) and lhs_arrs:
+        dims = lhs_arrs[0][1]
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contracted *= dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def _called_comps(op: Op, line: str):
+    """Computation names referenced via calls=/to_apply=/body=/condition=
+    or branch_computations."""
+    out = {}
+    for key in ("calls", "to_apply", "body", "condition"):
+        m = re.search(key + r"=%([\w.\-]+)", line)
+        if m:
+            out[key] = m.group(1)
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        out["branches"] = re.findall(r"%([\w.\-]+)", m.group(1))
+    return out
+
+
+def _trip_count(line: str):
+    m = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*([0-9]+)', line)
+    return int(m.group(1)) if m else None
+
+
+@dataclasses.dataclass
+class HLOCounts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    unknown_trip_loops: int = 0
+    # attribution (metadata op_name substring -> accumulated cost)
+    bytes_by_tag: dict = dataclasses.field(default_factory=dict)
+    wire_by_tag: dict = dataclasses.field(default_factory=dict)
+    top_collectives: list = dataclasses.field(default_factory=list)
+    tag_patterns: tuple = ()
+
+    def _tag(self, op_name: str) -> str:
+        for p in self.tag_patterns:
+            if p in op_name:
+                return p
+        return "other"
+
+    def add_bytes(self, op: Op, nbytes: float):
+        self.bytes += nbytes
+        t = self._tag(op.op_name)
+        self.bytes_by_tag[t] = self.bytes_by_tag.get(t, 0.0) + nbytes
+
+    def add_wire(self, op: Op, kind: str, wire: float, total: float):
+        self.collective_wire_bytes += wire
+        t = self._tag(op.op_name)
+        self.wire_by_tag[t] = self.wire_by_tag.get(t, 0.0) + wire
+        self.top_collectives.append(
+            (wire, kind, op.op_name[-120:] if op.op_name else op.name))
+        if len(self.top_collectives) > 200:
+            self.top_collectives.sort(reverse=True)
+            del self.top_collectives[30:]
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d["top_collectives"] = sorted(
+            self.top_collectives, reverse=True)[:15]
+        d.pop("tag_patterns", None)
+        return d
+
+
+def _op_io_bytes(op: Op, types: dict) -> float:
+    total = _type_bytes(op.out_type)
+    if op.opcode in _OUT_ONLY_OPS:
+        return float(total)
+    for o in op.operands:
+        t = types.get(o)
+        if t:
+            total += _type_bytes(t)
+    return float(total)
+
+
+def _flops_only(comp_name, computations, types, mult, acc: HLOCounts,
+                default_trip):
+    for op in computations.get(comp_name, ()):  # dots inside fusions etc.
+        if op.opcode == "dot":
+            acc.flops += mult * _dot_flops(op, types)
+        refs = _called_comps(op, op.line)
+        for key, val in refs.items():
+            if key == "branches":
+                for b in val:
+                    _flops_only(b, computations, types, mult, acc,
+                                default_trip)
+            else:
+                sub_mult = mult
+                if op.opcode == "while" and key == "body":
+                    tc = _trip_count(op.line)
+                    sub_mult = mult * (tc if tc else default_trip)
+                _flops_only(val, computations, types, sub_mult, acc,
+                            default_trip)
+
+
+def _walk(comp_name, computations, types, mult, acc: HLOCounts,
+          default_trip, seen_fusion_flops):
+    for op in computations.get(comp_name, ()):
+        base = op.opcode
+        if base.endswith("-start"):
+            base = base[:-6]
+        if base in _COLLECTIVES:
+            nbytes = _type_bytes(op.out_type)
+            acc.collective_counts[base] += int(mult)
+            acc.collective_bytes[base] += mult * nbytes
+            acc.add_wire(op, base,
+                         mult * nbytes * (2.0 if base == "all-reduce"
+                                          else 1.0),
+                         mult * nbytes)
+            acc.add_bytes(op, mult * _op_io_bytes(op, types))
+            continue
+        if op.opcode.endswith("-done") or op.opcode.endswith("-update"):
+            continue
+        if op.opcode == "while":
+            tc = _trip_count(op.line)
+            if tc is None:
+                acc.unknown_trip_loops += 1
+                tc = default_trip
+            refs = _called_comps(op, op.line)
+            if "body" in refs:
+                _walk(refs["body"], computations, types, mult * tc, acc,
+                      default_trip, seen_fusion_flops)
+            if "condition" in refs:
+                _walk(refs["condition"], computations, types, mult * tc,
+                      acc, default_trip, seen_fusion_flops)
+            continue
+        if op.opcode in ("call", "async-start"):
+            refs = _called_comps(op, op.line)
+            for key in ("to_apply", "calls"):
+                if key in refs:
+                    _walk(refs[key], computations, types, mult, acc,
+                          default_trip, seen_fusion_flops)
+            continue
+        if op.opcode == "conditional":
+            refs = _called_comps(op, op.line)
+            for b in refs.get("branches", []):
+                _walk(b, computations, types, mult, acc, default_trip,
+                      seen_fusion_flops)
+            acc.add_bytes(op, mult * _op_io_bytes(op, types))
+            continue
+        if op.opcode == "fusion":
+            acc.add_bytes(op, mult * _op_io_bytes(op, types))
+            refs = _called_comps(op, op.line)
+            if "calls" in refs:
+                _flops_only(refs["calls"], computations, types, mult, acc,
+                            default_trip)
+            continue
+        if op.opcode == "dot":
+            acc.flops += mult * _dot_flops(op, types)
+            acc.add_bytes(op, mult * _op_io_bytes(op, types))
+            continue
+        if op.opcode in _VIEW_OPS:
+            continue
+        acc.add_bytes(op, mult * _op_io_bytes(op, types))
+
+
+DEFAULT_TAGS = (
+    "blockwise_attention", "attention_ref", "flash", "apply_rope",
+    "_moe_ffn", "_dense_ffn", "lm_head", "embed", "logsumexp",
+    "adamw", "clip", "segment_sum", "scatter", "take", "top_k", "cumsum",
+)
+
+ATTENTION_TAGS = ("blockwise_attention", "attention_ref", "flash")
+
+
+def analyze_module(hlo_text: str, default_trip: int = 1,
+                   tag_patterns: tuple = DEFAULT_TAGS) -> HLOCounts:
+    computations, types, entry = parse_module(hlo_text)
+    acc = HLOCounts(tag_patterns=tuple(tag_patterns))
+    if entry is None:
+        return acc
+    _walk(entry, computations, types, 1.0, acc, default_trip, set())
+    return acc

@@ -1,0 +1,126 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS §Roofline):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = wire_bytes_per_device / ICI_link_bw
+
+``cost_analysis`` of the compiled executable is already per-device (the
+SPMD-partitioned program), so dividing by per-chip peaks is equivalent to
+the global form HLO_FLOPs / (chips x peak).
+
+collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum wire bytes of every collective op with ring-algorithm conventions:
+  all-reduce X bytes      -> 2X on the wire per device (reduce-scatter +
+                             all-gather phases, (G-1)/G ~ 1)
+  all-gather out X        -> X   (each device receives X(G-1)/G)
+  reduce-scatter in X     -> X
+  all-to-all X            -> X
+  collective-permute X    -> X
+``-start`` async forms are counted; ``-done`` forms are skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import TPU_V5E
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all arrays in an HLO type string like
+    'f32[128,1024]{1,0}' or '(f32[8], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    wire_bytes: float
+
+    def as_dict(self):
+        return {"counts": self.counts, "bytes_by_kind": self.bytes_by_kind,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVE_KINDS}
+    bytes_by_kind = {k: 0 for k in _COLLECTIVE_KINDS}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = TYPE kind(" — the op kind follows the '=' and type
+        m = re.search(r"=\s+(\S.*?)\s+([a-z0-9-]+)\(", s)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        base = op
+        if base.endswith("-start"):
+            base = base[:-6]
+        elif base.endswith("-done") or base.endswith("-update"):
+            continue
+        if base not in _COLLECTIVE_KINDS:
+            continue
+        nbytes = _shape_bytes(type_str)
+        counts[base] += 1
+        bytes_by_kind[base] += nbytes
+        if base == "all-reduce":
+            wire += 2.0 * nbytes
+        else:
+            wire += float(nbytes)
+    return CollectiveStats(counts, bytes_by_kind, wire)
+
+
+def roofline_terms(flops: float, bytes_acc: float, wire_bytes: float,
+                   model_flops_global: float, n_devices: int,
+                   hw: dict = TPU_V5E, extra: dict | None = None) -> dict:
+    """All inputs are PER-DEVICE (the compiled module is the per-device
+    program); model_flops_global is the whole-step analytic count."""
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = bytes_acc / hw["hbm_bytes_per_s"]
+    t_collective = wire_bytes / hw["ici_bytes_per_s"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    hlo_flops_global = flops * n_devices
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "wire_bytes_per_device": wire_bytes,
+        "model_flops_global": model_flops_global,
+        "useful_flops_ratio": (model_flops_global / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "roofline_fraction": (
+            (model_flops_global / n_devices / hw["peak_flops_bf16"])
+            / terms[dominant] if terms[dominant] > 0 else 0.0),
+        **(extra or {}),
+    }

@@ -1,0 +1,172 @@
+"""Per-architecture sharding policies for the production mesh.
+
+Axis roles (DESIGN §3):
+  ("pod","data") — batch / RRRset-theta / edge-parallel axes
+  "model"        — tensor/expert/vocab/vertex-counter axis
+
+LM policies (chosen per arch; see EXPERIMENTS §Dry-run for the resulting
+memory/collective profile):
+  * "tp"        — Megatron tensor parallel on heads/ffn/vocab; params
+                  replicated over data (small archs: qwen, danube).
+  * "row"       — row-parallel attention (head-count agnostic: minicpm's 36
+                  heads don't divide 16) + TP ffn; FSDP-style vocab shard.
+  * "moe_ep"    — experts over "model" (E % 16 == 0: moonshot 64e) + FSDP
+                  storage shard of the expert d axis over "data".
+  * "moe_tpe"   — TP inside experts over "model" (grok 8e) + FSDP storage
+                  shard over "data"; XLA re-gathers the stored shard
+                  per layer inside the scan (ZeRO-3 pattern).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+LM_POLICY = {
+    "qwen1.5-0.5b": "tp",
+    "h2o-danube-3-4b": "tp",
+    "minicpm-2b": "row",
+    "moonshot-v1-16b-a3b": "moe_ep",
+    "grok-1-314b": "moe_tpe",
+}
+
+# grad-accumulation microbatches for train_4k (bounds MoE dispatch buffers
+# and activation residency — DESIGN §4); "auto" -> one dp-row of sequences
+# per microbatch (B/dp_size), the per-device-minimal setting grok needs
+LM_TRAIN_MICROBATCHES = {
+    "grok-1-314b": "auto",
+    "moonshot-v1-16b-a3b": 8,
+    "minicpm-2b": 1,
+    "h2o-danube-3-4b": 1,
+    "qwen1.5-0.5b": 1,
+}
+
+# chunked prefill for MoE archs (bounds per-chunk dispatch size)
+LM_PREFILL_CHUNK = {
+    "grok-1-314b": 2048,     # 4096 leaves single-pod ~240 MB over HBM
+    "moonshot-v1-16b-a3b": 4096,
+}
+
+
+def _lm_layer_spec(name: str, ndim: int, policy: str, dp: tuple):
+    """PartitionSpec for a stacked (L, ...) layer param by name."""
+    m = "model"
+    d = dp[-1] if dp else None          # "data" (storage/FSDP axis)
+    if name in ("ln1", "ln2"):
+        return P(None, None)
+    if policy in ("tp", "row"):
+        row = policy == "row"
+        table = {
+            "wq": P(None, "model", None) if row else P(None, None, m),
+            "wk": P(None, "model", None) if row else P(None, None, m),
+            "wv": P(None, "model", None) if row else P(None, None, m),
+            "wo": P(None, None, "model") if row else P(None, m, None),
+            "bq": P(None, None) if row else P(None, m),
+            "bk": P(None, None) if row else P(None, m),
+            "bv": P(None, None) if row else P(None, m),
+            "w_gate_up": P(None, None, m),
+            "w_down": P(None, m, None),
+            "router": P(None, None, None),
+        }
+        return table[name]
+    if policy == "moe_ep":
+        table = {
+            "wq": P(None, None, m),
+            "wk": P(None, None, m),
+            "wv": P(None, None, m),
+            "wo": P(None, m, None),
+            "bq": P(None, m), "bk": P(None, m), "bv": P(None, m),
+            "router": P(None, None, None),
+            # (L, E, d, 2ff): experts over model, d over data (storage)
+            "w_gate_up": P(None, m, d, None),
+            # (L, E, ff, d): experts over model, ff over data (storage)
+            "w_down": P(None, m, d, None),
+        }
+        return table[name]
+    if policy == "moe_tpe":
+        table = {
+            # grok: q heads 48/16 ok; kv heads 8 stay unsharded
+            "wq": P(None, d, m),
+            "wk": P(None, d, None),
+            "wv": P(None, d, None),
+            "wo": P(None, m, d),
+            "bq": P(None, m), "bk": P(None, None), "bv": P(None, None),
+            "router": P(None, None, None),
+            # (L, E, d, 2ff): TP on ff over model, storage shard d over data
+            "w_gate_up": P(None, None, d, m),
+            # (L, E, ff, d): TP on ff (row-parallel) over model, d over data
+            "w_down": P(None, None, m, d),
+        }
+        return table[name]
+    raise ValueError(policy)
+
+
+def lm_param_specs(params_shape, policy: str, mesh):
+    """Pytree of PartitionSpec matching an init_lm param tree."""
+    dp = dp_axes(mesh)
+    m = "model"
+
+    def spec_of(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if keys[0] == "embed":
+            # vocab padded to a 16-multiple by launch/steps.py (Megatron-
+            # style) so odd vocabs (minicpm 122753) still row-shard
+            return P(m, None)
+        if keys[0] == "lm_head":
+            return P(None, m)
+        if keys[0] == "ln_f":
+            return P(None)
+        if keys[0] == "layers":
+            return _lm_layer_spec(keys[1], leaf.ndim, policy, dp)
+        raise KeyError(keys)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def gnn_param_specs(params_shape, mesh):
+    """GNN weights are small: replicated (baseline; EXPERIMENTS §Perf
+    evaluates feature-dim sharding as a hillclimb)."""
+    return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), params_shape)
+
+
+def fm_param_specs(params_shape, mesh):
+    """Row-shard the embedding tables over "model" (paper C2 analogue)."""
+    def spec_of(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if keys[0] in ("v",):
+            return P("model", None)
+        if keys[0] in ("w",):
+            return P("model")
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def opt_state_specs(param_specs):
+    """AdamW moments shard exactly like their parameters."""
+    return {
+        "mu": jax.tree.map(lambda s: s, param_specs),
+        "nu": jax.tree.map(lambda s: s, param_specs),
+        "step": P(),
+    }
+
+
+def kv_cache_spec(n_kv_heads: int, mesh, *, batch: int):
+    """(L, B, Hkv, S, hd): batch over dp when it divides; heads over model
+    when divisible, else the sequence axis."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_axis = dp if batch % dp_size == 0 and batch >= dp_size else None
+    if n_kv_heads % mesh.shape["model"] == 0:
+        return P(None, b_axis, "model", None, None)
+    return P(None, b_axis, None, "model", None)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

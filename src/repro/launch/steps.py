@@ -1,0 +1,698 @@
+"""Per-cell step builders: (arch x shape x mesh) -> lowered-compatible fn +
+ShapeDtypeStruct inputs + shardings.
+
+This is the distribution heart of the framework: every assigned cell (40
+total) plus the IMM production cells map here onto the fixed production mesh
+(launch/mesh.py).  Policies live in launch/shardings.py; model math stays in
+repro.models / repro.core.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs._gnn_common import minibatch_subgraph_dims
+from repro.launch import shardings as sh
+from repro.launch.mesh import dp_axes
+from repro.models.transformer import (
+    LMConfig, init_lm, lm_loss, prefill, prefill_chunked, decode_step,
+)
+from repro.models.gnn import graphcast as m_graphcast
+from repro.models.gnn import equiformer as m_equiformer
+from repro.models.gnn import egnn as m_egnn
+from repro.models.gnn import graphsage as m_sage
+from repro.models.recsys import fm as m_fm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm
+from repro.sparse.embedding_bag import sharded_embedding_lookup
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step_fn: Callable
+    input_specs: tuple               # positional ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any               # None -> let GSPMD choose
+    model_flops: float               # analytic "useful" flops (global)
+    note: str = ""
+    # ideal HBM traffic of a fused (Pallas flash) attention, GLOBAL bytes:
+    # the jnp blockwise path materializes score tensors at fusion
+    # boundaries that the TPU kernel keeps in VMEM; §Roofline reports the
+    # memory term both raw and kernel-adjusted using this value.
+    attention_ideal_bytes: float = 0.0
+
+
+def _lm_attention_ideal_bytes(cfg: LMConfig, kind: str, batch: int,
+                              q_len: int, kv_len: int) -> float:
+    """Q/K/V/O HBM traffic of a fused attention kernel, all layers, bytes.
+
+    fwd: read Q,K,V + write O; bwd: read Q,K,V,O,dO + write dQ,dK,dV;
+    remat adds one extra fwd. bf16 elements.
+    """
+    hd = cfg.head_dim
+    qo = batch * q_len * cfg.n_heads * hd
+    kv = batch * kv_len * cfg.n_kv_heads * hd
+    fwd = 2.0 * (qo * 2 + kv * 2)
+    if kind == "train":
+        bwd = 2.0 * (qo * 3 + kv * 4)
+        per_layer = 2 * fwd + bwd          # fwd + remat-fwd + bwd
+    else:
+        per_layer = fwd
+    return cfg.n_layers * per_layer
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp(mesh):
+    return dp_axes(mesh)
+
+
+# =========================================================== LM family ====
+
+def _lm_state_specs(cfg: LMConfig, mesh, opt_cfg: AdamWConfig):
+    policy = sh.LM_POLICY[cfg.name] if cfg.name in sh.LM_POLICY else "tp"
+    p_shapes = jax.eval_shape(partial(init_lm, cfg=cfg), jax.random.PRNGKey(0))
+    o_shapes = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), p_shapes)
+    p_specs = sh.lm_param_specs(p_shapes, policy, mesh)
+    o_specs = {
+        "mu": p_specs, "nu": p_specs, "step": P(),
+    }
+    return ({"params": p_shapes, "opt": o_shapes},
+            {"params": p_specs, "opt": o_specs})
+
+
+def _lm_model_flops(cfg: LMConfig, kind: str, tokens: int) -> float:
+    n_active = cfg.active_param_count()
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def make_lm_train_step(cfg: LMConfig, opt_cfg: AdamWConfig,
+                       microbatches: int):
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(lm_loss)(
+                params, cfg, batch["tokens"], batch["labels"])
+        else:
+            B = batch["tokens"].shape[0]
+            mb = B // microbatches
+            toks = batch["tokens"].reshape(microbatches, mb, -1)
+            labs = batch["labels"].reshape(microbatches, mb, -1)
+
+            def mb_body(carry, tl):
+                g_acc, l_acc = carry
+                loss_i, grads_i = jax.value_and_grad(lm_loss)(
+                    params, cfg, tl[0], tl[1])
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, grads_i)
+                return (g_acc, l_acc + loss_i), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            (g_acc, l_sum), _ = jax.lax.scan(
+                mb_body, (g0, jnp.float32(0.0)), (toks, labs))
+            grads = jax.tree.map(lambda g: g / microbatches, g_acc)
+            loss = l_sum / microbatches
+            # pin the optimizer phase AFTER the microbatch loop: without
+            # this XLA hoists the loop-invariant f32 upcasts of params and
+            # moments above the scan, threading f32 weight copies through
+            # the carry (+9 GB/device at grok scale — EXPERIMENTS §Perf)
+            grads, params, opt = jax.lax.optimization_barrier(
+                (grads, params, opt))
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = adamw_update(params, grads, opt, opt_cfg)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "grad_norm": gnorm})
+
+    return train_step
+
+
+def _build_lm_cell(arch, shape, mesh) -> Cell:
+    cfg: LMConfig = arch.config
+    dims = shape.dims
+    dp = _dp(mesh)
+    B, S = dims["global_batch"], dims["seq_len"]
+    policy = sh.LM_POLICY[cfg.name]
+    big = cfg.name in ("grok-1-314b", "moonshot-v1-16b-a3b")
+    opt_cfg = AdamWConfig(moment_dtype="bfloat16" if big else "float32")
+
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    # Megatron-style vocab padding so embed/lm_head always shard evenly
+    cfg = dataclasses.replace(
+        cfg, vocab=_pad_up(cfg.vocab, mesh.shape["model"]))
+    if cfg.n_experts:
+        from repro.models import moe_sharded
+        moe_sharded.MESH = mesh
+        cfg = dataclasses.replace(
+            cfg, moe_shard_axes=tuple(dp),
+            moe_partition="ep" if policy == "moe_ep" else "tpe",
+            # train: explicit all-to-all MoE pipeline + seq-parallel
+            # activations (remat stacks otherwise pick up whatever
+            # sharding GSPMD propagates)
+            moe_impl="shard_map" if shape.kind == "train" else "dense",
+            act_batch_axes=tuple(dp) if shape.kind == "train" else (),
+            act_seq_axis="model" if shape.kind == "train" else "")
+    else:
+        # dense archs: sequence-parallel activation constraints
+        if shape.kind in ("train", "prefill"):
+            cfg = dataclasses.replace(
+                cfg, act_batch_axes=tuple(dp), act_seq_axis="model")
+
+    if shape.kind == "train":
+        mbs = sh.LM_TRAIN_MICROBATCHES[cfg.name]
+        if mbs == "auto":
+            mbs = max(B // dp_size, 1)
+        state_shapes, state_specs = _lm_state_specs(cfg, mesh, opt_cfg)
+        batch_shapes = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        # dense archs: sequence parallelism (activations sharded over
+        # "model" on the seq axis — keeps attention scores and remat
+        # carries per-device-small); MoE archs keep seq unsharded and
+        # bound buffers via microbatching + capacity sharding instead.
+        seq_axis = None if cfg.n_experts else "model"
+        batch_specs = {"tokens": P(dp, seq_axis),
+                       "labels": P(dp, seq_axis)}
+        step = make_lm_train_step(cfg, opt_cfg, mbs)
+        metrics_specs = {"loss": P(), "grad_norm": P()}
+        return Cell(
+            arch.arch_id, shape.name, "train", step,
+            (state_shapes, batch_shapes),
+            _named(mesh, (state_specs, batch_specs)),
+            _named(mesh, (state_specs, metrics_specs)),
+            _lm_model_flops(cfg, "train", B * S),
+            note=f"policy={policy} microbatches={mbs}",
+            attention_ideal_bytes=_lm_attention_ideal_bytes(
+                cfg, "train", B, S, S))
+
+    p_shapes = jax.eval_shape(partial(init_lm, cfg=cfg), jax.random.PRNGKey(0))
+    p_specs = sh.lm_param_specs(p_shapes, policy, mesh)
+
+    if shape.kind == "prefill":
+        chunk = sh.LM_PREFILL_CHUNK.get(cfg.name)
+        if chunk:
+            def step(params, tokens):
+                return prefill_chunked(params, cfg, tokens, chunk=chunk)
+            tok_spec = P(dp, None)     # chunked: seq sliced dynamically
+        else:
+            def step(params, tokens):
+                return prefill(params, cfg, tokens)
+            tok_spec = P(dp, "model")  # dense: sequence parallelism
+        cache_spec = sh.kv_cache_spec(cfg.n_kv_heads, mesh, batch=B)
+        out_specs = (P(dp, None),
+                     {"k": cache_spec, "v": cache_spec, "len": P()})
+        return Cell(
+            arch.arch_id, shape.name, "prefill", step,
+            (p_shapes, _sds((B, S), jnp.int32)),
+            _named(mesh, (p_specs, tok_spec)),
+            _named(mesh, out_specs),
+            _lm_model_flops(cfg, "prefill", B * S),
+            note=f"policy={policy}"
+                 + (f" chunked_prefill={chunk}" if chunk else " seq-parallel"),
+            attention_ideal_bytes=_lm_attention_ideal_bytes(
+                cfg, "prefill", B, S, S))
+
+    # decode: cache length = window for SWA archs (ring buffer), else context
+    cache_len = cfg.window if cfg.window > 0 else S
+    cache_spec = sh.kv_cache_spec(cfg.n_kv_heads, mesh, batch=B)
+    cache_shapes = {
+        "k": _sds((cfg.n_layers, B, cfg.n_kv_heads, cache_len,
+                   cfg.head_dim), jnp.bfloat16),
+        "v": _sds((cfg.n_layers, B, cfg.n_kv_heads, cache_len,
+                   cfg.head_dim), jnp.bfloat16),
+        "len": _sds((), jnp.int32),
+    }
+    cache_specs = {"k": cache_spec, "v": cache_spec, "len": P()}
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = P(dp if B % dp_size == 0 and B >= dp_size else None, None)
+
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return Cell(
+        arch.arch_id, shape.name, "decode", step,
+        (p_shapes, cache_shapes, _sds((B, 1), jnp.int32)),
+        _named(mesh, (p_specs, cache_specs, tok_spec)),
+        _named(mesh, (tok_spec, cache_specs)),
+        _lm_model_flops(cfg, "decode", B)
+        + 2.0 * B * cfg.n_layers * 2 * cfg.n_kv_heads * cache_len
+        * cfg.head_dim,                                 # cache attention
+        note=f"policy={policy} cache_len={cache_len}",
+        attention_ideal_bytes=_lm_attention_ideal_bytes(
+            cfg, "decode", B, 1, cache_len))
+
+
+# ========================================================== GNN family ====
+
+# edge chunk length for the chunked-equiformer path (global)
+_EQUI_EDGE_CHUNK = 524_288
+
+
+def _gnn_edge_spec(mesh):
+    """Edges sharded over every mesh axis (flat edge parallelism)."""
+    return P(tuple(mesh.axis_names))
+
+
+def _gnn_cell_config(arch, shape, mesh):
+    """Specialize the arch config to the cell's feature width + mesh."""
+    dims = shape.dims
+    d_feat = dims.get("d_feat", 227)
+    dp = tuple(dp_axes(mesh))
+    all_axes = tuple(mesh.axis_names)
+    big = dims.get("n_edges", 0) > 1_000_000
+    if arch.arch_id == "graphcast":
+        return dataclasses.replace(
+            arch.config, n_vars=d_feat,
+            dtype="bfloat16" if big else "float32",
+            remat_group=4 if big else 1,
+            node_axes=dp, edge_axes=all_axes)
+    if arch.arch_id == "equiformer-v2":
+        return dataclasses.replace(
+            arch.config, d_feat=d_feat,
+            dtype="bfloat16" if big else "float32",
+            node_axes=dp, channel_axis="model" if big else "")
+    if arch.arch_id == "egnn":
+        return dataclasses.replace(arch.config, d_feat=d_feat)
+    if arch.arch_id == "graphsage-reddit":
+        return dataclasses.replace(
+            arch.config, d_feat=d_feat,
+            n_classes=dims.get("n_classes", arch.config.n_classes))
+    raise KeyError(arch.arch_id)
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _gnn_graph_dims(shape, mesh):
+    """(n_nodes, n_edges) of the per-step graph, padded to mesh multiples
+    (jit in_shardings require divisible dims; pad nodes/edges carry the
+    sentinel id and drop out of every segment reduction)."""
+    dims = shape.dims
+    if shape.name == "minibatch_lg":
+        n, e = minibatch_subgraph_dims(dims["batch_nodes"], dims["fanout"])
+    elif shape.name == "molecule":
+        n, e = dims["n_nodes"] * dims["batch"], dims["n_edges"] * dims["batch"]
+    else:
+        n, e = dims["n_nodes"], dims["n_edges"]
+    dp_size = 1
+    for a in dp_axes(mesh):
+        dp_size *= mesh.shape[a]
+    total = dp_size * mesh.shape["model"]
+    return _pad_up(n, dp_size), _pad_up(e, total)
+
+
+def _gnn_loss_fn(arch_id, cfg):
+    if arch_id == "graphcast":
+        return m_graphcast.loss_edges
+    if arch_id == "equiformer-v2":
+        return m_equiformer.loss_edges
+    if arch_id == "egnn":
+        return m_egnn.loss_edges
+    if arch_id == "graphsage-reddit":
+        return m_sage.loss_edges
+    raise KeyError(arch_id)
+
+
+def _gnn_model_flops(arch_id, cfg, n_nodes, n_edges):
+    """Analytic MAC*2 counts of the dominant ops (forward), x3 for train
+    (fwd + bwd ~ 2x)."""
+    if arch_id == "graphcast":
+        d = cfg.d_hidden
+        per_layer = n_edges * (3 * d * d + d * d) * 2 \
+            + n_nodes * (2 * d * d + d * d) * 2
+        f = cfg.n_layers * per_layer
+    elif arch_id == "equiformer-v2":
+        S = (cfg.l_max + 1) ** 2
+        C = cfg.d_hidden
+        n_l = cfg.l_max + 1
+        so2 = sum(2 * ((cfg.l_max + 1 - m) * C) ** 2 *
+                  (1 if m == 0 else 4) for m in range(cfg.m_max + 1))
+        rot = 2 * sum((2 * l + 1) ** 2 * C for l in range(n_l)) * 2
+        mix = 2 * S * C * C * 3
+        f = cfg.n_layers * n_edges * (so2 + rot + mix)
+    elif arch_id == "egnn":
+        d = cfg.d_hidden
+        f = cfg.n_layers * n_edges * (2 * (2 * d + 1) * d + 2 * d * d) * 2
+    elif arch_id == "graphsage-reddit":
+        d = cfg.d_hidden
+        f = cfg.n_layers * n_nodes * (2 * cfg.d_feat * d) * 2 \
+            + n_edges * cfg.d_feat * 2
+    else:
+        raise KeyError(arch_id)
+    return 3.0 * f     # train: fwd + ~2x bwd
+
+
+def make_gnn_train_step(arch_id, cfg, loss_fn, opt_cfg, extra):
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, *batch, **extra)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = adamw_update(params, grads, opt, opt_cfg)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "grad_norm": gnorm})
+    return train_step
+
+
+def _build_gnn_cell(arch, shape, mesh) -> Cell:
+    dims = shape.dims
+    dp = _dp(mesh)
+    opt_cfg = AdamWConfig()
+    cfg = _gnn_cell_config(arch, shape, mesh)
+    n_nodes, n_edges = _gnn_graph_dims(shape, mesh)
+    edge_spec = _gnn_edge_spec(mesh)
+
+    # graphsage minibatch keeps its native sampled-block form
+    if arch.arch_id == "graphsage-reddit" and shape.name == "minibatch_lg":
+        B = dims["batch_nodes"]
+        f1, f2 = dims["fanout"]
+        F = dims["d_feat"]
+        p_shapes = jax.eval_shape(
+            partial(m_sage.init_sage, cfg=cfg), jax.random.PRNGKey(0))
+        o_shapes = jax.eval_shape(
+            partial(adamw_init, cfg=opt_cfg), p_shapes)
+        p_specs = sh.gnn_param_specs(p_shapes, mesh)
+        state_shapes = {"params": p_shapes, "opt": o_shapes}
+        state_specs = {"params": p_specs,
+                       "opt": {"mu": p_specs, "nu": p_specs, "step": P()}}
+
+        def loss_fn(params, cfg, x_seed, x_n1, x_n2, labels):
+            return m_sage.loss_blocks(params, cfg, x_seed, x_n1, x_n2, labels)
+
+        step = make_gnn_train_step(
+            arch.arch_id, cfg, loss_fn, opt_cfg, {})
+        batch_shapes = (
+            _sds((B, F), jnp.float32),
+            _sds((B, f1, F), jnp.float32),
+            _sds((B * f1, f2, F), jnp.float32),
+            _sds((B,), jnp.int32),
+        )
+        batch_specs = (P(dp, None), P(dp, None, None),
+                       P(dp, None, None), P(dp))
+        flops = _gnn_model_flops(
+            arch.arch_id, cfg, B * (1 + f1), B * f1 * (1 + f2))
+        return Cell(
+            arch.arch_id, shape.name, "train", step,
+            (state_shapes, batch_shapes),
+            _named(mesh, (state_specs, batch_specs)),
+            _named(mesh, (state_specs, {"loss": P(), "grad_norm": P()})),
+            flops, note="sampled-block mode (native GraphSAGE)")
+
+    F = dims.get("d_feat", 227)
+    p_shapes = jax.eval_shape(
+        partial(arch.init_fn, cfg=cfg), jax.random.PRNGKey(0))
+    o_shapes = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), p_shapes)
+    p_specs = sh.gnn_param_specs(p_shapes, mesh)
+    state_shapes = {"params": p_shapes, "opt": o_shapes}
+    state_specs = {"params": p_specs,
+                   "opt": {"mu": p_specs, "nu": p_specs, "step": P()}}
+
+    loss_fn = _gnn_loss_fn(arch.arch_id, cfg)
+    extra = {"n_nodes": n_nodes}
+
+    # per-arch batch pytrees (edge lists; equiformer chunks the edge axis —
+    # its per-edge (chunk, 49, C) irrep tensors are the memory hot spot)
+    if arch.arch_id == "equiformer-v2" and n_edges > 100_000:
+        chunk = min(_EQUI_EDGE_CHUNK,
+                    _pad_up(-(-n_edges // 4),
+                            len(mesh.devices.flatten())))
+        n_chunks = -(-n_edges // chunk)
+        e_shape = (n_chunks, chunk)
+        # edges over every mesh axis (an edges-over-dp-only variant was
+        # tried and REVERTED: 2x worse peak memory — EXPERIMENTS §Perf)
+        e_spec = P(None, tuple(mesh.axis_names))
+    else:
+        e_shape = (n_edges,)
+        e_spec = edge_spec
+
+    if arch.arch_id == "graphcast":
+        # production path: dst-partitioned shard_map processor (paper C2) —
+        # edges arrive pre-partitioned by dst block (graphs/partition.py)
+        def loss_fn(params, cfg_, nf, ef, es, edl, targets, n_nodes):
+            return m_graphcast.loss_edges_dst_partitioned(
+                params, cfg_, nf, ef, es, edl, targets, n_nodes,
+                mesh=mesh)
+
+        batch_shapes = (
+            _sds((n_nodes, F), jnp.float32),
+            _sds((n_edges, cfg.d_edge_in), jnp.float32),
+            _sds((n_edges,), jnp.int32),
+            _sds((n_edges,), jnp.int32),
+            _sds((n_nodes, F), jnp.float32),
+        )
+        batch_specs = (P(dp, None), P(edge_spec[0], None),
+                       edge_spec, edge_spec, P(dp, None))
+    elif arch.arch_id == "equiformer-v2":
+        batch_shapes = (
+            _sds((n_nodes, F), jnp.float32),
+            _sds((n_nodes, 3), jnp.float32),
+            _sds(e_shape, jnp.int32),
+            _sds(e_shape, jnp.int32),
+            _sds((n_nodes, cfg.n_out), jnp.float32),
+        )
+        batch_specs = (P(dp, None), P(dp, None), e_spec, e_spec,
+                       P(dp, None))
+    elif arch.arch_id == "egnn":
+        batch_shapes = (
+            _sds((n_nodes, F), jnp.float32),
+            _sds((n_nodes, 3), jnp.float32),
+            _sds((n_edges,), jnp.int32),
+            _sds((n_edges,), jnp.int32),
+            _sds((n_nodes, 3), jnp.float32),
+        )
+        batch_specs = (P(dp, None), P(dp, None), edge_spec, edge_spec,
+                       P(dp, None))
+    elif arch.arch_id == "graphsage-reddit":
+        batch_shapes = (
+            _sds((n_nodes, F), jnp.float32),
+            _sds((n_edges,), jnp.int32),
+            _sds((n_edges,), jnp.int32),
+            _sds((n_nodes,), jnp.int32),
+        )
+        batch_specs = (P(dp, None), edge_spec, edge_spec, P(dp))
+    else:
+        raise KeyError(arch.arch_id)
+
+    step = make_gnn_train_step(arch.arch_id, cfg, loss_fn, opt_cfg, extra)
+    flops = _gnn_model_flops(arch.arch_id, cfg, n_nodes, n_edges)
+    return Cell(
+        arch.arch_id, shape.name, "train", step,
+        (state_shapes, batch_shapes),
+        _named(mesh, (state_specs, batch_specs)),
+        _named(mesh, (state_specs, {"loss": P(), "grad_norm": P()})),
+        flops,
+        note=f"edge-parallel over {mesh.axis_names}"
+             + (" + edge-chunked scan" if len(e_shape) == 2 else ""))
+
+
+# ======================================================== recsys family ====
+
+def make_fm_sharded_logits(cfg, mesh):
+    """FM logits with the paper-technique lookup: row-sharded table, local
+    partial gathers, psum combine (EfficientIMM partial counters, DESIGN §4).
+    """
+    dp = _dp(mesh)
+    model_size = mesh.shape["model"]
+    shard_rows = -(-cfg.total_rows // model_size)
+
+    def local_fn(v, w, b, idx):
+        rows = idx + cfg.field_offsets()[None, :]
+        emb = sharded_embedding_lookup(
+            v, rows, axis_name="model", shard_rows=shard_rows)
+        wrow = sharded_embedding_lookup(
+            w[:, None], rows, axis_name="model", shard_rows=shard_rows)[..., 0]
+        s = emb.sum(axis=1)
+        s2 = (emb * emb).sum(axis=1)
+        pair = 0.5 * (s * s - s2).sum(axis=-1)
+        return b + wrow.sum(axis=-1) + pair
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P("model", None), P("model"), P(), P(dp, None)),
+        out_specs=P(dp), check_vma=False)
+
+
+def _build_fm_cell(arch, shape, mesh) -> Cell:
+    cfg: m_fm.FMConfig = arch.config
+    dims = shape.dims
+    dp = _dp(mesh)
+    opt_cfg = AdamWConfig()
+    p_shapes = jax.eval_shape(
+        partial(m_fm.init_fm, cfg=cfg), jax.random.PRNGKey(0))
+    p_specs = sh.fm_param_specs(p_shapes, mesh)
+    logits_fn = make_fm_sharded_logits(cfg, mesh)
+
+    if shape.kind == "train":
+        B = dims["batch"]
+        o_shapes = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), p_shapes)
+        state_shapes = {"params": p_shapes, "opt": o_shapes}
+        state_specs = {"params": p_specs,
+                       "opt": {"mu": p_specs, "nu": p_specs, "step": P()}}
+
+        def loss_fn(params, idx, labels):
+            logits = logits_fn(
+                params["v"], params["w"], params["b"], idx).astype(jnp.float32)
+            return jnp.mean(
+                jnp.maximum(logits, 0) - logits * labels
+                + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+        def step(state, batch):
+            idx, labels = batch
+            loss, grads = jax.value_and_grad(loss_fn)(
+                state["params"], idx, labels)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt = adamw_update(
+                state["params"], grads, state["opt"], opt_cfg)
+            return ({"params": params, "opt": opt},
+                    {"loss": loss, "grad_norm": gnorm})
+
+        batch_shapes = (_sds((B, cfg.n_sparse), jnp.int32),
+                        _sds((B,), jnp.float32))
+        batch_specs = (P(dp, None), P(dp))
+        flops = 3.0 * B * cfg.n_sparse * cfg.embed_dim * 4
+        return Cell(
+            arch.arch_id, shape.name, "train", step,
+            (state_shapes, batch_shapes),
+            _named(mesh, (state_specs, batch_specs)),
+            _named(mesh, (state_specs, {"loss": P(), "grad_norm": P()})),
+            flops, note="sharded-lookup (paper-technique) path")
+
+    if shape.name == "retrieval_cand":
+        C = dims["n_candidates"]
+        n_user_fields = 4
+        model_size = mesh.shape["model"]
+        shard_rows = -(-cfg.total_rows // model_size)
+
+        def local_score(v, w, b, user_idx, cand):
+            user_rows = user_idx + cfg.field_offsets()[:n_user_fields]
+            vu = sharded_embedding_lookup(
+                v, user_rows, axis_name="model", shard_rows=shard_rows)
+            wu = sharded_embedding_lookup(
+                w[:, None], user_rows, axis_name="model",
+                shard_rows=shard_rows)[..., 0]
+            su = vu.sum(axis=0)
+            s2 = (vu * vu).sum(axis=0)
+            const = b + wu.sum() + 0.5 * ((su * su) - s2).sum()
+            vc = sharded_embedding_lookup(
+                v, cand, axis_name="model", shard_rows=shard_rows)
+            wc = sharded_embedding_lookup(
+                w[:, None], cand, axis_name="model",
+                shard_rows=shard_rows)[..., 0]
+            return const + wc + vc @ su
+
+        step = jax.shard_map(
+            local_score, mesh=mesh,
+            in_specs=(P("model", None), P("model"), P(), P(), P(dp)),
+            out_specs=P(dp), check_vma=False)
+        specs = (p_shapes["v"], p_shapes["w"], p_shapes["b"],
+                 _sds((n_user_fields,), jnp.int32), _sds((C,), jnp.int32))
+        in_specs = (p_specs["v"], p_specs["w"], p_specs["b"], P(), P(dp))
+        flops = C * cfg.embed_dim * 2
+        return Cell(
+            arch.arch_id, shape.name, "serve", step, specs,
+            _named(mesh, in_specs), _named(mesh, P(dp)), flops,
+            note="one query vs 1M candidates, single batched mat-vec")
+
+    B = dims["batch"]
+
+    def step(v, w, b, idx):
+        return logits_fn(v, w, b, idx)
+
+    specs = (p_shapes["v"], p_shapes["w"], p_shapes["b"],
+             _sds((B, cfg.n_sparse), jnp.int32))
+    in_specs = (p_specs["v"], p_specs["w"], p_specs["b"], P(dp, None))
+    flops = B * cfg.n_sparse * cfg.embed_dim * 4
+    return Cell(
+        arch.arch_id, shape.name, "serve", step, specs,
+        _named(mesh, in_specs), _named(mesh, P(dp)), flops,
+        note="sharded-lookup serve path")
+
+
+# ============================================================= IMM cells ====
+
+def build_imm_cell(cell_name: str, spec: dict, mesh) -> Cell:
+    """Production-scale IMM cells (DESIGN §2): sharded selection + sampling."""
+    from repro.core.selection import select_dense_sharded
+    from repro.core.sampler import sample_ic_sparse
+
+    dp = _dp(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if cell_name.startswith("imm_select"):
+        theta, k = spec["theta"], spec["k"]
+        # pad the vertex axis to the counter-shard multiple (pad vertices
+        # never appear in any RRRset -> counter 0, never selected)
+        n = _pad_up(spec["n"], mesh.shape["model"] * dp_size)
+
+        def step(R, valid):
+            return select_dense_sharded(
+                mesh, R, valid, k, theta_axes=dp, vertex_axis="model")
+
+        specs = (_sds((theta, n), jnp.uint8), _sds((theta,), jnp.bool_))
+        in_specs = (P(dp, "model"), P(dp))
+        out_specs = (P(), P(), P())
+        flops = 2.0 * k * theta * n        # k rounds of masked mat-vec
+        return Cell("imm", cell_name, "select", step, specs,
+                    _named(mesh, in_specs), _named(mesh, out_specs), flops,
+                    note=spec.get("note", ""))
+
+    # sampling cell: fixed-step sparse IC frontier expansion
+    n = _pad_up(spec["n"], mesh.shape["model"] * dp_size)
+    m = _pad_up(spec["m"], mesh.shape["model"] * dp_size)
+    batch = spec["batch"]
+    steps = spec["bfs_steps"]
+
+    def step(key, edge_src, edge_dst, edge_prob):
+        return sample_ic_sparse(
+            key, edge_src, edge_dst, edge_prob, n_nodes=n, batch=batch,
+            max_steps=steps)
+
+    specs = (_sds((2,), jnp.uint32), _sds((m,), jnp.int32),
+             _sds((m,), jnp.int32), _sds((m,), jnp.float32))
+    in_specs = (P(), P("model"), P("model"), P("model"))
+    out_specs = (P(dp, None), P(None), P(dp))
+    flops = 2.0 * batch * m * steps / 8    # expected frontier work
+    return Cell("imm", cell_name, "sample", step, specs,
+                _named(mesh, in_specs), _named(mesh, out_specs), flops,
+                note=spec.get("note", ""))
+
+
+# ============================================================ dispatcher ====
+
+def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    if shape.skip:
+        raise ValueError(
+            f"cell ({arch_id}, {shape_name}) is skipped: {shape.skip_reason}")
+    if arch.family == "lm":
+        return _build_lm_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return _build_gnn_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        return _build_fm_cell(arch, shape, mesh)
+    raise KeyError(arch.family)

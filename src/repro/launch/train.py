@@ -1,0 +1,107 @@
+"""Training driver: wires an ArchDef + TrainLoop + CheckpointManager.
+
+Runs REAL steps on whatever devices exist (CPU here, a pod in production:
+the same cell builders produce the production shardings when given the
+production mesh).  Used by examples/train_lm.py and the integration tests;
+``--steps``/sizes stay CPU-friendly by default.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --smoke --steps 50 --checkpoint-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import TokenPipeline
+from repro.models.transformer import LMConfig, init_lm, lm_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.schedule import wsd_schedule, cosine_schedule
+from repro.runtime.loop import TrainLoop, LoopConfig
+
+
+def make_step(cfg: LMConfig, opt_cfg: AdamWConfig, schedule_fn):
+    @jax.jit
+    def step_fn(state, batch):
+        tokens, labels = batch
+
+        def loss_fn(p):
+            return lm_loss(p, cfg, tokens, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr_scale = schedule_fn(state["opt"]["step"])
+        params, opt = adamw_update(state["params"], grads, state["opt"],
+                                   opt_cfg, lr_scale)
+        return ({"params": params, "opt": opt},
+                {"loss": loss, "grad_norm": gnorm})
+
+    return step_fn
+
+
+def train_lm(arch_id: str, *, smoke: bool = True, steps: int = 100,
+             batch: int = 8, seq_len: int = 128,
+             checkpoint_dir: str = "/tmp/repro_ck", save_every: int = 50,
+             seed: int = 0, log=print):
+    arch = get_arch(arch_id)
+    cfg = arch.smoke_config if smoke else arch.config
+    opt_cfg = AdamWConfig(lr=1e-3)
+    use_wsd = arch_id == "minicpm-2b"       # the WSD schedule arch
+    if use_wsd:
+        schedule_fn = lambda s: wsd_schedule(   # noqa: E731
+            s, warmup=steps // 10 + 1, stable=int(steps * 0.6),
+            decay=max(int(steps * 0.3), 1))
+    else:
+        schedule_fn = lambda s: cosine_schedule(  # noqa: E731
+            s, warmup=steps // 10 + 1, total=steps)
+
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=batch, seq_len=seq_len,
+                         seed=seed)
+
+    def batch_fn(step):
+        t, l = pipe.batch_at(step)
+        return jnp.asarray(t), jnp.asarray(l)
+
+    def init_fn():
+        params = init_lm(jax.random.PRNGKey(seed), cfg)
+        return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+    step_fn = make_step(cfg, opt_cfg, schedule_fn)
+    loop = TrainLoop(
+        LoopConfig(total_steps=steps, checkpoint_dir=checkpoint_dir,
+                   save_every=save_every),
+        step_fn, batch_fn, init_fn)
+    t0 = time.time()
+    state = loop.run()
+    losses = [float(r.metrics["loss"]) for r in loop.history]
+    if losses:
+        log(f"[train] {arch_id}: steps={len(loop.history)} "
+            f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+            f"({time.time()-t0:.1f}s, recoveries={loop.recoveries})")
+    return state, losses, loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ck")
+    args = ap.parse_args(argv)
+    train_lm(args.arch, smoke=args.smoke, steps=args.steps,
+             batch=args.batch, seq_len=args.seq_len,
+             checkpoint_dir=args.checkpoint_dir)
+
+
+if __name__ == "__main__":
+    main()

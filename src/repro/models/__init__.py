@@ -1,0 +1,8 @@
+from repro.models import common, attention, transformer, moe
+from repro.models.transformer import LMConfig, init_lm, lm_loss, lm_forward, decode_step, init_kv_cache
+
+__all__ = [
+    "common", "attention", "transformer", "moe",
+    "LMConfig", "init_lm", "lm_loss", "lm_forward", "decode_step",
+    "init_kv_cache",
+]

@@ -1,0 +1,114 @@
+"""Attention layers: RoPE, GQA, sliding window, blockwise (flash-style) jnp
+path, and KV-cache decode.
+
+The blockwise path is the jnp twin of kernels/flash_attention.py: a lax.scan
+over KV chunks carrying the online-softmax state.  It is what the dry-run
+lowers for long sequences, so the compiled HLO has the same
+O(S·chunk) working set as the TPU kernel instead of an O(S^2) score tensor
+(this is what makes the 32k-prefill cells memory-realistic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_freqs(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- blockwise attention -----
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "chunk"))
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        chunk: int = 1024, kv_len=None, q_offset=None):
+    """Online-softmax attention scanning KV chunks (flash-style, pure jnp).
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  ``kv_len`` (optional, (B,))
+    masks cache positions >= kv_len (decode with a partially filled cache).
+    ``q_offset`` (scalar, may be traced) is the absolute position of query 0;
+    default right-aligns queries to the keys (Skv - Sq) — chunked prefill
+    passes the chunk start instead.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qg = q.reshape(B, Hkv, group, Sq, D).astype(jnp.float32) * scale
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    if q_offset is None:
+        q_offset = Skv - Sq
+    qpos = jnp.arange(Sq) + q_offset                   # (Sq,)
+    limit = jnp.full((B,), Skv) if kv_len is None else kv_len
+
+    def step(carry, inp):
+        m, l, acc, c_idx = carry
+        kb, vb = inp                                   # (B, Hkv, chunk, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        kpos = c_idx * chunk + jnp.arange(chunk)       # (chunk,)
+        mask = kpos[None, :] < limit[:, None]          # (B, chunk)
+        mask = mask[:, None, None, None, :]
+        if causal:
+            mask = jnp.logical_and(mask, (kpos[None, :] <= qpos[:, None])[None, None, None])
+        if window and window > 0:
+            mask = jnp.logical_and(mask, (kpos[None, :] > qpos[:, None] - window)[None, None, None])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new, c_idx + 1), None
+
+    m0 = jnp.full((B, Hkv, group, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, group, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              kv_len=None, blockwise_threshold: int = 2048,
+              use_pallas=None):
+    """Dispatch: Pallas flash on TPU, blockwise jnp for long sequences,
+    plain reference for short ones."""
+    Skv = k.shape[2]
+    if use_pallas or (use_pallas is None and jax.default_backend() == "tpu"):
+        if kv_len is None:
+            return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if Skv > blockwise_threshold or kv_len is not None:
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   kv_len=kv_len)
+    from repro.kernels import ref
+    return ref.attention_ref(q, k, v, causal=causal, window=window)

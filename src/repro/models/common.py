@@ -1,0 +1,70 @@
+"""Shared model building blocks (plain-pytree params, no framework dep)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def dense_init(key, fan_in: int, fan_out: int, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.normal(key, (fan_in, fan_out)) * s).astype(dtype)
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    """dims = [in, hidden, ..., out] -> {"w0","b0","w1","b1",...}"""
+    params = {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = dense_init(keys[i], a, b, dtype)
+        params[f"b{i}"] = jnp.zeros((b,), dtype)
+    return params
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def shard_rows(x, axes):
+    """Pin the leading axis of ``x`` to the given mesh axes (no-op when
+    ``axes`` is empty).  GSPMD under-constrains scan carries — production
+    layers pin node/edge latents at layer boundaries (DESIGN §3)."""
+    if not axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(axes), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_latent(x, row_axes, channel_axis=""):
+    """Pin (rows, [mid...], channels) latents: rows over ``row_axes``,
+    the LAST axis over ``channel_axis`` (no-op for empty axes)."""
+    if not row_axes and not channel_axis:
+        return x
+    from jax.sharding import PartitionSpec as P
+    rows = tuple(row_axes) or None
+    ch = channel_axis or None
+    spec = P(rows, *([None] * (x.ndim - 2)), ch)
+    return jax.lax.with_sharding_constraint(x, spec)

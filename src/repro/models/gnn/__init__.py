@@ -1,0 +1,3 @@
+from repro.models.gnn import mpnn, graphsage, graphcast, egnn, irreps
+
+__all__ = ["mpnn", "graphsage", "graphcast", "egnn", "irreps"]

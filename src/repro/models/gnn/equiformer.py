@@ -1,0 +1,313 @@
+"""Equiformer-v2-style equivariant graph attention via eSCN SO(2) convs
+(Liao et al. 2023 / Passaro & Zitnick 2023).
+
+Node features are real-SH irrep stacks X: (N, S, C) with S = (l_max+1)^2.
+Per layer, per edge:
+  1. per-l linear mix of src/dst features,
+  2. rotate into the edge-aligned frame (exact Wigner D from irreps.py),
+  3. SO(2) convolution truncated at m_max (the eSCN O(L^6) -> O(L^3) trick),
+     with radial-basis gating,
+  4. rotate back, attention weights from the invariant (l=0) channel,
+     aggregate, per-l node update + invariant-gated FFN.
+
+Attention normalization uses soft-capped logits (``logit_cap * tanh``)
+followed by a plain exp-sum — mathematically identical to segment-softmax
+(the cap bounds the exponent) but computable in ONE pass over edges.  That
+single-pass form enables **edge chunking**: with ``edge_src/edge_dst`` given
+as (n_chunks, chunk) the layer scans edge blocks, accumulating the weighted
+message numerator and the attention denominator into node buffers — the per
+-edge (chunk, S, C) irrep tensors never exist all at once.  This is the TPU
+analogue of how eSCN codebases block their edge loop, and it is what makes
+the 61.8M-edge ``ogb_products`` cell memory-feasible (DESIGN §4).
+
+Simplification vs the released model (documented in DESIGN §4): the SO(2)
+weights are static parameters modulated by a radial MLP gate instead of fully
+edge-generated weights; macro compute/memory structure (rotations + per-m
+mixing) is preserved.  Equivariance is property-tested end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (mlp_init, mlp_apply, dense_init,
+                                 shard_rows, shard_latent)
+from repro.models.gnn.irreps import (
+    rotation_to_align_z, wigner_d_stack, sph_harm_from_wigner, l_slices,
+    num_sph,
+)
+from repro.sparse.segment import segment_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str = "equiformer_v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    d_feat: int = 16
+    n_rbf: int = 8
+    n_out: int = 1
+    cutoff: float = 5.0
+    logit_cap: float = 10.0      # tanh soft cap -> single-pass attention
+    dtype: str = "float32"       # irrep feature dtype (bf16 for huge cells)
+    remat: bool = True
+    # mesh axes pinning the (N, S, C) irrep stacks and aggregation buffers
+    # (launch/steps.py sets these; GSPMD otherwise replicates the carry);
+    # channel_axis additionally shards the C axis ("model") so carries,
+    # remat stacks and gather psums shrink tp-fold
+    node_axes: tuple = ()
+    channel_axis: str = ""
+
+
+def _m_index_sets(l_max: int, m_max: int):
+    """For each m in 0..m_max: flat indices of (l, +m) and (l, -m), l >= m."""
+    sl = l_slices(l_max)
+    sets = []
+    for m in range(m_max + 1):
+        plus = [s + l + m for s, e, l in sl if l >= m]
+        minus = [s + l - m for s, e, l in sl if l >= m]
+        sets.append((jnp.array(plus), jnp.array(minus)))
+    return sets
+
+
+def init_equiformer(key, cfg: EquiformerConfig):
+    C, L = cfg.d_hidden, cfg.l_max
+    n_l = L + 1
+    k_embed, k_out, k_layers = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ks = jax.random.split(k, 10)
+        p = {
+            # per-l channel mixers for src/dst/aggregate/update
+            "w_src": jax.vmap(lambda kk: dense_init(kk, C, C))(
+                jax.random.split(ks[0], n_l)),
+            "w_dst": jax.vmap(lambda kk: dense_init(kk, C, C))(
+                jax.random.split(ks[1], n_l)),
+            "w_upd": jax.vmap(lambda kk: dense_init(kk, C, C))(
+                jax.random.split(ks[2], n_l)),
+            "attn_mlp": mlp_init(ks[3], [C + cfg.n_rbf, C, cfg.n_heads]),
+            "rad_mlp": mlp_init(ks[4], [cfg.n_rbf, C, n_l]),
+            "gate_mlp": mlp_init(ks[5], [C, C, n_l * C]),
+            "ffn0": mlp_init(ks[6], [C, 2 * C, C]),
+        }
+        # SO(2) conv weights per m
+        for m in range(cfg.m_max + 1):
+            n_lm = L + 1 - m
+            kA, kB = jax.random.split(ks[7 + min(m, 2)], 2)
+            scale = 1.0 / jnp.sqrt(n_lm * C)
+            p[f"so2_A{m}"] = (jax.random.normal(kA, (n_lm * C, n_lm * C))
+                              * scale)
+            if m > 0:
+                p[f"so2_B{m}"] = (jax.random.normal(kB, (n_lm * C, n_lm * C))
+                                  * scale)
+        return p
+
+    layers = jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": mlp_init(k_embed, [cfg.d_feat, C]),
+        "out": mlp_init(k_out, [C, C, cfg.n_out]),
+        "layers": layers,
+    }
+
+
+def _per_l_linear(w_stack, X, l_max: int):
+    """w_stack (n_l, C, C); X (..., S, C) -> per-l block matmul."""
+    outs = []
+    for s, e, l in l_slices(l_max):
+        outs.append(jnp.einsum("...mc,cd->...md",
+                               X[..., s:e, :], w_stack[l].astype(X.dtype)))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def _rotate(D, X, l_max: int, transpose: bool = False):
+    """Apply block-diagonal Wigner stack to (..., S, C)."""
+    outs = []
+    for (s, e, l), Dl in zip(l_slices(l_max), D):
+        eq = "...ji,...jc->...ic" if transpose else "...ij,...jc->...ic"
+        outs.append(jnp.einsum(eq, Dl.astype(X.dtype), X[..., s:e, :]))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def _rbf(dist, n_rbf: int, cutoff: float):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * jnp.square(dist[..., None] - centers))
+
+
+def _so2_conv(p, Z, cfg: EquiformerConfig, m_sets, rad_gate):
+    """Z: (E, S, C) aligned features -> (E, S, C), |m|>m_max zeroed.
+
+    rad_gate: (E, n_l) radial modulation applied per output l block.
+    """
+    E = Z.shape[0]
+    C, L = cfg.d_hidden, cfg.l_max
+    out = jnp.zeros_like(Z)
+    for m, (ip, im) in enumerate(m_sets):
+        n_lm = ip.shape[0]
+        xp = Z[:, ip, :].reshape(E, n_lm * C)
+        A = p[f"so2_A{m}"].astype(Z.dtype)
+        if m == 0:
+            y = xp @ A
+            out = out.at[:, ip, :].set(y.reshape(E, n_lm, C))
+        else:
+            xm = Z[:, im, :].reshape(E, n_lm * C)
+            B = p[f"so2_B{m}"].astype(Z.dtype)
+            yp = xp @ A - xm @ B
+            ym = xp @ B + xm @ A
+            out = out.at[:, ip, :].set(yp.reshape(E, n_lm, C))
+            out = out.at[:, im, :].set(ym.reshape(E, n_lm, C))
+    # radial gating per l block
+    gated = []
+    for s, e, l in l_slices(L):
+        gated.append(out[:, s:e, :] * rad_gate[:, None, l:l + 1].astype(Z.dtype))
+    return jnp.concatenate(gated, axis=1)
+
+
+def _edge_block(p, cfg: EquiformerConfig, X, pos, es, ed, m_sets):
+    """Messages + attention weights for one block of edges.
+
+    Returns (weighted messages (e, S, C), weights (e, heads), dst ids).
+    Zero-length/padding edges get weight 0 (their dst may be the sentinel
+    n_nodes, dropped by segment_sum).
+    """
+    L = cfg.l_max
+    evec = jnp.take(pos, ed, axis=0, mode="clip") \
+        - jnp.take(pos, es, axis=0, mode="clip")
+    dist = jnp.linalg.norm(evec, axis=-1)
+    valid = dist > 1e-6
+    R = rotation_to_align_z(evec)
+    D = wigner_d_stack(R, L)
+    rbf = _rbf(dist, cfg.n_rbf, cfg.cutoff)
+
+    Xs = jnp.take(X, es, axis=0, mode="clip")
+    Xd = jnp.take(X, ed, axis=0, mode="clip")
+    msg = _per_l_linear(p["w_src"], Xs, L) + _per_l_linear(p["w_dst"], Xd, L)
+    Z = _rotate(D, msg, L)                                # edge-aligned
+    rad_gate = mlp_apply(p["rad_mlp"], rbf)               # (e, n_l)
+    Zc = _so2_conv(p, Z, cfg, m_sets, rad_gate)
+    msg_out = _rotate(D, Zc, L, transpose=True)           # back to global
+
+    # soft-capped attention logits -> single-pass exp weights
+    inv = jnp.concatenate([Zc[:, 0, :],
+                           rbf.astype(Zc.dtype)], axis=-1)
+    logits = mlp_apply(p["attn_mlp"], inv).astype(jnp.float32)
+    cap = cfg.logit_cap
+    logits = cap * jnp.tanh(logits / cap)
+    w = jnp.exp(logits) * valid[:, None]                  # (e, heads)
+
+    e_, S, C = msg_out.shape
+    mh = msg_out.reshape(e_, S, cfg.n_heads, C // cfg.n_heads)
+    num = (mh * w[:, None, :, None].astype(mh.dtype)).reshape(e_, S, C)
+    return num, w, ed
+
+
+def forward_edges(params, cfg: EquiformerConfig, node_feats, pos, edge_src,
+                  edge_dst, n_nodes: int):
+    """-> (invariant node embeddings (N, C), per-node outputs (N, n_out)).
+
+    edge_src/edge_dst: (E,) flat, or (n_chunks, chunk) for the chunked
+    aggregation path (huge graphs; see module docstring).
+    """
+    C, L, S = cfg.d_hidden, cfg.l_max, num_sph(cfg.l_max)
+    H = cfg.n_heads
+    m_sets = _m_index_sets(cfg.l_max, cfg.m_max)
+    dt = jnp.dtype(cfg.dtype)
+    chunked = edge_src.ndim == 2
+
+    # init: l=0 from node features; higher l seeded by neighbor geometry
+    h0 = mlp_apply(params["embed"], node_feats).astype(dt)    # (N, C)
+
+    def seed_block(es, ed):
+        evec = jnp.take(pos, ed, axis=0, mode="clip") \
+            - jnp.take(pos, es, axis=0, mode="clip")
+        valid = jnp.linalg.norm(evec, axis=-1) > 1e-6
+        sh = sph_harm_from_wigner(evec, L) * valid[:, None]   # (e, S)
+        src_h = jnp.take(h0, es, axis=0, mode="clip")
+        return segment_sum(
+            (sh[:, :, None] * src_h[:, None, :]).astype(dt), ed, n_nodes)
+
+    X = jnp.zeros((n_nodes, S, C), dt)
+    X = X.at[:, 0, :].set(h0)
+    if chunked:
+        geo = jax.lax.scan(
+            lambda acc, ee: (shard_latent(acc + seed_block(*ee),
+                                          cfg.node_axes, cfg.channel_axis),
+                             None),
+            shard_latent(jnp.zeros((n_nodes, S, C), dt), cfg.node_axes,
+                         cfg.channel_axis),
+            (edge_src, edge_dst))[0]
+    else:
+        geo = seed_block(edge_src, edge_dst)
+    X = shard_latent(X + geo / jnp.sqrt(S).astype(dt), cfg.node_axes,
+                     cfg.channel_axis)
+
+    def aggregate(p, X):
+        if chunked:
+            def chunk_fn(carry, ee):
+                num_acc, den_acc = carry
+                num, w, ed = _edge_block(p, cfg, X, pos, ee[0], ee[1], m_sets)
+                num_acc = shard_latent(
+                    num_acc + segment_sum(num, ed, n_nodes),
+                    cfg.node_axes, cfg.channel_axis)
+                den_acc = shard_rows(den_acc + segment_sum(w, ed, n_nodes),
+                                     cfg.node_axes)
+                return (num_acc, den_acc), None
+            (num, den), _ = jax.lax.scan(
+                chunk_fn,
+                (shard_latent(jnp.zeros((n_nodes, S, C), dt),
+                              cfg.node_axes, cfg.channel_axis),
+                 shard_rows(jnp.zeros((n_nodes, H), jnp.float32),
+                            cfg.node_axes)),
+                (edge_src, edge_dst))
+        else:
+            num_e, w, ed = _edge_block(p, cfg, X, pos, edge_src, edge_dst,
+                                       m_sets)
+            num = segment_sum(num_e, ed, n_nodes)
+            den = segment_sum(w, ed, n_nodes)
+        den = jnp.maximum(den, 1e-9)
+        numh = num.reshape(n_nodes, S, H, C // H)
+        agg = (numh / den[:, None, :, None].astype(dt)
+               ).reshape(n_nodes, S, C)
+        return agg
+
+    def layer(X, p):
+        agg = aggregate(p, X)
+        X = shard_latent(X + _per_l_linear(p["w_upd"], agg, L),
+                         cfg.node_axes, cfg.channel_axis)
+
+        # invariant-gated equivariant FFN
+        inv_n = X[:, 0, :]
+        gates = jax.nn.sigmoid(
+            mlp_apply(p["gate_mlp"], inv_n).astype(jnp.float32)
+        ).reshape(n_nodes, L + 1, C).astype(dt)
+        ffn = []
+        for s, e, l in l_slices(L):
+            if l == 0:
+                ffn.append((mlp_apply(p["ffn0"], inv_n)
+                            * gates[:, 0, :])[:, None, :])
+            else:
+                ffn.append(X[:, s:e, :] * gates[:, l:l + 1, :])
+        X = shard_latent(X + jnp.concatenate(ffn, axis=1).astype(X.dtype),
+                         cfg.node_axes, cfg.channel_axis)
+        return X, None
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(layer)
+    X, _ = jax.lax.scan(body, X, params["layers"])
+
+    inv = X[:, 0, :].astype(jnp.float32)
+    return inv, mlp_apply(params["out"], inv)
+
+
+def loss_edges(params, cfg: EquiformerConfig, node_feats, pos, edge_src,
+               edge_dst, targets, n_nodes: int):
+    _, out = forward_edges(params, cfg, node_feats, pos, edge_src, edge_dst,
+                           n_nodes)
+    return jnp.mean(jnp.square(out - targets))

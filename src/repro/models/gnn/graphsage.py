@@ -1,0 +1,86 @@
+"""GraphSAGE (Hamilton et al. 2017): mean aggregator, 2 layers, minibatch
+fan-out sampling (sample_sizes 25-10 in the assigned config).
+
+Two apply modes:
+  * ``forward_blocks`` — the native minibatch form over sampled neighbor
+    blocks (what the reddit ``minibatch_lg`` cell lowers);
+  * ``forward_edges`` — full-graph form over an edge list (full_graph_sm /
+    ogb_products cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.gnn.mpnn import aggregate
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    name: str = "graphsage"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_feat: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+    sample_sizes: tuple = (25, 10)
+
+
+def init_sage(key, cfg: SageConfig):
+    dims = [cfg.d_feat] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        layers.append({
+            "w_self": dense_init(k1, dims[i], dims[i + 1]),
+            "w_nbr": dense_init(k2, dims[i], dims[i + 1]),
+            "b": jnp.zeros((dims[i + 1],)),
+        })
+    kout, _ = jax.random.split(key)
+    return {
+        "layers": layers,
+        "w_out": dense_init(kout, cfg.d_hidden, cfg.n_classes),
+    }
+
+
+def _sage_layer(p, h_self, h_nbr_mean):
+    return jax.nn.relu(h_self @ p["w_self"] + h_nbr_mean @ p["w_nbr"] + p["b"])
+
+
+def forward_blocks(params, cfg: SageConfig, x_seed, x_n1, x_n2):
+    """x_seed (B, F); x_n1 (B, f1, F); x_n2 (B*f1, f2, F) -> logits (B, C)."""
+    B, f1, F = x_n1.shape
+    l1, l2 = params["layers"][0], params["layers"][1]
+    # layer-1 embeddings for seeds and their level-1 neighbors
+    h1_seed = _sage_layer(l1, x_seed, x_n1.mean(axis=1))
+    h1_n1 = _sage_layer(l1, x_n1.reshape(B * f1, F), x_n2.mean(axis=1))
+    # layer-2 for seeds
+    h2 = _sage_layer(l2, h1_seed, h1_n1.reshape(B, f1, -1).mean(axis=1))
+    return h2 @ params["w_out"]
+
+
+def forward_edges(params, cfg: SageConfig, node_feats, edge_src, edge_dst,
+                  n_nodes: int):
+    """Full-graph mode: logits for every node."""
+    h = node_feats
+    for p in params["layers"]:
+        msgs = jnp.take(h, edge_src, axis=0)
+        agg = aggregate(msgs, edge_dst, n_nodes, cfg.aggregator)
+        h = _sage_layer(p, h, agg)
+    return h @ params["w_out"]
+
+
+def loss_blocks(params, cfg: SageConfig, x_seed, x_n1, x_n2, labels):
+    logits = forward_blocks(params, cfg, x_seed, x_n1, x_n2)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def loss_edges(params, cfg: SageConfig, node_feats, edge_src, edge_dst,
+               labels, n_nodes: int):
+    logits = forward_edges(params, cfg, node_feats, edge_src, edge_dst, n_nodes)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

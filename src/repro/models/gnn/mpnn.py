@@ -1,0 +1,40 @@
+"""Shared message-passing utilities.
+
+All GNN aggregation reduces to gather(src) -> reduce-by-dst — the same
+primitive as the EfficientIMM counter update (DESIGN §4).  Two modes:
+
+  * flat edge list (full-graph training; optionally pre-partitioned by dst
+    block via graphs.partition for the sharded path)
+  * per-device edge slabs inside shard_map: local segment_sum into the
+    device's dst block after an all-gather of src features (the IMM
+    partial-counter + psum pattern).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_sum, segment_mean, segment_max
+
+
+def gather_src(h, edge_src):
+    return jnp.take(h, edge_src, axis=0)
+
+
+def aggregate(messages, edge_dst, n_nodes: int, op: str = "sum"):
+    if op == "sum":
+        return segment_sum(messages, edge_dst, n_nodes)
+    if op == "mean":
+        return segment_mean(messages, edge_dst, n_nodes)
+    if op == "max":
+        out = segment_max(messages, edge_dst, n_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(op)
+
+
+def sharded_aggregate(h_global, msg_fn, src_slab, dst_slab, node_block: int,
+                      *, axis_name: str, op: str = "sum"):
+    """Inside shard_map: this device owns edge slab (src, local dst) and the
+    dst node block; h_global is the all-gathered node feature table."""
+    msgs = msg_fn(jnp.take(h_global, src_slab, axis=0))
+    return aggregate(msgs, dst_slab, node_block, op)

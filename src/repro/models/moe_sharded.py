@@ -1,0 +1,162 @@
+"""shard_map MoE FFN with explicit all-to-all dispatch (production path).
+
+The GSPMD gather/scatter formulation in ``transformer._moe_ffn`` leaves the
+partitioner to infer dispatch-buffer shardings; at grok scale its choices
+replicate (E, C, d)-sized cotangents and psum at dispatch-buffer size.  This
+module pins the WHOLE dispatch/compute/combine pipeline per device:
+
+  * routing + capacity are LOCAL (per-device capacity C_loc = cf*k*T_loc/E —
+    the standard expert-parallel formulation; the global-capacity GSPMD path
+    remains the reference/small-scale implementation),
+  * 'ep'  (experts over "model", moonshot 64e): token blocks move to their
+    expert's shard via ``lax.all_to_all`` — wire per layer = the (E, C_loc,
+    d) dispatch buffer itself, ~100x less than the psum-at-(E,C,d) pattern,
+  * 'tpe' (TP-in-expert over "model", grok 8e): every device runs all
+    experts on its own tokens over its ff shard; the FSDP-stored d/ff axes
+    are re-gathered per layer (``lax.all_gather`` over the data axes) and
+    the down-projection partial sums reduce over "model" (``lax.psum``).
+
+The launcher (launch/steps.py) sets ``MESH`` before tracing; model code
+stays mesh-agnostic otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# set by the launcher before tracing (shard_map needs the concrete mesh)
+MESH = None
+
+
+def _local_dispatch(xf, router, E: int, k: int, cap_factor: float):
+    """Local top-k routing + sort-based slotting.
+
+    xf: (T_loc, d) -> (xe (E, C_loc, d), slot_token, slot_gate, probs,
+    flat_eid)."""
+    T, d = xf.shape
+    C = max(int(cap_factor * k * T / E), 1)
+    logits = xf.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_eid = gate_idx.reshape(-1)
+    order = jnp.argsort(flat_eid, stable=True)
+    sorted_eid = flat_eid[order]
+    seg_start = jnp.searchsorted(sorted_eid,
+                                 jnp.arange(E, dtype=sorted_eid.dtype))
+    pos_sorted = (jnp.arange(T * k, dtype=jnp.int32)
+                  - seg_start[sorted_eid].astype(jnp.int32))
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < C
+    flat_slot = jnp.where(keep, flat_eid * C + pos, E * C)
+
+    token_ids = jnp.broadcast_to(
+        jnp.arange(T)[:, None], (T, k)).reshape(-1)
+    slot_token = jnp.zeros((E * C,), jnp.int32).at[flat_slot].set(
+        token_ids, mode="drop")
+    slot_valid = jnp.zeros((E * C,), jnp.bool_).at[flat_slot].set(
+        True, mode="drop")
+    slot_gate = jnp.zeros((E * C,), jnp.float32).at[flat_slot].set(
+        (gate_vals.reshape(-1) * keep), mode="drop")
+
+    xe = jnp.where(slot_valid[:, None], xf[slot_token], 0.0)
+    return (xe.reshape(E, C, d), slot_token, slot_gate, probs, flat_eid)
+
+
+def _local_combine(ye, slot_token, slot_gate, T: int, d: int):
+    E, C, _ = ye.shape
+    weighted = (ye * slot_gate.reshape(E, C)[..., None].astype(ye.dtype)
+                ).reshape(E * C, d)
+    return jnp.zeros((T, d), jnp.float32).at[slot_token].add(
+        weighted.astype(jnp.float32), mode="drop")
+
+
+def _aux_loss(flat_eid, probs, E: int, axes):
+    T = probs.shape[0]
+    density = jax.ops.segment_sum(
+        jnp.ones_like(flat_eid, jnp.float32), flat_eid, E)
+    density = jax.lax.psum(density, axes)
+    pmean = jax.lax.psum(probs.sum(0), axes)
+    t_tot = jax.lax.psum(jnp.float32(T), axes)
+    return E * jnp.sum((density / t_tot) * (pmean / t_tot))
+
+
+def moe_ffn_sharded(p, x, cfg):
+    """x: (B, S, d) sharded P(dp, "model", None) -> (y, aux).
+
+    Requires MESH set and cfg.moe_shard_axes/moe_partition configured.
+    p holds one layer's slices: router (d, E), w_gate_up (E, d, 2ff),
+    w_down (E, ff, d) with the launch/shardings.py storage layout.
+    """
+    assert MESH is not None, "launch layer must set moe_sharded.MESH"
+    dp = tuple(cfg.moe_shard_axes)
+    tp = "model"
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    ep = cfg.moe_partition == "ep"
+    tp_size = MESH.shape[tp]
+    all_axes = dp + (tp,)
+
+    if ep:
+        wgu_spec, wdn_spec = P(tp, dp, None), P(tp, dp, None)
+    else:
+        wgu_spec, wdn_spec = P(None, dp, tp), P(None, tp, dp)
+
+    def local_fn(router, wgu, wdn, x_loc):
+        B_, S_, d = x_loc.shape
+        if ep:
+            xf = x_loc.reshape(-1, d)
+        else:
+            # 'tpe' reduces ff partials over "model" — every model shard
+            # must therefore dispatch the SAME tokens: re-gather the
+            # seq-sharded activations first. (The ungathered variant
+            # psum-mixed partials of DIFFERENT tokens — caught by the
+            # useful-flops-ratio check, EXPERIMENTS §Perf.)
+            x_all = jax.lax.all_gather(x_loc, tp, axis=1, tiled=True)
+            xf = x_all.reshape(-1, d)                # (B_loc*S_full, d)
+        T_loc = xf.shape[0]
+        xe, slot_token, slot_gate, probs, flat_eid = _local_dispatch(
+            xf, router, E, k, cf)
+
+        if ep:
+            # tokens -> expert shards (all-to-all over the model axis),
+            # FSDP d re-gather over the data axes. Correct under seq
+            # sharding: slots return to their source shard afterwards.
+            xe = jax.lax.all_to_all(xe, tp, split_axis=0, concat_axis=1,
+                                    tiled=True)      # (E/tp, C*tp, d)
+            wgu_full = jax.lax.all_gather(wgu, dp, axis=1, tiled=True)
+            wdn_full = jax.lax.all_gather(wdn, dp, axis=1, tiled=True)
+            gu = jnp.einsum("ecd,edf->ecf", xe, wgu_full)
+            g, u = jnp.split(gu, 2, axis=-1)
+            ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wdn_full)
+            ye = jax.lax.all_to_all(ye, tp, split_axis=1, concat_axis=0,
+                                    tiled=True)      # (E, C, d)
+        else:
+            # all experts on the gathered tokens over the local ff shard;
+            # FSDP-stored axes re-gathered per layer
+            wgu_full = jax.lax.all_gather(wgu, dp, axis=1, tiled=True)
+            wdn_full = jax.lax.all_gather(wdn, dp, axis=2, tiled=True)
+            gu = jnp.einsum("ecd,edf->ecf", xe, wgu_full)
+            g, u = jnp.split(gu, 2, axis=-1)
+            ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wdn_full)
+            ye = jax.lax.psum(ye, tp)                # reduce ff partials
+
+        y = _local_combine(ye, slot_token, slot_gate, T_loc, d)
+        aux = _aux_loss(flat_eid, probs, E, all_axes)
+        if not ep:
+            # slice this shard's sequence block back out
+            y = y.reshape(B_, S_ * tp_size, d)
+            start = jax.lax.axis_index(tp) * S_
+            y = jax.lax.dynamic_slice_in_dim(y, start, S_, axis=1)
+            return y.astype(x_loc.dtype), aux
+        return y.reshape(B_, S_, d).astype(x_loc.dtype), aux
+
+    fn = jax.shard_map(
+        local_fn, mesh=MESH,
+        in_specs=(P(None, None), wgu_spec, wdn_spec, P(dp, tp, None)),
+        out_specs=(P(dp, tp, None), P()),
+        check_vma=False)
+    return fn(p["router"], p["w_gate_up"], p["w_down"], x)

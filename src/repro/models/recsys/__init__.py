@@ -1,0 +1,6 @@
+from repro.models.recsys.fm import (
+    FMConfig, init_fm, fm_logits, fm_loss, fm_retrieval_scores,
+)
+
+__all__ = ["FMConfig", "init_fm", "fm_logits", "fm_loss",
+           "fm_retrieval_scores"]

@@ -1,0 +1,85 @@
+"""Factorization Machine (Rendle, ICDM'10) with huge sharded embedding tables.
+
+logit(x) = b + sum_f w[f, x_f] + sum_{i<j} <v_i, v_j>
+with the pairwise term computed by the O(nk) sum-square trick
+(kernels/fm_interaction.py is the fused TPU kernel; ref path here).
+
+The n_sparse=39 categorical fields share one concatenated table
+(sum_f vocab_f rows) so a single row-sharded lookup serves all fields —
+the paper's NUMA-interleaving analogue (DESIGN §4): rows mod-interleave
+across the "model" mesh axis and partial lookups psum, exactly like the
+EfficientIMM partial counters.
+
+``fm_retrieval_scores`` scores one user context against n_candidates item
+embeddings as a single batched mat-vec (no loop), for the retrieval_cand
+shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 1_000_000
+    interaction: str = "fm-2way"
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def field_offsets(self):
+        return jnp.arange(self.n_sparse, dtype=jnp.int32) * self.vocab_per_field
+
+
+def init_fm(key, cfg: FMConfig, dtype=jnp.float32):
+    kv, kw = jax.random.split(key)
+    return {
+        "v": (jax.random.normal(kv, (cfg.total_rows, cfg.embed_dim))
+              * 0.01).astype(dtype),
+        "w": jnp.zeros((cfg.total_rows,), dtype),
+        "b": jnp.zeros((), dtype),
+    }
+
+
+def fm_logits(params, cfg: FMConfig, sparse_idx):
+    """sparse_idx: (B, n_sparse) per-field categorical ids -> (B,) logits."""
+    rows = sparse_idx + cfg.field_offsets()[None, :]      # global row ids
+    v = jnp.take(params["v"], rows, axis=0)               # (B, F, K)
+    w = jnp.take(params["w"], rows, axis=0)               # (B, F)
+    pair = kref.fm_interaction_ref(v.astype(jnp.float32))
+    return params["b"] + w.sum(axis=-1) + pair
+
+
+def fm_loss(params, cfg: FMConfig, sparse_idx, labels):
+    """Binary cross entropy on {0,1} CTR labels."""
+    logits = fm_logits(params, cfg, sparse_idx).astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def fm_retrieval_scores(params, cfg: FMConfig, user_idx, candidate_rows):
+    """user_idx: (n_user_fields,) context ids; candidate_rows: (C,) global
+    row ids of candidate items.  FM score decomposes as
+        s(c) = const_user + w_c + <sum_user v, v_c>
+    (the candidate self-interaction is zero for one-hot fields), so scoring
+    1M candidates is one mat-vec.
+    """
+    user_rows = user_idx + cfg.field_offsets()[: user_idx.shape[0]]
+    vu = jnp.take(params["v"], user_rows, axis=0)          # (Fu, K)
+    wu = jnp.take(params["w"], user_rows, axis=0)
+    su = vu.sum(axis=0)                                    # (K,)
+    user_pair = kref.fm_interaction_ref(vu[None].astype(jnp.float32))[0]
+    const = params["b"] + wu.sum() + user_pair
+    vc = jnp.take(params["v"], candidate_rows, axis=0)     # (C, K)
+    wc = jnp.take(params["w"], candidate_rows, axis=0)
+    return const + wc + vc @ su

@@ -1,0 +1,572 @@
+"""Decoder-only transformer LM: RoPE + GQA + optional sliding window +
+optional QKV bias + optional MoE FFN; layers stacked and scanned (compile
+time O(1) in depth), full per-layer remat.
+
+MoE uses *gather-based* dispatch (repro.models.moe builds the routing
+tensors; this module selects gather dispatch for roofline honesty — no
+O(T·E·C) dispatch einsum; see DESIGN §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm, dense_init
+from repro.models.attention import apply_rope, attention, blockwise_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1000
+    d_head: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    window: int = 0              # sliding window; 0 = full causal
+    rope_theta: float = 10000.0
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # mesh axes to shard the MoE dispatch buffers' capacity axis over
+    # (set by launch/steps.py; requires an ambient mesh context). Without
+    # it GSPMD replicates the (E, C, d) buffers across the data axis.
+    moe_shard_axes: tuple = ()
+    # "ep" (experts over model: moonshot 64e) or "tpe" (TP-in-expert over
+    # model on the ff axis: grok 8e) — controls the dispatch-buffer specs
+    moe_partition: str = "tpe"
+    # "dense" = GSPMD gather/scatter (reference, any device count);
+    # "shard_map" = explicit all-to-all pipeline (models/moe_sharded.py,
+    # production path; requires moe_sharded.MESH set by the launcher)
+    moe_impl: str = "dense"
+    # sequence-parallel activation constraints (set by launch/steps.py):
+    # x/(q)/ffn activations are pinned to P(act_batch_axes, act_seq_axis)
+    # on (B, S, ...) so GSPMD cannot replicate attention scores or remat
+    # carries across the model axis (the minicpm 36-head case).
+    act_batch_axes: tuple = ()
+    act_seq_axis: str = ""
+    # muP-ish scaling (minicpm)
+    emb_scale: float = 1.0
+    residual_scale: float = 1.0
+    logit_scale: float = 1.0
+    dtype: str = "float32"
+    remat: bool = True
+    # serving
+    max_cache_len: int = 0       # 0 -> set per call
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.n_experts:
+            ffn = self.n_experts * (d * 2 * self.d_ff + self.d_ff * d) \
+                + d * self.n_experts
+        else:
+            ffn = d * 2 * self.d_ff + self.d_ff * d
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """6·N_active·D accounting for MoE top-k (DESIGN roofline)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        hd = self.head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = self.top_k * (d * 2 * self.d_ff + self.d_ff * d) \
+            + d * self.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+# ----------------------------------------------------------------- init ----
+
+def _init_layer(key, cfg: LMConfig, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, Hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, Hkv * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if cfg.n_experts:
+        p["router"] = dense_init(ks[4], d, cfg.n_experts, jnp.float32)
+        p["w_gate_up"] = (jax.random.normal(
+            ks[5], (cfg.n_experts, d, 2 * cfg.d_ff)) / jnp.sqrt(d)).astype(dtype)
+        p["w_down"] = (jax.random.normal(
+            ks[6], (cfg.n_experts, cfg.d_ff, d)) / jnp.sqrt(cfg.d_ff)).astype(dtype)
+    else:
+        p["w_gate_up"] = dense_init(ks[5], d, 2 * cfg.d_ff, dtype)
+        p["w_down"] = dense_init(ks[6], cfg.d_ff, d, dtype)
+    return p
+
+
+def init_lm(key, cfg: LMConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+# -------------------------------------------------------------- MoE ffn ----
+
+def _moe_ffn(p, x2d, cfg: LMConfig):
+    """Gather-based top-k dispatch: O(T·k·d) data movement + honest expert
+    GEMM flops (no dense dispatch einsum)."""
+    T, d = x2d.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.capacity_factor * k * T / E), 1)
+
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # sort-based routing: position-in-expert via a stable argsort over the
+    # flattened expert ids — O(T*k) metadata instead of the O(T*k*E)
+    # one-hot+cumsum (which dominates device memory at 131k tokens x 64e)
+    flat_eid = gate_idx.reshape(-1)                          # (T*k,)
+    order = jnp.argsort(flat_eid, stable=True)
+    sorted_eid = flat_eid[order]
+    seg_start = jnp.searchsorted(sorted_eid,
+                                 jnp.arange(E, dtype=sorted_eid.dtype))
+    pos_sorted = (jnp.arange(T * k, dtype=jnp.int32)
+                  - seg_start[sorted_eid].astype(jnp.int32))
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+    pos = pos.reshape(T, k)
+    keep = pos < C
+    flat_slot = jnp.where(keep, gate_idx * C + pos, E * C)   # sentinel drop
+
+    token_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    slot_token = jnp.zeros((E * C,), jnp.int32).at[flat_slot.reshape(-1)].set(
+        token_ids.reshape(-1), mode="drop")
+    slot_valid = jnp.zeros((E * C,), jnp.bool_).at[flat_slot.reshape(-1)].set(
+        True, mode="drop")
+
+    def shard_moe(t, kind):
+        """Pin (E, C, ...) dispatch buffers to the MoE partition layout:
+        'ep'  -> experts over "model", capacity over the data axes;
+        'tpe' -> capacity over data, ff (gu only) over "model".
+        Without these GSPMD replicates the buffers across the model axis
+        and must all-gather the expert weights per layer."""
+        if not cfg.moe_shard_axes:
+            return t
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(cfg.moe_shard_axes)
+        if cfg.moe_partition == "ep":
+            spec = P("model", dp, *([None] * (t.ndim - 2)))
+        else:
+            spec = P(None, dp,
+                     *(["model" if kind == "gu" else None]
+                       * (t.ndim - 2)))
+        return jax.lax.with_sharding_constraint(t, spec)
+
+    # shard the slot maps FIRST so the token gather lands pre-sharded
+    slot_token = shard_moe(slot_token.reshape(E, C), "idx")
+    slot_valid = shard_moe(slot_valid.reshape(E, C), "idx")
+    if cfg.moe_shard_axes:
+        # replicate the token table for the dispatch gather: ONE all-gather
+        # of (T, d) per layer instead of per-shard partial gathers psum'd
+        # at (E, C, d) size (16x more wire + a replicated dispatch buffer)
+        from jax.sharding import PartitionSpec as P
+        x_src = jax.lax.with_sharding_constraint(x2d, P(None, None))
+    else:
+        x_src = x2d
+    xe = jnp.where(slot_valid[..., None], x_src[slot_token], 0.0)
+    xe = shard_moe(xe, "xe")
+    # bf16 expert GEMMs (f32 accumulation happens in the MXU); keeping the
+    # (E, C, ff) activations in bf16 halves the dominant MoE buffers
+    gu = shard_moe(jnp.einsum("ecd,edf->ecf", xe, p["w_gate_up"]), "gu")
+    g, u = jnp.split(gu, 2, axis=-1)
+    ye = shard_moe(jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                              p["w_down"]), "ye")
+    # combine: scatter each slot's weighted output back to its token.
+    # (T, d)-sized scatter-add instead of a (T, k, d) gather — k x less
+    # cross-shard traffic when slots and tokens live on different shards.
+    # NOTE: the scatter indexes with the 2D (E, C) slot map directly — a
+    # flattening reshape of the (E, C, d) buffer merges an unsharded axis
+    # with the dp-sharded capacity axis, which GSPMD can only realize by
+    # replicating (7.5 GiB at grok-prefill scale; EXPERIMENTS §Perf).
+    slot_gate = jnp.zeros((E * C,), jnp.float32).at[
+        flat_slot.reshape(-1)].set((gate_vals * keep).reshape(-1),
+                                   mode="drop")
+    slot_gate = shard_moe(slot_gate.reshape(E, C), "idx")
+    weighted = shard_moe(
+        (ye * slot_gate[..., None].astype(ye.dtype)), "ye")
+    y0 = jnp.zeros((T, d), jnp.float32)
+    if cfg.moe_shard_axes:
+        # token rows are batch-major -> the dp sharding survives the
+        # (B, chunk) -> T merge; without the pin the scatter output
+        # materializes replicated (3 GiB f32 at grok-prefill scale)
+        from jax.sharding import PartitionSpec as P
+        y0 = jax.lax.with_sharding_constraint(
+            y0, P(tuple(cfg.moe_shard_axes), None))
+    y = y0.at[slot_token].add(weighted.astype(jnp.float32), mode="drop")
+    # padding slots carry gate 0 (token 0) -> no contribution
+
+    density = jax.ops.segment_sum(
+        jnp.ones_like(flat_eid, jnp.float32), flat_eid, E) / T
+    aux = E * jnp.sum(density * probs.mean(0))
+    return y.astype(x2d.dtype), aux
+
+
+def _dense_ffn(p, x2d):
+    """Works on any leading batch dims (keeps 3D (B, S, d) layouts intact
+    so sequence sharding survives — no (B*S, d) reshape resharding)."""
+    gu = x2d @ p["w_gate_up"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    return jax.nn.silu(g) * u @ p["w_down"], jnp.float32(0.0)
+
+
+def _act_shard(x, cfg: LMConfig):
+    """Pin (B, S, ...) activations to the data/sequence-parallel layout."""
+    if not cfg.act_seq_axis and not cfg.act_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    bt = tuple(cfg.act_batch_axes) or None
+    seq = cfg.act_seq_axis or None
+    spec = P(bt, seq, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _q_shard(q, cfg: LMConfig):
+    """q: (B, H, Sq, hd) — shard the query sequence axis."""
+    if not cfg.act_seq_axis:
+        return q
+    from jax.sharding import PartitionSpec as P
+    bt = tuple(cfg.act_batch_axes) or None
+    return jax.lax.with_sharding_constraint(
+        q, P(bt, None, cfg.act_seq_axis, None))
+
+
+# -------------------------------------------------------------- forward ----
+
+def _attn_block(p, x, cfg: LMConfig, positions):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1"])
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+    q = _q_shard(q, cfg)        # seq-parallel: queries sharded, KV gathered
+    out = attention(q, k, v, causal=True, window=cfg.window)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return _act_shard(out @ p["wo"], cfg), (k, v)
+
+
+def _layer_fn(x_aux, p, cfg: LMConfig, positions):
+    x, aux = x_aux
+    x = _act_shard(x, cfg)
+    attn_out, _ = _attn_block(p, x, cfg, positions)
+    x = x + attn_out * cfg.residual_scale
+    h = rms_norm(x, p["ln2"])
+    B, S, d = h.shape
+    if cfg.n_experts and cfg.moe_impl == "shard_map":
+        from repro.models import moe_sharded
+        y, a = moe_sharded.moe_ffn_sharded(p, h, cfg)
+    elif cfg.n_experts:
+        y, a = _moe_ffn(p, h.reshape(B * S, d), cfg)
+        y = y.reshape(B, S, d)
+    else:
+        y, a = _dense_ffn(p, h)
+        y = _act_shard(y, cfg)
+    x = x + y * cfg.residual_scale
+    return (x, aux + a), None
+
+
+def lm_hidden(params, cfg: LMConfig, tokens):
+    """tokens (B, S) -> (final normed hidden (B, S, d), aux_loss ())."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    positions = jnp.arange(S)
+
+    body = partial(_layer_fn, cfg=cfg, positions=positions)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(
+        lambda carry, p: body(carry, p),
+        (x, jnp.float32(0.0)), params["layers"])
+
+    return rms_norm(x, params["ln_f"]), aux / cfg.n_layers
+
+
+def lm_forward(params, cfg: LMConfig, tokens):
+    """tokens (B, S) -> (logits (B, S, V), aux_loss ())."""
+    x, aux = lm_hidden(params, cfg, tokens)
+    logits = (x @ params["lm_head"]) * cfg.logit_scale
+    return logits, aux
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, *, ce_chunk: int = 512):
+    """Next-token cross entropy (labels = tokens shifted by caller).
+
+    The (B, S, V) logit tensor never materializes: the CE scans the sequence
+    in ``ce_chunk`` slices with remat, so only one (B, chunk, V) slice is
+    live at a time (fwd AND bwd) — the memory fix that keeps 150k-vocab
+    archs inside per-device HBM at 1M-token batches (EXPERIMENTS §Dry-run).
+    """
+    x, aux = lm_hidden(params, cfg, tokens)                  # (B, S, d)
+    B, S, d = x.shape
+    chunk = min(ce_chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def ce_chunk_fn(carry, xl):
+        nll_sum, n_tok = carry
+        xb, lb = xl                                          # (B, chunk, d)
+        logits = (xb @ params["lm_head"]).astype(jnp.float32) \
+            * cfg.logit_scale
+        logz = jax.nn.logsumexp(logits, axis=-1)             # (B, chunk)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = lb >= 0
+        nll = (logz - gold) * mask
+        return (nll_sum + nll.sum(), n_tok + mask.sum()), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        ce_chunk_fn, (jnp.float32(0.0), jnp.int32(0)), (xc, lc))
+    loss = nll_sum / jnp.maximum(n_tok, 1)
+    return loss + cfg.aux_loss_weight * aux
+
+
+def prefill(params, cfg: LMConfig, tokens):
+    """Serving prefill: last-position logits only (B, V) + per-layer KV.
+
+    Returns (logits, cache) where cache = {"k","v"} of shape
+    (L, B, Hkv, S, hd) plus the filled length.
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale
+    positions = jnp.arange(S)
+
+    def body(carry, p):
+        x, aux = carry
+        attn_out, (k, v) = _attn_block(p, x, cfg, positions)
+        x = x + attn_out * cfg.residual_scale
+        h = rms_norm(x, p["ln2"])
+        if cfg.n_experts:
+            y, a = _moe_ffn(p, h.reshape(B * S, -1), cfg)
+        else:
+            y, a = _dense_ffn(p, h.reshape(B * S, -1))
+        x = x + y.reshape(B, S, -1) * cfg.residual_scale
+        return (x, aux + a), (k, v)
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), (ks, vs) = jax.lax.scan(fn, (x, jnp.float32(0.0)),
+                                    params["layers"])
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    logits = (x @ params["lm_head"]) * cfg.logit_scale
+    return logits[:, 0], {"k": ks, "v": vs, "len": jnp.int32(S)}
+
+
+def prefill_chunked(params, cfg: LMConfig, tokens, *, chunk: int = 4096):
+    """Chunked (Sarathi-style) prefill: the sequence is processed in fixed
+    chunks so per-chunk MoE dispatch buffers stay bounded — what makes the
+    32k-prefill cells of the MoE archs memory-feasible (DESIGN §4).
+
+    Returns (last-position logits (B, V), cache {k, v, len}) like prefill().
+    """
+    B, S = tokens.shape
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cache_k = jnp.zeros((cfg.n_layers, B, Hkv, S, hd), jnp.bfloat16)
+    cache_v = jnp.zeros_like(cache_k)
+
+    def chunk_body(carry, ci):
+        ck, cv, _ = carry
+        toks = jax.lax.dynamic_slice(tokens, (0, ci * chunk), (B, chunk))
+        x = jnp.take(params["embed"], toks, axis=0) * cfg.emb_scale
+        positions = ci * chunk + jnp.arange(chunk)
+        kv_len = jnp.full((B,), (ci + 1) * chunk, jnp.int32)
+
+        def layer_body(inner, inp):
+            # caches ride in the carry (in-place per-layer updates alias
+            # in the while loop; scan xs/ys would keep input+output cache
+            # stacks live simultaneously — see decode_step)
+            x, ck, cv = inner
+            p, li = inp
+            kc = ck[li]
+            vc = cv[li]
+            h = rms_norm(x, p["ln1"])
+            q = h @ p["wq"]
+            k = h @ p["wk"]
+            v = h @ p["wv"]
+            if cfg.qkv_bias:
+                q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+            q = q.reshape(B, chunk, H, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(B, chunk, Hkv, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(B, chunk, Hkv, hd).transpose(0, 2, 1, 3)
+            q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+            k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (0, 0, ci * chunk, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (0, 0, ci * chunk, 0))
+            # attend to everything cached so far; kv_len masks the unfilled
+            # tail, q_offset = chunk start gives in-chunk causality
+            out = blockwise_attention(
+                q, kc.astype(q.dtype), vc.astype(q.dtype), causal=True,
+                window=cfg.window, kv_len=kv_len, q_offset=ci * chunk)
+            out = out.transpose(0, 2, 1, 3).reshape(B, chunk, H * hd)
+            x = x + (out @ p["wo"]) * cfg.residual_scale
+            h2 = rms_norm(x, p["ln2"])
+            if cfg.n_experts:
+                y, _ = _moe_ffn(p, h2.reshape(B * chunk, -1), cfg)
+            else:
+                y, _ = _dense_ffn(p, h2.reshape(B * chunk, -1))
+            x = x + y.reshape(B, chunk, -1) * cfg.residual_scale
+            ck = jax.lax.dynamic_update_index_in_dim(ck, kc, li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, vc, li, 0)
+            return (x, ck, cv), None
+
+        body = jax.checkpoint(layer_body) if cfg.remat else layer_body
+        (x, ck, cv), _ = jax.lax.scan(
+            body, (x, ck, cv),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        return (ck, cv, x[:, -1]), None
+
+    x0_last = jnp.zeros((B, cfg.d_model), jnp.dtype(cfg.dtype))
+    (cache_k, cache_v, x_last), _ = jax.lax.scan(
+        chunk_body, (cache_k, cache_v, x0_last), jnp.arange(n_chunks))
+    x_last = rms_norm(x_last, params["ln_f"])
+    logits = (x_last @ params["lm_head"]) * cfg.logit_scale
+    return logits, {"k": cache_k, "v": cache_v, "len": jnp.int32(S)}
+
+
+# --------------------------------------------------------------- decode ----
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.int32(0),
+    }
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens):
+    """One token for every sequence. tokens (B, 1) -> (next (B, 1), cache).
+
+    With cfg.window > 0 the cache is a ring buffer of size window (what makes
+    long_500k decoding O(window) — see DESIGN §4).
+    """
+    B = tokens.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["len"]
+    max_len = cache["k"].shape[3]
+    slot = pos % max_len if cfg.window > 0 else jnp.minimum(pos, max_len - 1)
+
+    x = jnp.take(params["embed"], tokens, axis=0) * cfg.emb_scale  # (B,1,d)
+
+    # absolute positions stored in each cache slot (ring-buffer aware);
+    # after this step's write, slot ``slot`` holds position ``pos`` which the
+    # formula already yields ((pos - slot) % max_len == 0).
+    slots = jnp.arange(max_len)
+    if cfg.window > 0:
+        kpos = pos - ((pos - slots) % max_len)
+    else:
+        kpos = slots
+    kv_valid = (kpos >= 0) & (kpos <= pos)
+
+    def body(carry, inp):
+        # NOTE: the caches ride in the CARRY (updated in place per layer),
+        # not in scan xs/ys — while-loop carries alias in HLO, so the cache
+        # stays single-resident. The xs/ys form kept input+output stacks
+        # live simultaneously (2x cache + an unaliased update chain;
+        # EXPERIMENTS §Perf).
+        x, ck, cv = carry
+        p, li = inp
+        kc = ck[li]
+        vc = cv[li]
+        h = rms_norm(x, p["ln1"])
+        q = h @ p["wq"]
+        k = h @ p["wk"]
+        v = h @ p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = q.reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, jnp.full((1, 1, 1), pos), cfg.rope_theta)
+        k = apply_rope(k, jnp.full((1, 1, 1), pos), cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.astype(kc.dtype), (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.astype(vc.dtype), (0, 0, slot, 0))
+        # decode attention: masked einsum over the cache; scores in the
+        # cache dtype (bf16) with f32 accumulation — no f32 cache copies,
+        # and the S contraction keeps sequence-sharded caches sharded
+        # (a blockwise/chunked variant was tried and REVERTED: its chunk
+        # reshape breaks the S-sharding and forces per-layer cache
+        # all-gathers — EXPERIMENTS §Perf)
+        qg = q.reshape(B, Hkv, H // Hkv, 1, hd)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(kc.dtype), kc,
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+        mask = kv_valid & (kpos <= pos)
+        if cfg.window > 0:
+            mask = mask & (kpos > pos - cfg.window)
+        s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(kc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(B, H, 1, hd).transpose(0, 2, 1, 3).reshape(
+            B, 1, H * hd)
+        x = x + (out.astype(x.dtype) @ p["wo"]) * cfg.residual_scale
+        h2 = rms_norm(x, p["ln2"])
+        if cfg.n_experts:
+            y, _ = _moe_ffn(p, h2.reshape(B, -1), cfg)
+        else:
+            y, _ = _dense_ffn(p, h2.reshape(B, -1))
+        x = x + y.reshape(B, 1, -1) * cfg.residual_scale
+        ck = jax.lax.dynamic_update_index_in_dim(ck, kc, li, 0)
+        cv = jax.lax.dynamic_update_index_in_dim(cv, vc, li, 0)
+        return (x, ck, cv), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["lm_head"]) * cfg.logit_scale
+    next_tok = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+    return next_tok, {"k": ks, "v": vs, "len": pos + 1}

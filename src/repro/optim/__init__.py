@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import wsd_schedule, cosine_schedule, linear_warmup
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "wsd_schedule", "cosine_schedule", "linear_warmup",
+    "clip_by_global_norm",
+]

@@ -1,0 +1,21 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Global-norm clip without materializing f32 copies of bf16 leaves.
+
+    The squared-norm reduction accumulates in f32 (``dtype=``) while the
+    elementwise square stays in the leaf dtype — bf16 has the full f32
+    exponent range, so no under/overflow, and the mantissa loss is
+    irrelevant for a clipping threshold.  The old ``g.astype(f32)``
+    formulation materialized a 6 GiB f32 copy of grok's biggest leaf
+    (EXPERIMENTS §Perf).
+    """
+    leaves = jax.tree.leaves(grads)
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(g), dtype=jnp.float32)
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), total

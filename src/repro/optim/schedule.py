@@ -1,0 +1,27 @@
+"""LR schedules. WSD (warmup-stable-decay) is the MiniCPM schedule
+(arXiv:2404.06395) assigned to that architecture's config."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int):
+    return jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+
+
+def wsd_schedule(step, *, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    """Warmup -> flat -> exponential-ish (linear here) decay to final_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    decay_mult = 1.0 - (1.0 - final_frac) * in_decay
+    return jnp.where(s < warmup, warm, decay_mult)
+
+
+def cosine_schedule(step, *, warmup: int, total: int, final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, cos)

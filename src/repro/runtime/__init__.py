@@ -1,0 +1,15 @@
+from repro.runtime.loop import TrainLoop, LoopConfig, StepResult
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.compression import (
+    compress_int8, decompress_int8, compressed_allreduce_spec,
+    ErrorFeedbackState, init_error_feedback, compress_with_feedback,
+)
+from repro.runtime.elastic import reshard_tree, ElasticPlan
+
+__all__ = [
+    "TrainLoop", "LoopConfig", "StepResult",
+    "StragglerMonitor",
+    "compress_int8", "decompress_int8", "compressed_allreduce_spec",
+    "ErrorFeedbackState", "init_error_feedback", "compress_with_feedback",
+    "reshard_tree", "ElasticPlan",
+]

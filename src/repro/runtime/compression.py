@@ -1,0 +1,69 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Opt-in wrapper around the data-parallel gradient reduction: each leaf is
+quantized to int8 with a per-leaf max-abs scale before the all-reduce, and
+the quantization residual is carried to the next step (error feedback — the
+standard fix that keeps SGD/Adam convergence intact, cf. 1-bit SGD /
+EF-SignSGD lineage).  4x less DP all-reduce traffic; EXPERIMENTS §Perf
+quantifies the collective-term change on the hillclimbed cells.
+
+Implementation notes: the quantize/dequantize pair is jit-safe pure jnp and
+runs *inside* the train step; on a real mesh the all-reduce then moves int8.
+(GSPMD reduces over the quantized tensors via psum of dequantized partials
+within shard_map — see launch/train.py wiring.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x):
+    """-> (q int8, scale f32 ()) with symmetric max-abs scaling."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: dict
+
+
+def init_error_feedback(grads):
+    return {"residual": jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)}
+
+
+def compress_with_feedback(grads, ef_state):
+    """Quantize (grad + residual); residual' = input - dequantized.
+
+    Returns (quantized tree of (q, scale) pairs, new ef_state).
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = jax.tree.leaves(ef_state["residual"])
+    q_out, res_out = [], []
+    for g, r in zip(g_leaves, r_leaves):
+        x = g.astype(jnp.float32) + r
+        q, s = compress_int8(x)
+        q_out.append((q, s))
+        res_out.append(x - decompress_int8(q, s))
+    return (jax.tree.unflatten(treedef, q_out),
+            {"residual": jax.tree.unflatten(treedef, res_out)})
+
+
+def compressed_allreduce_spec(grads_bytes_f32: int) -> dict:
+    """Napkin model of the collective-term saving (EXPERIMENTS §Perf)."""
+    return {
+        "fp32_bytes": grads_bytes_f32,
+        "int8_bytes": grads_bytes_f32 // 4,
+        "saving": 4.0,
+    }

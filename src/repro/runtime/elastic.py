@@ -1,0 +1,60 @@
+"""Elastic re-meshing: restore a checkpoint into a different mesh.
+
+Checkpoints store logical (un-sharded) arrays, so elasticity is just
+"device_put with the new sharding".  ``ElasticPlan`` captures the mapping
+from a tree of logical arrays to NamedSharding specs for the *current* mesh;
+``reshard_tree`` applies it.  Scaling the data axis up/down between runs
+changes only the plan, not the checkpoint (EXPERIMENTS exercises 8->4 and
+4->8 device restores on the host-platform mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh: Mesh
+    spec_fn: Callable  # leaf path tuple -> PartitionSpec
+
+    def sharding_for(self, path) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_fn(path))
+
+
+def _paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from _paths(tree[k], prefix + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _paths(v, prefix + (i,))
+    else:
+        yield prefix, tree
+
+
+def reshard_tree(tree, plan: ElasticPlan):
+    """device_put every leaf with the plan's sharding for its path."""
+    flat = list(_paths(tree))
+    out_leaves = [
+        jax.device_put(leaf, plan.sharding_for(path)) for path, leaf in flat
+    ]
+    # rebuild structure
+    it = iter(out_leaves)
+
+    def rebuild(t):
+        if isinstance(t, dict):
+            return {k: rebuild(t[k]) for k in sorted(t.keys())}
+        if isinstance(t, (list, tuple)):
+            vals = [rebuild(v) for v in t]
+            return vals if isinstance(t, list) else tuple(vals)
+        return next(it)
+
+    return rebuild(tree)
+
+
+def replicated_plan(mesh: Mesh) -> ElasticPlan:
+    return ElasticPlan(mesh=mesh, spec_fn=lambda path: P())

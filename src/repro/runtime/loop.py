@@ -1,0 +1,130 @@
+"""Fault-tolerant training loop: checkpoint/restart, retry, straggler watch.
+
+The loop owns nothing model-specific: it drives a ``step_fn(state, batch) ->
+(state, metrics)`` (already jitted/sharded by the caller), a batch source
+``batch_fn(step) -> batch`` (pure function of step — restart-safe), and a
+CheckpointManager.
+
+Failure handling:
+  * a step raising an exception (device OOM, interconnect error, injected
+    fault) is retried up to ``max_retries`` from the last good state;
+  * if retries are exhausted, the loop restores from the newest checkpoint
+    and replays forward (batches are pure functions of the step index, so
+    replay is bitwise-deterministic on the same mesh);
+  * the StragglerMonitor flags slow steps; after 3 consecutive flags the
+    loop checkpoints immediately and raises ``RemeshRequested`` so the
+    launcher can rebuild the mesh without the straggling host (elastic.py
+    handles restoring into the smaller mesh).
+
+``inject_fault`` (step -> bool) exists for tests: it makes the loop's
+recovery paths unit-testable on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint.store import CheckpointManager
+from repro.runtime.straggler import StragglerMonitor
+
+
+class RemeshRequested(RuntimeError):
+    """Raised when persistent straggling suggests a sick host; the launcher
+    should rebuild the mesh and resume from the checkpoint just written."""
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    checkpoint_dir: str
+    save_every: int = 100
+    keep: int = 3
+    max_retries: int = 2
+    log_every: int = 10
+    straggler_threshold: float = 2.0
+
+
+@dataclasses.dataclass
+class StepResult:
+    step: int
+    metrics: dict
+    step_time: float
+    retried: int = 0
+    restored: bool = False
+
+
+class TrainLoop:
+    def __init__(self, cfg: LoopConfig, step_fn: Callable,
+                 batch_fn: Callable, init_fn: Callable,
+                 inject_fault: Optional[Callable] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.init_fn = init_fn
+        self.inject_fault = inject_fault
+        self.manager = CheckpointManager(
+            cfg.checkpoint_dir, save_every=cfg.save_every, keep=cfg.keep)
+        self.monitor = StragglerMonitor(threshold=cfg.straggler_threshold)
+        self.history: list[StepResult] = []
+        self.recoveries = 0
+
+    # -- single step with retry + restore-from-checkpoint ------------------
+    def _run_step(self, step: int, state):
+        retries = 0
+        restored = False
+        while True:
+            try:
+                if self.inject_fault is not None and \
+                        self.inject_fault(step, retries):
+                    raise RuntimeError(f"injected fault at step {step}")
+                batch = self.batch_fn(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                metrics = jax.tree.map(
+                    lambda x: x.block_until_ready()
+                    if hasattr(x, "block_until_ready") else x, metrics)
+                dt = time.perf_counter() - t0
+                return state, metrics, dt, retries, restored
+            except RemeshRequested:
+                raise
+            except Exception:
+                retries += 1
+                if retries <= self.cfg.max_retries:
+                    continue
+                # retries exhausted -> restore newest checkpoint
+                ck_step, tree = self.manager.restore_or_init(self.init_fn)
+                if isinstance(tree, tuple) and len(tree) == 2 and \
+                        isinstance(tree[1], dict) and "state" in tree[1]:
+                    state = tree[1]["state"]
+                else:
+                    state = tree if ck_step else self.init_fn()
+                self.recoveries += 1
+                retries = 0
+                restored = True
+                if ck_step < step:
+                    # replay forward deterministically to ``step``
+                    for s in range(ck_step, step):
+                        state, _ = self.step_fn(state, self.batch_fn(s))
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, start_state=None, start_step: int = 0):
+        if start_state is None:
+            start_step, start_state = self.manager.restore_or_init(
+                self.init_fn)
+        state = start_state
+        for step in range(start_step, self.cfg.total_steps):
+            state, metrics, dt, retried, restored = self._run_step(step, state)
+            flagged = self.monitor.observe(step, dt)
+            self.history.append(StepResult(step, metrics, dt, retried,
+                                           restored))
+            self.manager.maybe_save(step + 1, state)
+            if flagged and self.monitor.unhealthy:
+                self.manager.save(step + 1, state)
+                raise RemeshRequested(
+                    f"persistent straggling at step {step} "
+                    f"(ewma {self.monitor.ewma:.4f}s)")
+        self.manager.save(self.cfg.total_steps, state)
+        return state

@@ -1,0 +1,45 @@
+"""Straggler detection via step-time EWMA (runtime-layer load balancing).
+
+The paper balances work by producer-consumer stealing inside a shared-memory
+node; SPMD is lockstep so imbalance shows up as *whole-step* slowdown
+attributable to the slowest participant. The monitor keeps an EWMA and
+flags steps slower than ``threshold`` x the smoothed time; the loop reacts by
+(a) logging the event, (b) optionally re-planning microbatch assignment at
+the next step boundary (callback), and (c) counting consecutive flags so the
+fault-tolerant loop can trigger a checkpoint + re-mesh when a chip is sick.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.2           # EWMA weight of the newest sample
+    threshold: float = 2.0       # flag if step_time > threshold * ewma
+    warmup_steps: int = 3        # ignore compile-dominated first steps
+    ewma: float = 0.0
+    seen: int = 0
+    consecutive_flags: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, step_time: float) -> bool:
+        """Record one step; returns True if flagged as straggling."""
+        self.seen += 1
+        if self.seen <= self.warmup_steps:
+            self.ewma = step_time
+            return False
+        flagged = step_time > self.threshold * max(self.ewma, 1e-9)
+        # EWMA excludes flagged outliers so one hiccup doesn't mask the next
+        if not flagged:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
+            self.consecutive_flags = 0
+        else:
+            self.consecutive_flags += 1
+            self.events.append((step, step_time, self.ewma))
+        return flagged
+
+    @property
+    def unhealthy(self) -> bool:
+        """3+ consecutive straggling steps — the re-mesh trigger."""
+        return self.consecutive_flags >= 3

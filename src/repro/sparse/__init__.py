@@ -1,0 +1,38 @@
+"""Sparse/ragged primitives shared by IMM counters, GNN message passing and
+recsys embedding lookups.
+
+JAX has no native EmbeddingBag or CSR/CSC sparse support (BCOO only), so the
+message-passing / bag-reduce primitives are built here from ``jnp.take`` +
+``jax.ops.segment_sum`` — this layer IS part of the system (see DESIGN §3).
+"""
+from repro.sparse.segment import (
+    segment_sum,
+    segment_max,
+    segment_mean,
+    segment_softmax,
+    sorted_segment_sum,
+)
+from repro.sparse.scatter import (
+    scatter_add,
+    scatter_or,
+    bincount_weighted,
+    one_hot_matmul_count,
+)
+from repro.sparse.embedding_bag import (
+    embedding_bag,
+    sharded_embedding_lookup,
+)
+
+__all__ = [
+    "segment_sum",
+    "segment_max",
+    "segment_mean",
+    "segment_softmax",
+    "sorted_segment_sum",
+    "scatter_add",
+    "scatter_or",
+    "bincount_weighted",
+    "one_hot_matmul_count",
+    "embedding_bag",
+    "sharded_embedding_lookup",
+]

@@ -1,0 +1,66 @@
+"""EmbeddingBag built from gather + segment reduce (JAX has no native one).
+
+Two variants:
+  * ``embedding_bag`` — single-device: ``jnp.take`` + segment reduce.
+  * ``sharded_embedding_lookup`` — table row-sharded across a mesh axis
+    (the recsys "huge table" case and the paper's NUMA-interleaving analogue):
+    every shard gathers the rows it owns (others contribute zero) and the
+    partials are ``psum``-combined — identical structure to the EfficientIMM
+    partial-counter reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_sum, segment_max, segment_mean
+
+
+def embedding_bag(table, indices, offsets=None, mode: str = "sum"):
+    """torch.nn.EmbeddingBag semantics.
+
+    table: (vocab, dim). indices: (nnz,) int32. offsets: (bags,) start offset
+    per bag (None → indices is (bags, fixed_len) multi-hot).
+    Padding index == vocab contributes zero.
+    """
+    vocab, dim = table.shape
+    if offsets is None:
+        bags, L = indices.shape
+        flat = indices.reshape(-1)
+        seg = jnp.repeat(jnp.arange(bags, dtype=jnp.int32), L)
+    else:
+        (nnz,) = indices.shape
+        bags = offsets.shape[0]
+        positions = jnp.arange(nnz, dtype=jnp.int32)
+        seg = jnp.searchsorted(offsets, positions, side="right").astype(jnp.int32) - 1
+        flat = indices
+    safe = jnp.clip(flat, 0, vocab - 1)
+    rows = jnp.take(table, safe, axis=0)
+    valid = (flat >= 0) & (flat < vocab)
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    if mode == "sum":
+        return segment_sum(rows, seg, bags)
+    if mode == "mean":
+        return segment_mean(rows, seg, bags)
+    if mode == "max":
+        out = segment_max(jnp.where(valid[:, None], rows, -jnp.inf), seg, bags)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def sharded_embedding_lookup(local_table, global_indices, *, axis_name: str,
+                             shard_rows: int):
+    """Gather rows from a row-sharded table inside ``shard_map``.
+
+    local_table: (shard_rows, dim) — this shard's contiguous row block.
+    global_indices: any int32 shape of *global* row ids (replicated).
+    Returns the full gathered embeddings, combined across ``axis_name``.
+    """
+    shard = jax.lax.axis_index(axis_name)
+    lo = shard * shard_rows
+    local_ids = global_indices - lo
+    hit = (local_ids >= 0) & (local_ids < shard_rows)
+    safe = jnp.clip(local_ids, 0, shard_rows - 1)
+    rows = jnp.take(local_table, safe, axis=0)
+    rows = jnp.where(hit[..., None], rows, 0.0)
+    return jax.lax.psum(rows, axis_name)

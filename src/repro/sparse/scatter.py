@@ -1,0 +1,44 @@
+"""Scatter patterns used by the IMM counters and GNN aggregation.
+
+``bincount_weighted`` is the vertex-occurrence counter of Algorithm 2
+(EfficientIMM Find_Most_Influential_Set): every RRRset scatters +1 into the
+global counter for each member vertex. Padding uses the sentinel id
+``num_buckets`` which lands in a dropped overflow bucket.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_sum, segment_max
+
+
+def scatter_add(target, idx, updates):
+    """target.at[idx].add(updates) with out-of-range drop semantics."""
+    return target.at[idx].add(updates, mode="drop")
+
+
+def scatter_or(target, idx, updates):
+    return target.at[idx].max(updates, mode="drop")
+
+
+def bincount_weighted(idx, weights, num_buckets: int):
+    """Weighted histogram: out[b] = sum_i weights[i] * [idx[i] == b].
+
+    idx may contain the sentinel value ``num_buckets`` (padding) — dropped.
+    Works for any idx shape; weights must broadcast against idx.
+    """
+    flat_idx = idx.reshape(-1)
+    flat_w = jnp.broadcast_to(weights, idx.shape).reshape(-1)
+    return segment_sum(flat_w, flat_idx, num_buckets)
+
+
+def one_hot_matmul_count(idx, weights, num_buckets: int, dtype=jnp.float32):
+    """Dense-friendly counter: onehot(idx) contracted with weights on the MXU.
+
+    Mathematically identical to ``bincount_weighted``; preferred on TPU when
+    idx blocks are small and the bucket axis is sharded (the adaptive dense
+    branch of DESIGN §2 C4).
+    """
+    onehot = (idx[..., None] == jnp.arange(num_buckets, dtype=idx.dtype)).astype(dtype)
+    w = jnp.broadcast_to(weights, idx.shape).astype(dtype)
+    return jnp.einsum("...n,...->n", onehot, w)

@@ -1,0 +1,53 @@
+"""Segment reductions — the reduce-by-key primitive.
+
+This is the TPU analogue of EfficientIMM's atomic counter update: a thread's
+``lock incq`` scatter becomes a (vectorized) segment reduction over the keys
+owned by this shard, followed by a cross-shard ``psum`` at the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    """Sum ``data`` rows into ``num_segments`` buckets keyed by ``segment_ids``.
+
+    Out-of-range ids (e.g. padding set to ``num_segments``) are dropped.
+    """
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=False
+    )
+
+
+def sorted_segment_sum(data, segment_ids, num_segments: int):
+    """Variant asserting pre-sorted ids (dst-block partitioned edge lists)."""
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=True
+    )
+
+
+def segment_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments: int):
+    total = segment_sum(data, segment_ids, num_segments)
+    ones = jnp.ones(data.shape[:1], dtype=total.dtype)
+    count = segment_sum(ones, segment_ids, num_segments)
+    count = jnp.maximum(count, 1)
+    if total.ndim > count.ndim:
+        count = count.reshape(count.shape + (1,) * (total.ndim - count.ndim))
+    return total / count
+
+
+def segment_softmax(logits, segment_ids, num_segments: int):
+    """Softmax over variable-length segments (GAT-style edge softmax)."""
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    # Out-of-range padding rows see -inf max; guard with finite fill.
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    denom = segment_sum(expd, segment_ids, num_segments)
+    denom = jnp.maximum(denom, 1e-30)
+    return expd / denom[segment_ids]

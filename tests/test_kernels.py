@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------ coverage_matvec ----
+
+@pytest.mark.parametrize("theta,n", [(64, 100), (300, 700), (1024, 512),
+                                     (257, 1000), (1, 33)])
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.int8])
+def test_coverage_matvec_sweep(theta, n, dtype):
+    key = jax.random.PRNGKey(theta * 7 + n)
+    R = (jax.random.uniform(key, (theta, n)) < 0.3).astype(dtype)
+    alive = jax.random.uniform(jax.random.PRNGKey(1), (theta,)) < 0.7
+    got = ops.coverage_matvec(alive, R, interpret=True)
+    want = ref.coverage_matvec_ref(alive, R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("tile_theta,tile_n", [(64, 128), (256, 512),
+                                               (128, 256)])
+def test_coverage_matvec_tilings(tile_theta, tile_n):
+    key = jax.random.PRNGKey(0)
+    R = (jax.random.uniform(key, (500, 900)) < 0.2).astype(jnp.uint8)
+    alive = jax.random.uniform(jax.random.PRNGKey(1), (500,)) < 0.5
+    got = ops.coverage_matvec(alive, R, interpret=True,
+                              tile_theta=tile_theta, tile_n=tile_n)
+    want = ref.coverage_matvec_ref(alive, R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------- fused_select ----
+
+@pytest.mark.parametrize("theta,n", [(64, 100), (513, 300), (256, 2000)])
+def test_fused_select_sweep(theta, n):
+    key = jax.random.PRNGKey(theta + n)
+    R = (jax.random.uniform(key, (theta, n)) < 0.25).astype(jnp.uint8)
+    alive = jax.random.uniform(jax.random.PRNGKey(2), (theta,)) < 0.8
+    mx, idx = ops.fused_select(alive, R, interpret=True)
+    mref, iref = ref.fused_select_ref(alive, R)
+    assert float(mx) == float(mref)
+    # argmax may differ only among ties
+    counter = np.asarray(ref.coverage_matvec_ref(alive, R))
+    assert counter[int(idx)] == float(mref)
+
+
+def test_fused_select_empty_alive():
+    R = jnp.ones((32, 64), jnp.uint8)
+    alive = jnp.zeros((32,), bool)
+    mx, idx = ops.fused_select(alive, R, interpret=True)
+    assert float(mx) == 0.0
+    assert 0 <= int(idx) < 64
+
+
+# ------------------------------------------------------------ ic_frontier ----
+
+@pytest.mark.parametrize("B,n", [(16, 64), (64, 200), (128, 513)])
+def test_ic_frontier_sweep(B, n):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B + n), 3)
+    frontier = jax.random.uniform(k1, (B, n)) < 0.1
+    visited = jnp.logical_or(frontier,
+                             jax.random.uniform(k2, (B, n)) < 0.2)
+    P = jnp.where(jax.random.uniform(k3, (n, n)) < 0.05,
+                  jax.random.uniform(k1, (n, n)), 0.0)
+    logq = jnp.maximum(jnp.log1p(-P), -30.0)
+    rand = jax.random.uniform(k2, (B, n))
+    got = ops.ic_frontier_step(frontier, visited, logq, rand,
+                               interpret=True)
+    want = ref.ic_frontier_ref(frontier, visited, logq, rand)
+    np.testing.assert_array_equal(np.asarray(got).astype(bool),
+                                  np.asarray(want))
+
+
+# --------------------------------------------------------- fm_interaction ----
+
+@pytest.mark.parametrize("B,F,K", [(32, 39, 10), (100, 8, 4), (1025, 16, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fm_interaction_sweep(B, F, K, dtype):
+    v = (jax.random.normal(jax.random.PRNGKey(B), (B, F, K)) * 0.3
+         ).astype(dtype)
+    got = ops.fm_interaction(v, interpret=True)
+    want = ref.fm_interaction_ref(v.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_fm_interaction_matches_explicit_pairwise():
+    """Sum-square trick == explicit sum_{i<j} <v_i, v_j>."""
+    v = jax.random.normal(jax.random.PRNGKey(0), (16, 6, 4))
+    got = ops.fm_interaction(v, interpret=True)
+    inner = jnp.einsum("bik,bjk->bij", v, v)
+    iu = jnp.triu_indices(6, k=1)
+    want = inner[:, iu[0], iu[1]].sum(-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------- flash_attention ----
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,D", [
+    (2, 8, 8, 64, 64, 32),       # MHA
+    (2, 8, 2, 64, 64, 32),       # GQA 4:1
+    (1, 4, 1, 128, 128, 64),     # MQA
+    (2, 4, 2, 1, 128, 64),       # decode shape
+    (1, 4, 4, 100, 100, 32),     # non-tile-multiple
+])
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Skv, D):
+    keys = jax.random.split(jax.random.PRNGKey(Sq + Skv), 3)
+    q = jax.random.normal(keys[0], (B, Hq, Sq, D))
+    k = jax.random.normal(keys[1], (B, Hkv, Skv, D))
+    v = jax.random.normal(keys[2], (B, Hkv, Skv, D))
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True,
+                              tile_q=32, tile_k=32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_flash_attention_sliding_window(window):
+    keys = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(keys[0], (1, 4, 96, 32))
+    k = jax.random.normal(keys[1], (1, 2, 96, 32))
+    v = jax.random.normal(keys[2], (1, 2, 96, 32))
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True, tile_q=32, tile_k=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (1, 4, 64, 32)).astype(dtype)
+    k = jax.random.normal(keys[1], (1, 4, 64, 32)).astype(dtype)
+    v = jax.random.normal(keys[2], (1, 4, 64, 32)).astype(dtype)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)

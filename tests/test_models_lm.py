@@ -1,0 +1,215 @@
+"""Transformer LM: forward/loss/prefill/decode consistency across paths."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.transformer import (
+    LMConfig, init_lm, lm_forward, lm_loss, prefill, prefill_chunked,
+    decode_step, init_kv_cache,
+)
+from repro.models.attention import blockwise_attention, apply_rope
+from repro.kernels import ref as kref
+
+
+CFG = LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+               vocab=128, remat=False)
+
+
+def _toks(b=2, s=24, vocab=128, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, vocab)
+
+
+def test_chunked_ce_matches_full_logits():
+    p = init_lm(jax.random.PRNGKey(0), CFG)
+    toks = _toks()
+    labels = jnp.concatenate(
+        [toks[:, 1:], jnp.full((2, 1), -1, toks.dtype)], 1)
+    logits, aux = lm_forward(p, CFG, toks)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = labels >= 0
+    want = (nll * mask).sum() / mask.sum() + CFG.aux_loss_weight * aux
+    got = lm_loss(p, CFG, toks, labels, ce_chunk=7)
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+def test_loss_grad_finite_all_variants():
+    for cfg in [
+        CFG,
+        LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                 vocab=128, qkv_bias=True, remat=False),
+        LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                 vocab=128, window=8, remat=False),
+        LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                 vocab=128, n_experts=4, top_k=2, remat=False),
+        LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                 vocab=128, emb_scale=12.0, residual_scale=0.3,
+                 logit_scale=0.1, remat=False),
+    ]:
+        p = init_lm(jax.random.PRNGKey(0), cfg)
+        toks = _toks(vocab=cfg.vocab)
+        loss, grads = jax.value_and_grad(lm_loss)(p, cfg, toks, toks)
+        assert np.isfinite(float(loss))
+        assert all(bool(jnp.isfinite(g).all())
+                   for g in jax.tree.leaves(grads))
+
+
+def test_remat_equals_no_remat():
+    cfg_r = LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                     d_ff=64, vocab=128, remat=True)
+    p = init_lm(jax.random.PRNGKey(0), CFG)
+    toks = _toks()
+    l1 = lm_loss(p, CFG, toks, toks)
+    l2 = lm_loss(p, cfg_r, toks, toks)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+
+
+def test_prefill_matches_forward_last_position():
+    p = init_lm(jax.random.PRNGKey(0), CFG)
+    toks = _toks()
+    logits_full, _ = lm_forward(p, CFG, toks)
+    logits_pre, cache = prefill(p, CFG, toks)
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=1e-4, atol=1e-5)
+    assert cache["k"].shape == (2, 2, 2, 24, 8)   # (L, B, Hkv, S, hd)
+
+
+@pytest.mark.parametrize("cfg,chunk", [
+    (CFG, 8),
+    (LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+              vocab=128, n_experts=4, top_k=2, capacity_factor=8.0,
+              remat=False), 12),
+    (LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+              vocab=128, window=8, remat=False), 8),
+])
+def test_chunked_prefill_matches_prefill(cfg, chunk):
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = _toks(s=24, vocab=cfg.vocab)
+    l1, _ = prefill(p, cfg, toks)
+    l2, _ = prefill_chunked(p, cfg, toks, chunk=chunk)
+    # bf16 KV-cache rounding bounds the divergence
+    assert np.max(np.abs(np.asarray(l1) - np.asarray(l2))) < 0.06
+
+
+def test_decode_matches_teacher_forcing():
+    """Greedy decode logits equal full-forward logits position by position."""
+    p = init_lm(jax.random.PRNGKey(0), CFG)
+    toks = _toks(b=1, s=10)
+    logits_full, _ = lm_forward(p, CFG, toks)
+    cache = init_kv_cache(CFG, 1, 16, dtype=jnp.float32)
+    preds = []
+    for i in range(10):
+        nxt, cache = decode_step(p, CFG, cache, toks[:, i:i + 1])
+        preds.append(int(nxt[0, 0]))
+    want = np.asarray(jnp.argmax(logits_full, -1))[0]
+    np.testing.assert_array_equal(np.array(preds), want)
+
+
+def test_swa_ring_buffer_decode():
+    """With window=W, decoding past W positions matches a fresh prefill of
+    the last W tokens (ring buffer correctness)."""
+    cfg = LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                   vocab=128, window=8, remat=False)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = _toks(b=1, s=20, vocab=128)
+    cache = init_kv_cache(cfg, 1, cfg.window, dtype=jnp.float32)
+    for i in range(20):
+        nxt, cache = decode_step(p, cfg, cache, toks[:, i:i + 1])
+    # reference: full forward with SWA, last position
+    logits_full, _ = lm_forward(p, cfg, toks)
+    want = int(jnp.argmax(logits_full[0, -1]))
+    assert int(nxt[0, 0]) == want
+
+
+def test_blockwise_attention_q_offset():
+    """Chunk-level causality: q_offset positions the queries absolutely."""
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    k = jax.random.normal(keys[1], (1, 2, 32, 8))
+    v = jax.random.normal(keys[2], (1, 2, 32, 8))
+    q_all = jax.random.normal(keys[0], (1, 2, 32, 8))
+    full = kref.attention_ref(q_all, k, v, causal=True)
+    # second 16-query chunk with offset 16 must equal rows 16: of the full
+    got = blockwise_attention(q_all[:, :, 16:], k, v, causal=True,
+                              chunk=8, q_offset=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, :, 16:]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rope_orthogonality():
+    """RoPE preserves norms and relative-position inner products."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 6, 16))
+    pos = jnp.arange(6)
+    y = apply_rope(x, pos[None, None, :])
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # <rope(a,i), rope(b,j)> depends only on (i - j)
+    a = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    b = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def ip(i, j):
+        ra = apply_rope(a, jnp.array([[[i]]]))
+        rb = apply_rope(b, jnp.array([[[j]]]))
+        return float(jnp.sum(ra * rb))
+    assert ip(3, 1) == pytest.approx(ip(7, 5), rel=1e-4)
+
+
+def test_param_count_formula_matches_init():
+    from repro.models.common import count_params
+    for cfg in (CFG,
+                LMConfig(n_layers=3, d_model=48, n_heads=6, n_kv_heads=2,
+                         d_ff=96, vocab=300, n_experts=4, top_k=2)):
+        p = init_lm(jax.random.PRNGKey(0), cfg)
+        # formula excludes qkv biases (zero-init) and router (counted)
+        got = count_params(p)
+        want = cfg.param_count()
+        assert abs(got - want) / want < 0.02, (got, want)
+
+
+def test_moe_shard_map_matches_dense_path():
+    """shard_map MoE ('ep' and the token-regathering 'tpe') == the GSPMD
+    dense dispatch on a 1-device mesh."""
+    import dataclasses
+    from repro.models import moe_sharded
+    cfg = LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+                   d_ff=64, vocab=128, n_experts=4, top_k=2, remat=False)
+    p = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = _toks(vocab=128)
+    l_ref = float(lm_loss(p, cfg, toks, toks))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    moe_sharded.MESH = mesh
+    for part in ("tpe", "ep"):
+        cfg2 = dataclasses.replace(cfg, moe_impl="shard_map",
+                                   moe_shard_axes=("data",),
+                                   moe_partition=part)
+        with mesh:
+            l = float(lm_loss(p, cfg2, toks, toks))
+            grads = jax.grad(lm_loss)(p, cfg2, toks, toks)
+        assert abs(l - l_ref) < 1e-4, (part, l, l_ref)
+        assert all(bool(jnp.isfinite(g).all())
+                   for g in jax.tree.leaves(grads))
+
+
+def test_sort_based_routing_matches_onehot_reference():
+    """Sort-based slot assignment == the dense one-hot cumsum reference."""
+    T, k, E, C = 64, 2, 8, 12
+    key = jax.random.PRNGKey(3)
+    gate_idx = jax.random.randint(key, (T, k), 0, E)
+    # reference: one-hot cumsum positions
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    flat_oh = onehot.reshape(T * k, E)
+    pos_ref = ((jnp.cumsum(flat_oh, axis=0) - flat_oh)
+               .reshape(T, k, E) * onehot).sum(-1).astype(jnp.int32)
+    # sort-based (transformer._moe_ffn internals)
+    flat_eid = gate_idx.reshape(-1)
+    order = jnp.argsort(flat_eid, stable=True)
+    sorted_eid = flat_eid[order]
+    seg_start = jnp.searchsorted(sorted_eid,
+                                 jnp.arange(E, dtype=sorted_eid.dtype))
+    pos_sorted = (jnp.arange(T * k, dtype=jnp.int32)
+                  - seg_start[sorted_eid].astype(jnp.int32))
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+    np.testing.assert_array_equal(np.asarray(pos.reshape(T, k)),
+                                  np.asarray(pos_ref))
