@@ -1,16 +1,28 @@
-"""End-to-end influence-maximization campaign (the paper's workload kind).
+"""End-to-end influence-maximization campaign on the InfluenceEngine.
 
-Picks seed users for a viral campaign on a YouTube-scale synthetic network,
-under both diffusion models, then Monte-Carlo-validates the influence
-estimate by simulating the IC diffusion from the chosen seeds.
+Plans a viral campaign on a YouTube-scale synthetic network the way a real
+campaign tool would: sample the RRR store ONCE per diffusion model, then
+answer a whole sweep of questions from it —
+
+  * budget sweep: best seed sets for several campaign sizes k
+    (``engine.select(k)``, no re-sampling between queries);
+  * what-if queries: sigma(S) for hand-picked candidate seed sets
+    (``engine.influence``), batched through one fused membership kernel;
+  * resumability: snapshot the sampled store, restore it in a fresh
+    engine, and keep querying (``engine.snapshot``/``restore``);
+
+and finally Monte-Carlo-validates the IC influence estimate by simulating
+the diffusion forward from the chosen seeds.
 
     PYTHONPATH=src python examples/influence_campaign.py
 """
+import tempfile
 import time
 
 import numpy as np
 
-from repro.core import imm, IMMConfig
+from repro.core import InfluenceEngine, IMMConfig
+from repro.configs.imm_snap import CAMPAIGN_KS
 from repro.graphs.datasets import scaled_snap
 
 
@@ -25,37 +37,65 @@ def simulate_ic(graph, seeds, n_trials: int = 50, seed: int = 1):
         live = rng.random(graph.m) < prob
         active = np.zeros(graph.n, bool)
         active[list(seeds)] = True
-        frontier = list(seeds)
-        while frontier:
+        while True:
             # forward edges whose src is active & live
             mask = live & active[src] & ~active[dst]
             nxt = np.unique(dst[mask])
             if nxt.size == 0:
                 break
             active[nxt] = True
-            frontier = nxt
         total += active.sum()
     return total / n_trials
 
 
 def main():
-    print("building YouTube-scale synthetic network (1% replica)...")
+    print("building YouTube-scale synthetic network (replica)...")
     g = scaled_snap("com-YouTube", 0.004)
     print(f"  n={g.n:,} m={g.m:,}")
 
+    ks = [k for k in CAMPAIGN_KS if k <= 20]
     for model in ("IC", "LT"):
+        engine = InfluenceEngine(
+            g, IMMConfig(k=max(ks), eps=0.5, model=model, max_theta=8192))
         t0 = time.time()
-        res = imm(g, IMMConfig(k=20, eps=0.5, model=model,
-                               max_theta=8192))
-        dt = time.time() - t0
-        print(f"\n[{model}] {dt:.1f}s  theta={res.theta}  "
+        res = engine.run()
+        t_solve = time.time() - t0
+        print(f"\n[{model}] solved in {t_solve:.1f}s  theta={res.theta}  "
               f"rep={res.representation}")
-        print(f"  top seeds: {list(res.seeds[:8])}")
-        print(f"  estimated influence: {res.influence:.0f} nodes")
+
+        # --- budget sweep: every k answered from the same sampled store ---
+        t0 = time.time()
+        for k in ks:
+            sel = engine.select(k)
+            print(f"  k={k:>3}: influence={sel.influence:8.0f}  "
+                  f"seeds={[int(v) for v in sel.seeds[:6]]}")
+        print(f"  (budget sweep over {len(ks)} campaign sizes: "
+              f"{time.time() - t0:.2f}s, zero extra sampling)")
+
+        # --- what-if: compare the solver's picks against naive candidates ---
+        top = engine.select(ks[-1])
+        degree_hubs = np.argsort(np.asarray(engine.store.counter))[-ks[-1]:]
+        sigma_opt, sigma_hub = engine.influences(
+            [top.seeds, degree_hubs]).tolist()
+        print(f"  what-if: greedy seeds -> {sigma_opt:.0f}, "
+              f"top-counter hubs -> {sigma_hub:.0f}")
+
         if model == "IC":
-            mc = simulate_ic(g, res.seeds, n_trials=20)
+            mc = simulate_ic(g, top.seeds, n_trials=20)
             print(f"  Monte-Carlo validation: {mc:.0f} nodes "
-                  f"({abs(mc - res.influence) / max(mc, 1) * 100:.1f}% gap)")
+                  f"({abs(mc - top.influence) / max(mc, 1) * 100:.1f}% gap)")
+
+        # --- resumability: a fresh engine picks up the sampled store ---
+        if model == "IC":
+            with tempfile.TemporaryDirectory() as ckpt_dir:
+                engine.snapshot(ckpt_dir)
+                engine2 = InfluenceEngine(
+                    g, IMMConfig(k=max(ks), model=model, max_theta=8192))
+                engine2.restore(ckpt_dir)
+                sel2 = engine2.select(ks[0])
+                same = list(sel2.seeds) == list(engine.select(ks[0]).seeds)
+                print(f"  snapshot/restore: restored theta={engine2.theta}, "
+                      f"select(k={ks[0]}) identical: {same}")
 
 
 if __name__ == "__main__":

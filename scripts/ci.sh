@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: bytecode-compile everything under src, then run the fast
+# test suite (slow production cells are deselected; run them explicitly
+# with `pytest -m slow`).  Extra args pass through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q -m "not slow" "$@"

@@ -1,7 +1,12 @@
 from repro.checkpoint.store import (
     save_checkpoint,
     load_checkpoint,
+    save_named,
+    load_named,
     CheckpointManager,
 )
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint", "load_checkpoint", "save_named", "load_named",
+    "CheckpointManager",
+]

@@ -77,30 +77,62 @@ def _is_writer() -> bool:
         return True
 
 
-def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3):
-    """Atomic write of ``tree`` at ``step``; prunes to ``keep`` newest."""
-    if not _is_writer():
-        return None
+def _write_npz(directory: str, fname: str, tree) -> str:
+    """Atomic npz write of a flattened pytree to ``<directory>/<fname>``."""
     os.makedirs(directory, exist_ok=True)
     spec, leaves = _flatten(tree)
     # device -> host transfer happens here (np.asarray in _flatten)
-    fname = os.path.join(directory, f"step_{step:010d}.npz")
+    dest = os.path.join(directory, fname)
     # NOTE: np.savez appends ".npz" when missing — keep the suffix on the
     # temp name so the atomic rename moves the real payload.
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
     os.close(fd)
     try:
         np.savez(tmp, __spec__=json.dumps(spec), **leaves)
-        os.replace(tmp, fname)
+        os.replace(tmp, dest)
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
+    return dest
+
+
+def _read_npz(path: str):
+    with np.load(path, allow_pickle=False) as z:
+        spec = json.loads(str(z["__spec__"]))
+        leaves = {k: z[k] for k in z.files if k != "__spec__"}
+    return _unflatten(spec, leaves)
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3):
+    """Atomic write of ``tree`` at ``step``; prunes to ``keep`` newest."""
+    if not _is_writer():
+        return None
+    fname = _write_npz(directory, f"step_{step:010d}.npz", tree)
     with open(os.path.join(directory, "latest.tmp"), "w") as f:
         f.write(str(step))
     os.replace(os.path.join(directory, "latest.tmp"),
                os.path.join(directory, "latest"))
     _prune(directory, keep)
     return fname
+
+
+def save_named(directory: str, name: str, tree):
+    """Atomic write of ``tree`` under a stable name (no step counter, no
+    retention) — single-slot snapshots like `InfluenceEngine.snapshot` that
+    are overwritten in place rather than rolled."""
+    if not _is_writer():
+        return None
+    if _SEP in name or name.startswith("step_"):
+        raise ValueError(f"invalid snapshot name {name!r}")
+    return _write_npz(directory, f"{name}.npz", tree)
+
+
+def load_named(directory: str, name: str):
+    """Read a `save_named` snapshot; returns None when absent."""
+    path = os.path.join(directory, f"{name}.npz")
+    if not os.path.exists(path):
+        return None
+    return _read_npz(path)
 
 
 def _list_steps(directory: str):
@@ -149,11 +181,7 @@ def load_checkpoint(directory: str, step: int | None = None):
     step = latest_step(directory) if step is None else step
     if step is None:
         return None, None
-    fname = os.path.join(directory, f"step_{step:010d}.npz")
-    with np.load(fname, allow_pickle=False) as z:
-        spec = json.loads(str(z["__spec__"]))
-        leaves = {k: z[k] for k in z.files if k != "__spec__"}
-    return step, _unflatten(spec, leaves)
+    return step, _read_npz(os.path.join(directory, f"step_{step:010d}.npz"))
 
 
 class CheckpointManager:

@@ -4,13 +4,21 @@ Each entry pairs the SNAP graph stats with the paper's hyper-parameters
 (k=50, eps=0.5) and the CPU-scale replica factor the benchmarks use.
 ``imm_dryrun_shapes`` defines the sharded-IMM cells the dry-run lowers
 (theta x |V| bitmap selection + IC sampling steps on the production mesh).
+``campaign_ks`` is the multi-query sweep a shared `InfluenceEngine` store
+answers after one sampling pass (examples/influence_campaign.py and the
+IMServer workload in launch/serve.py).
 """
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.imm import IMMConfig
+from repro.core.engine import IMMConfig
 from repro.graphs.datasets import SNAP_STATS
+
+# seed-set sizes an influence campaign sweeps against one sampled store —
+# the engine memoizes per-k selections, so the sweep costs one selection
+# kernel per k and zero additional sampling
+CAMPAIGN_KS = (5, 10, 20, 50)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,6 +30,7 @@ class IMMExperiment:
     cfg_ic: IMMConfig
     cfg_lt: IMMConfig
     bench_scale: float        # CPU benchmark shrink factor
+    campaign_ks: tuple = CAMPAIGN_KS
 
 
 def _mk(graph: str, bench_scale: float) -> IMMExperiment:
@@ -60,4 +69,18 @@ IMM_DRYRUN_CELLS = {
     "imm_sample_google_ic": {
         "n": 875_713, "m": 5_105_039, "batch": 4_096, "bfs_steps": 16,
         "model": "IC", "note": "sparse frontier sampling, web-Google scale"},
+}
+
+
+# Multi-query serving cells: one resident engine store answering batched
+# sigma(S) queries (the IMServer regime).  ``queries`` is the coalesced
+# batch width, ``l_pad`` the padded seed-set length — together with the
+# pow2 store capacity these fix the fused membership kernel's shapes.
+IM_SERVE_CELLS = {
+    "imm_serve_youtube_ic": {
+        "n": 1_134_890, "theta": 16_384, "queries": 256, "l_pad": 64,
+        "model": "IC", "note": "batched influence queries, com-YouTube scale"},
+    "imm_serve_amazon_ic": {
+        "n": 334_863, "theta": 16_384, "queries": 1_024, "l_pad": 16,
+        "model": "IC", "note": "high-QPS small-set queries, com-Amazon scale"},
 }

@@ -4,30 +4,58 @@ The paper's primary contribution, as a composable JAX module:
   * martingale.py  — Tang'15 sampling bounds (theta estimation, OPT LB)
   * sampler.py     — batched RRR-set generation (IC dense/sparse, LT walk)
                      with fused in-place counter accumulation (paper C3)
+                     plus the sampler registry the engine resolves by name
   * selection.py   — greedy max-coverage: EfficientIMM RRR-partitioned
-                     rebuild (C1+C5) and Ripples-style decremental baseline
+                     rebuild (C1+C5), Ripples-style decremental baseline,
+                     and the `SelectionStrategy` registry
   * adaptive.py    — bitmap vs index-list representation choice (C4)
-  * imm.py         — Algorithm-1 driver + mesh-sharded selection/sampling
+  * store.py       — preallocated RRR arenas (BitmapStore / IndexStore)
+  * engine.py      — `InfluenceEngine`: Algorithm 1 + incremental
+                     extend/select/influence multi-query serving and
+                     snapshot/restore resumability
+  * imm.py         — one-shot ``imm(graph, cfg)`` back-compat wrapper
 """
 from repro.core.martingale import IMMBounds, compute_bounds, theta_from_lb
 from repro.core.sampler import (
     sample_ic_dense,
     sample_ic_sparse,
     sample_lt,
+    register_sampler,
+    get_sampler,
+    registered_samplers,
+    default_sampler_name,
 )
 from repro.core.selection import (
     greedy_select,
     select_dense,
     select_sparse,
     select_dense_sharded,
+    register_selection,
+    get_selection,
 )
-from repro.core.adaptive import choose_representation, bitmap_to_indices, indices_to_bitmap
-from repro.core.imm import imm, IMMResult, IMMConfig
+from repro.core.adaptive import (
+    choose_representation, bitmap_to_indices, indices_to_bitmap, l_pad_for,
+)
+from repro.core.store import (
+    RRRStore, StoreView, BitmapStore, IndexStore, make_store,
+    store_from_state,
+)
+from repro.core.engine import (
+    InfluenceEngine, Selection, IMMResult, IMMConfig,
+)
+from repro.core.imm import imm
 
 __all__ = [
     "IMMBounds", "compute_bounds", "theta_from_lb",
     "sample_ic_dense", "sample_ic_sparse", "sample_lt",
+    "register_sampler", "get_sampler", "registered_samplers",
+    "default_sampler_name",
     "greedy_select", "select_dense", "select_sparse", "select_dense_sharded",
+    "register_selection", "get_selection",
     "choose_representation", "bitmap_to_indices", "indices_to_bitmap",
+    "l_pad_for",
+    "RRRStore", "StoreView", "BitmapStore", "IndexStore", "make_store",
+    "store_from_state",
+    "InfluenceEngine", "Selection",
     "imm", "IMMResult", "IMMConfig",
 ]

@@ -9,6 +9,8 @@ break-even), or when the padded index length would exceed the bitmap width.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -19,6 +21,12 @@ def choose_representation(avg_coverage: float, n: int, l_max: int,
     if l_max * switch_ratio >= n:
         return "bitmap"
     return "bitmap" if avg_coverage > 1.0 / switch_ratio else "indices"
+
+
+def l_pad_for(l_max: int) -> int:
+    """Padded index-list width for an observed max set size: next power of
+    two, floor 4 — the shape the selection kernels compile against."""
+    return 1 << max(int(math.ceil(math.log2(max(l_max, 1)))), 2)
 
 
 def bitmap_to_indices(R, l_max: int):

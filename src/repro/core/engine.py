@@ -1,0 +1,301 @@
+"""InfluenceEngine — composable, resumable, multi-query IMM.
+
+The monolithic ``imm(graph, cfg)`` call hid the paper's three tunable
+subsystems (RRR storage C3/C4, counter update C5, theta scheduling) inside
+one function that re-sampled from scratch per invocation.  This module
+splits them apart around a stateful engine over a persistent `RRRStore`:
+
+    engine = InfluenceEngine(graph, IMMConfig(model="IC"))
+    result = engine.run()                 # Algorithm 1, exactly as before
+    top10  = engine.select(10)            # more queries, NO re-sampling
+    sigma  = engine.influence([5, 17])    # sigma(S) for any candidate set
+    engine.snapshot(ckpt_dir)             # resumable via checkpoint.store
+
+Pieces:
+  * sampling is resolved through the sampler registry
+    (``repro.core.sampler.register_sampler``: "IC-dense", "IC-sparse",
+    "LT", or any user-registered name);
+  * selection goes through the `SelectionStrategy` registry
+    (``repro.core.selection.get_selection``: rebuild/decrement x
+    dense/sparse/sharded) instead of if/elif dispatch;
+  * sampled sets land in a preallocated `RRRStore` arena (amortized
+    doubling, in-place batch writes — see ``repro.core.store``), so
+    ``extend``/``select`` never re-concatenate O(theta) rows;
+  * ``select`` results are memoized per (store version, k, method): a
+    campaign sweep over many k is sampling-free after the first solve.
+
+``imm()`` in ``repro.core.imm`` is a thin wrapper over ``run()`` and is
+seed-for-seed identical to the historical implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import Graph
+from repro.core import martingale as mg
+from repro.core.adaptive import choose_representation, l_pad_for
+from repro.core.sampler import default_sampler_name, get_sampler
+from repro.core.selection import get_selection
+from repro.core.store import (
+    RRRStore, make_store, next_pow2, store_from_state,
+)
+from repro.checkpoint import store as ckpt
+
+
+@dataclasses.dataclass
+class IMMConfig:
+    k: int = 50
+    eps: float = 0.5
+    ell: float = 1.0
+    model: str = "IC"                 # "IC" | "LT"
+    batch: int = 256                  # RRR sets per sampling call
+    max_theta: int = 1 << 16          # safety cap (config-controlled)
+    dense_sampler_max_n: int = 4096   # use the MXU log-semiring sampler below
+    selection_method: str = "rebuild"    # "rebuild" (C5) | "decrement"
+    adaptive_representation: bool = True  # C4
+    # below this n the dense bitmap wins regardless of coverage (the
+    # mat-vec is MXU/cache-friendly and the bitmap->indices conversion
+    # costs more than it saves — measured: LT replicas at n~4k ran 10x
+    # slower through the index path; EXPERIMENTS §Paper-tables)
+    sparse_rep_min_n: int = 65536
+    fuse_counters: bool = True            # C3 (informational; sampler always fuses)
+    switch_ratio: int = 32
+    store: str = "auto"               # "auto" (bitmap) | "bitmap" | "indices"
+    sampler: Optional[str] = None     # registry name; None = resolve by model/n
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class IMMResult:
+    seeds: np.ndarray
+    influence: float          # n * covered_frac
+    covered_frac: float
+    theta: int
+    rounds: int
+    representation: str
+    counter: np.ndarray       # fused global counter over all sampled sets
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """One answered seed-selection query (no sampling state attached)."""
+    seeds: np.ndarray
+    covered_frac: float
+    influence: float
+    gains: np.ndarray
+    representation: str
+    theta: int                # store size the query was answered against
+
+
+class InfluenceEngine:
+    """Stateful IMM engine over a persistent RRR store.
+
+    Parameters
+    ----------
+    graph, cfg : the problem and its knobs (see `IMMConfig`).
+    store      : optional pre-built `RRRStore` (default: ``cfg.store``).
+    mesh, theta_axes, vertex_axis : pass a mesh to route selection through
+        the sharded strategy (paper C1); axes name the mesh dims carrying
+        theta and (optionally) the vertex dimension.
+    """
+
+    def __init__(self, graph: Graph, cfg: IMMConfig = None, *,
+                 store: RRRStore = None, mesh=None,
+                 theta_axes=("data",), vertex_axis=None):
+        self.graph = graph
+        self.cfg = cfg if cfg is not None else IMMConfig()
+        self.mesh = mesh
+        self.theta_axes = tuple(theta_axes)
+        self.vertex_axis = vertex_axis
+        self.key = jax.random.PRNGKey(self.cfg.seed)
+        self.sampler_name = self.cfg.sampler or default_sampler_name(
+            graph, self.cfg)
+        self._sample = get_sampler(self.sampler_name)(graph, self.cfg)
+        self.store = store if store is not None else make_store(
+            self.cfg.store, graph.n)
+        self._select_cache: dict = {}
+
+    # ------------------------------------------------------------ sampling
+
+    @property
+    def theta(self) -> int:
+        return self.store.count
+
+    def extend(self, theta: int) -> int:
+        """Sample batches until the store holds >= ``theta`` RRR sets.
+
+        Idempotent when the store is already large enough; returns the new
+        store size.  The PRNG key stream is (key_i, sub_i) = split(key_{i-1})
+        per batch — identical to the historical driver, so a fixed
+        ``cfg.seed`` yields a bitwise-identical sample stream.
+        """
+        while self.store.count < theta:
+            self.key, sub = jax.random.split(self.key)
+            visited, counter, _ = self._sample(sub)
+            self.store.add_batch(visited, counter)
+        return self.store.count
+
+    # ----------------------------------------------------------- selection
+
+    def _choose_representation(self) -> str:
+        if self.store.representation == "indices":
+            return "indices"
+        cfg = self.cfg
+        if cfg.adaptive_representation and self.graph.n >= cfg.sparse_rep_min_n:
+            avg_cov, l_max = self.store.coverage_stats()
+            return choose_representation(
+                avg_cov, self.graph.n, l_max, cfg.switch_ratio)
+        return "bitmap"
+
+    def select(self, k: int = None, *, method: str = None) -> Selection:
+        """Greedy max-coverage over the *current* store — re-queryable.
+
+        Successive calls with the same (k, method) against an unchanged
+        store return the memoized result; different k re-run only the
+        selection kernel, never the sampler.
+        """
+        cfg = self.cfg
+        k = min(cfg.k if k is None else int(k), self.graph.n)
+        if k < 1:
+            raise ValueError(f"select needs k >= 1, got {k}")
+        method = method or cfg.selection_method
+        cache_key = (self.store.version, self.store.count, k, method)
+        hit = self._select_cache.get(cache_key)
+        if hit is not None:
+            return hit
+
+        if self.mesh is not None:
+            # the sharded strategies are dense-only (C1 partitions bitmaps)
+            if self.store.representation != "bitmap":
+                raise ValueError("sharded selection requires a bitmap store")
+            rep, view, layout = "bitmap", self.store.view(), "sharded"
+        else:
+            rep = self._choose_representation()
+            if rep == "indices" and self.store.representation == "bitmap":
+                _, l_max = self.store.coverage_stats()
+                view = self.store.index_view(l_pad_for(l_max))
+            else:
+                view = self.store.view()
+            layout = "dense" if rep == "bitmap" else "sparse"
+        strategy = get_selection(method, layout)
+        seeds, frac, gains = strategy(
+            view, k, mesh=self.mesh, theta_axes=self.theta_axes,
+            vertex_axis=self.vertex_axis)
+        sel = Selection(
+            seeds=np.asarray(seeds), covered_frac=float(frac),
+            influence=float(frac) * self.graph.n, gains=np.asarray(gains),
+            representation=rep, theta=self.store.count)
+        self._select_cache[cache_key] = sel
+        return sel
+
+    # ----------------------------------------------------------- influence
+
+    def influences(self, seed_sets: Sequence[Sequence[int]]) -> np.ndarray:
+        """sigma(S) estimates for a batch of seed sets in one fused kernel.
+
+        Sets may have different sizes; each is padded with its own first
+        element (a no-op for coverage) and the query axis pads to a power
+        of two, so recompilations stay bounded while any mix of campaign
+        queries shares one store pass.
+        """
+        if not len(seed_sets):
+            return np.zeros((0,), np.float64)
+        sets = [np.asarray(s, np.int32).reshape(-1) for s in seed_sets]
+        for i, s in enumerate(sets):
+            if s.size == 0:
+                raise ValueError(f"seed set {i} is empty")
+            if (s < 0).any() or (s >= self.graph.n).any():
+                raise ValueError(f"seed set {i} has out-of-range vertices")
+        q = len(sets)
+        l_pad = next_pow2(max(s.size for s in sets), 1)
+        q_pad = next_pow2(q, 1)
+        S = np.empty((q_pad, l_pad), np.int32)
+        for i in range(q_pad):
+            s = sets[min(i, q - 1)]
+            S[i, :s.size] = s
+            S[i, s.size:] = s[0]
+        fracs = np.asarray(self.store.hits(S))[:q]
+        return fracs.astype(np.float64) * self.graph.n
+
+    def influence(self, seed_set: Sequence[int]) -> float:
+        """sigma(S) ~= n * F_R(S) for one seed set against the store."""
+        return float(self.influences([seed_set])[0])
+
+    # ------------------------------------------------------- checkpointing
+
+    def snapshot(self, directory: str, *, tag: str = "engine") -> str:
+        """Persist store + PRNG state atomically (checkpoint.store format)."""
+        tree = {
+            "store": self.store.state(),
+            "key": np.asarray(self.key),
+            "meta": {
+                "n": np.int64(self.graph.n),
+                "model": np.asarray(self.cfg.model),
+                "sampler": np.asarray(self.sampler_name),
+            },
+        }
+        return ckpt.save_named(directory, tag, tree)
+
+    def restore(self, directory: str, *, tag: str = "engine") -> bool:
+        """Resume from `snapshot`; returns False when none exists."""
+        tree = ckpt.load_named(directory, tag)
+        if tree is None:
+            return False
+        meta = tree["meta"]
+        if int(meta["n"]) != self.graph.n:
+            raise ValueError(
+                f"snapshot is for n={int(meta['n'])}, graph has n={self.graph.n}")
+        if str(np.asarray(meta["model"])) != self.cfg.model:
+            raise ValueError(
+                f"snapshot model {np.asarray(meta['model'])} != cfg.model "
+                f"{self.cfg.model}")
+        self.store = store_from_state(tree["store"])
+        self.key = jnp.asarray(tree["key"])
+        self._select_cache.clear()
+        return True
+
+    # -------------------------------------------------- Algorithm 1 driver
+
+    def run(self) -> IMMResult:
+        """IMM Algorithm 1 (Sampling phase -> Set_Theta -> Selection).
+
+        The martingale schedule gates `extend`; every intermediate coverage
+        check reuses `select`'s memoization.  The store persists afterwards
+        for further `select`/`influence` queries.
+        """
+        cfg, n = self.cfg, self.graph.n
+        k = min(cfg.k, n)
+        bounds = mg.compute_bounds(n, k, cfg.eps, cfg.ell)
+        lb = 1.0
+        rounds = 0
+
+        for i in range(1, bounds.max_rounds + 1):
+            rounds = i
+            theta_i = min(mg.round_theta(bounds, i), cfg.max_theta)
+            self.extend(theta_i)
+            sel = self.select(k)
+            if n * sel.covered_frac >= mg.round_target(bounds, i):
+                lb = mg.lower_bound_from_coverage(bounds, sel.covered_frac)
+                break
+            if self.store.count >= cfg.max_theta:
+                lb = max(mg.lower_bound_from_coverage(bounds, sel.covered_frac),
+                         1.0)
+                break
+
+        theta = min(mg.theta_from_lb(bounds, lb), cfg.max_theta)
+        self.extend(theta)
+        sel = self.select(k)
+        return IMMResult(
+            seeds=sel.seeds,
+            influence=sel.influence,
+            covered_frac=sel.covered_frac,
+            theta=self.store.count,
+            rounds=rounds,
+            representation=sel.representation,
+            counter=np.asarray(self.store.counter),
+        )

@@ -1,167 +1,45 @@
-"""IMM Algorithm 1 driver (Sampling phase -> Selection phase) with
-EfficientIMM's optimizations wired in as config flags, so the paper-faithful
-baseline and the optimized path are both first-class:
+"""``imm(graph, cfg)`` — the one-shot IMM entry point (back-compat wrapper).
+
+Historically this module owned the whole Algorithm-1 driver: a grow-only
+list-of-batches store, if/elif sampler dispatch, and selection wired inline.
+That machinery now lives in the stateful engine:
+
+  * ``repro.core.engine.InfluenceEngine`` — Algorithm 1 plus incremental
+    ``extend``/``select``/``influence`` multi-query serving and
+    ``snapshot``/``restore`` resumability;
+  * ``repro.core.store``   — preallocated bitmap/index RRR arenas (C3/C4);
+  * ``repro.core.sampler`` — the sampler registry ("IC-dense", "IC-sparse",
+    "LT", ...);
+  * ``repro.core.selection`` — the `SelectionStrategy` registry
+    (rebuild/decrement x dense/sparse/sharded, C5/C1).
+
+``imm()`` constructs a fresh engine and runs it once; for a fixed
+``cfg.seed`` it returns seeds identical to the historical implementation.
+Callers that issue more than one query per sampled store should hold an
+`InfluenceEngine` instead:
+
+    engine = InfluenceEngine(graph, IMMConfig(model="IC"))
+    result = engine.run()          # == imm(graph, cfg)
+    more   = engine.select(10)     # extra queries, no re-sampling
+
+The paper-faithful baseline and the optimized path both remain first-class:
 
     IMMConfig(selection_method="decrement", fuse_counters=False,
               adaptive_representation=False)   # Ripples-style baseline
     IMMConfig()                                # EfficientIMM defaults
-
-The driver orchestrates jitted sampling batches (host loop is data-dependent
-exactly as in the paper) and pads theta to batch multiples for shape
-stability.  Influence estimates: sigma(S) ~= n * F_R(S).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Optional
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
 from repro.graphs.csr import Graph
-from repro.core import martingale as mg
-from repro.core.sampler import make_logq, sample_ic_dense, sample_ic_sparse, sample_lt
-from repro.core.selection import select_dense, select_sparse
-from repro.core.adaptive import choose_representation, bitmap_to_indices
+from repro.core.engine import (          # noqa: F401  (re-exported API)
+    IMMConfig, IMMResult, InfluenceEngine, Selection,
+)
 
 
-@dataclasses.dataclass
-class IMMConfig:
-    k: int = 50
-    eps: float = 0.5
-    ell: float = 1.0
-    model: str = "IC"                 # "IC" | "LT"
-    batch: int = 256                  # RRR sets per sampling call
-    max_theta: int = 1 << 16          # safety cap (config-controlled)
-    dense_sampler_max_n: int = 4096   # use the MXU log-semiring sampler below
-    selection_method: str = "rebuild"    # "rebuild" (C5) | "decrement"
-    adaptive_representation: bool = True  # C4
-    # below this n the dense bitmap wins regardless of coverage (the
-    # mat-vec is MXU/cache-friendly and the bitmap->indices conversion
-    # costs more than it saves — measured: LT replicas at n~4k ran 10x
-    # slower through the index path; EXPERIMENTS §Paper-tables)
-    sparse_rep_min_n: int = 65536
-    fuse_counters: bool = True            # C3 (informational; sampler always fuses)
-    switch_ratio: int = 32
-    seed: int = 0
+def imm(graph: Graph, cfg: IMMConfig = None) -> IMMResult:
+    """Run IMM Algorithm 1 end-to-end and return the seed set.
 
-
-@dataclasses.dataclass
-class IMMResult:
-    seeds: np.ndarray
-    influence: float          # n * covered_frac
-    covered_frac: float
-    theta: int
-    rounds: int
-    representation: str
-    counter: np.ndarray       # fused global counter over all sampled sets
-
-
-class _RRRStore:
-    """Grow-only store of sampled RRR bitmaps + fused counter (C3)."""
-
-    def __init__(self, n: int):
-        self.n = n
-        self.batches = []
-        self.counter = jnp.zeros((n,), jnp.int32)
-        self.count = 0
-
-    def add(self, visited, counter):
-        self.batches.append(visited)
-        self.counter = self.counter + counter
-        self.count += visited.shape[0]
-
-    def bitmaps(self, pad_to: Optional[int] = None):
-        R = jnp.concatenate(self.batches, axis=0) if self.batches else \
-            jnp.zeros((0, self.n), jnp.uint8)
-        valid = jnp.ones((R.shape[0],), bool)
-        if pad_to and R.shape[0] < pad_to:
-            pad = pad_to - R.shape[0]
-            R = jnp.concatenate([R, jnp.zeros((pad, self.n), jnp.uint8)])
-            valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
-        return R, valid
-
-
-def _sample_batch(graph: Graph, cfg: IMMConfig, key, logq):
-    if cfg.model == "IC":
-        if graph.n <= cfg.dense_sampler_max_n:
-            return sample_ic_dense(key, logq, batch=cfg.batch)
-        return sample_ic_sparse(
-            key, graph.edge_src, graph.edge_dst, graph.in_prob,
-            n_nodes=graph.n, batch=cfg.batch)
-    return sample_lt(
-        key, graph.dst_offsets, graph.in_src, graph.in_lt_cum,
-        graph.in_lt_total, batch=cfg.batch)
-
-
-def _select(store: _RRRStore, cfg: IMMConfig, graph: Graph):
-    # pad theta to the next power of two to bound recompilations
-    pad_to = 1 << max(int(math.ceil(math.log2(max(store.count, 1)))), 4)
-    R, valid = store.bitmaps(pad_to)
-    sizes = np.asarray(R.sum(axis=1), dtype=np.int64)
-    avg_cov = float(sizes.sum()) / max(store.count, 1) / graph.n
-    l_max = int(sizes.max()) if sizes.size else 1
-    rep = "bitmap"
-    if cfg.adaptive_representation and graph.n >= cfg.sparse_rep_min_n:
-        rep = choose_representation(avg_cov, graph.n, max(l_max, 1),
-                                    cfg.switch_ratio)
-    if rep == "indices":
-        l_pad = 1 << max(int(math.ceil(math.log2(max(l_max, 1)))), 2)
-        R_idx = bitmap_to_indices(R, l_pad)
-        seeds, frac, gains = select_sparse(
-            R_idx, valid, graph.n, cfg.k, cfg.selection_method)
-    else:
-        seeds, frac, gains = select_dense(
-            R, valid, cfg.k, cfg.selection_method)
-    return seeds, float(frac), rep
-
-
-def imm(graph: Graph, cfg: IMMConfig = IMMConfig()) -> IMMResult:
-    n = graph.n
-    k = min(cfg.k, n)
-    bounds = mg.compute_bounds(n, k, cfg.eps, cfg.ell)
-    key = jax.random.PRNGKey(cfg.seed)
-    logq = make_logq(graph) if (
-        cfg.model == "IC" and n <= cfg.dense_sampler_max_n) else None
-
-    store = _RRRStore(n)
-    lb = 1.0
-    rounds = 0
-    seeds, frac, rep = None, 0.0, "bitmap"
-
-    # ---- Sampling phase (Alg. 1 lines 1-7) ----
-    for i in range(1, bounds.max_rounds + 1):
-        rounds = i
-        theta_i = min(mg.round_theta(bounds, i), cfg.max_theta)
-        while store.count < theta_i:
-            key, sub = jax.random.split(key)
-            visited, counter, _ = _sample_batch(graph, cfg, sub, logq)
-            store.add(visited, counter)
-        seeds, frac, rep = _select(store, cfg, graph)
-        if n * frac >= mg.round_target(bounds, i):
-            lb = mg.lower_bound_from_coverage(bounds, frac)
-            break
-        if store.count >= cfg.max_theta:
-            lb = max(mg.lower_bound_from_coverage(bounds, frac), 1.0)
-            break
-
-    # ---- Set_Theta + top-up sampling (Alg. 1 lines 8-10) ----
-    theta = min(mg.theta_from_lb(bounds, lb), cfg.max_theta)
-    while store.count < theta:
-        key, sub = jax.random.split(key)
-        visited, counter, _ = _sample_batch(graph, cfg, sub, logq)
-        store.add(visited, counter)
-
-    # ---- Selection phase (Alg. 1 line 11) ----
-    seeds, frac, rep = _select(store, cfg, graph)
-    return IMMResult(
-        seeds=np.asarray(seeds),
-        influence=float(n * frac),
-        covered_frac=frac,
-        theta=store.count,
-        rounds=rounds,
-        representation=rep,
-        counter=np.asarray(store.counter),
-    )
+    Thin wrapper over ``InfluenceEngine(graph, cfg).run()``; the engine
+    (and its sampled store) is discarded afterwards.
+    """
+    return InfluenceEngine(graph, cfg if cfg is not None else IMMConfig()).run()

@@ -18,6 +18,11 @@ the first seeds, so the decremental update touches far more rows.
 ``select_dense_sharded`` is the multi-device version: the theta axis is
 sharded across the mesh (paper C1 RRRset partitioning), each device reduces a
 partial counter, and a ``psum`` plays the role of the atomic global counter.
+
+The `SelectionStrategy` registry at the bottom exposes all of these to the
+`InfluenceEngine` as ``(method, layout)`` pairs — rebuild/decrement x
+dense/sparse/sharded — so new strategies plug in via ``register_selection``
+instead of growing an if/elif ladder in the driver.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.sparse.scatter import bincount_weighted
 
 
@@ -190,9 +196,8 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
 
     in_specs = (P(axes, vertex_axis), P(axes))
     out_specs = (P(), P(), P())
-    fn = jax.shard_map(
+    fn = shard_map(
         local_select, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )
     return fn(R, valid)
 
@@ -206,6 +211,69 @@ def greedy_select(R_or_idx, valid, k: int, *, n: int | None = None,
         assert n is not None
         return select_sparse(R_or_idx, valid, n, k, method)
     raise ValueError(representation)
+
+
+# ------------------------------------------------- SelectionStrategy API ----
+#
+# A strategy is ``fn(view, k, **opts) -> (seeds, covered_frac, gains)`` where
+# ``view`` is a ``repro.core.store.StoreView`` (duck-typed: .R, .valid, .n).
+# The registry is keyed "<method>-<layout>" with method in
+# {rebuild, decrement} and layout in {dense, sparse, sharded}.
+
+SELECTION_STRATEGIES = {}
+
+
+def register_selection(name: str, fn=None):
+    """Register a selection strategy; usable as ``@register_selection(name)``."""
+    if fn is None:
+        def deco(f):
+            SELECTION_STRATEGIES[name] = f
+            return f
+        return deco
+    SELECTION_STRATEGIES[name] = fn
+    return fn
+
+
+def get_selection(method: str, layout: str):
+    name = f"{method}-{layout}"
+    try:
+        return SELECTION_STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"no selection strategy {name!r}; registered: "
+            f"{sorted(SELECTION_STRATEGIES)}")
+
+
+def _dense_strategy(method):
+    def run(view, k, **_):
+        return select_dense(view.R, view.valid, k, method)
+    return run
+
+
+def _sparse_strategy(method):
+    def run(view, k, **_):
+        return select_sparse(view.R, view.valid, view.n, k, method)
+    return run
+
+
+def _sharded_strategy(method):
+    # the psum-rebuild update serves both methods: it is algebraically
+    # identical to the decremental baseline (property-tested above), and on
+    # a mesh the rebuild *is* the paper's counter-update of choice (C5).
+    def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
+            **_):
+        if mesh is None:
+            raise ValueError("sharded selection needs a mesh")
+        return select_dense_sharded(
+            mesh, view.R, view.valid, k,
+            theta_axes=theta_axes, vertex_axis=vertex_axis)
+    return run
+
+
+for _m in ("rebuild", "decrement"):
+    register_selection(f"{_m}-dense", _dense_strategy(_m))
+    register_selection(f"{_m}-sparse", _sparse_strategy(_m))
+    register_selection(f"{_m}-sharded", _sharded_strategy(_m))
 
 
 # ------------------------------------------- Ripples-faithful baseline ----

@@ -1,0 +1,301 @@
+"""Persistent RRR-set arenas — the resident store behind `InfluenceEngine`.
+
+The paper's C3/C4/C5 optimizations all hinge on *where the sampled RRR sets
+live*: fused counting writes into a store-owned counter, the adaptive
+representation is a property of the store, and selection reads the store
+without reshaping it.  This module makes that explicit:
+
+  * ``RRRStore``   — the protocol every backend implements: in-place
+    ``add_batch``, a shape-stable ``view()`` for selection, fused per-node
+    ``counter`` (C3), per-set ``sizes``, batched membership queries
+    (``hits``), and ``state()``/``from_state`` for snapshots.
+  * ``BitmapStore`` — ``(capacity, n) uint8`` bitmap arena.  Capacity is a
+    power of two grown by amortized doubling; batches are written in place
+    with a donated ``dynamic_update_slice`` so the hot loop never re-concats
+    O(theta) rows and jit recompilations are bounded by O(log theta)
+    distinct arena shapes.  Converts to index lists lazily (C4) via a
+    version-keyed cache.
+  * ``IndexStore``  — ``(capacity, L) int32`` index-list arena (sentinel
+    ``n``), for regimes where sets are sparse from the start (LT walks,
+    huge graphs); widens ``L`` by power-of-two steps as larger sets arrive.
+
+Both backends preserve exact equivalence with the historical pad-to-pow2
+selection inputs: padding rows are all-zero (bitmap) / all-sentinel
+(indices) and masked by ``view().valid``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import bitmap_to_indices
+
+MIN_CAPACITY = 16     # matches the historical pad floor (1 << 4)
+MIN_INDEX_PAD = 4     # matches the historical l_pad floor (1 << 2)
+
+
+def next_pow2(x: int, floor: int = MIN_CAPACITY) -> int:
+    """Smallest power of two >= max(x, floor)."""
+    cap = max(int(floor), 1)
+    while cap < x:
+        cap <<= 1
+    return cap
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreView:
+    """Read-only picture of an arena handed to a `SelectionStrategy`.
+
+    ``R`` is ``(capacity, n) uint8`` bitmaps when ``representation ==
+    "bitmap"`` and ``(capacity, L) int32`` sentinel-padded index lists when
+    ``representation == "indices"``; rows at index >= ``count`` are padding
+    and are masked out by ``valid``.
+
+    Views alias the live arena buffer, which `add_batch` donates to its
+    in-place writer — a view is only safe to read until the store's next
+    write (on accelerator backends the donated buffer is literally
+    deleted).  Consume a view before mutating the store; re-call ``view()``
+    after.
+    """
+    representation: str
+    R: jnp.ndarray
+    valid: jnp.ndarray
+    n: int
+    count: int
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_rows(arena, rows, start):
+    """In-place (donated) row-block write at dynamic offset ``start``."""
+    start_idx = (start,) + (jnp.int32(0),) * (arena.ndim - 1)
+    return jax.lax.dynamic_update_slice(arena, rows, start_idx)
+
+
+@jax.jit
+def _bitmap_hits(R, valid, S):
+    """Fraction of valid sets hit by each seed row. S: (Q, L) int32."""
+    memb = R[:, S.reshape(-1)].reshape((R.shape[0],) + S.shape) > 0
+    hit = memb.any(axis=2) & valid[:, None]
+    n_valid = jnp.maximum(valid.sum(dtype=jnp.float32), 1.0)
+    return hit.sum(axis=0).astype(jnp.float32) / n_valid
+
+
+@jax.jit
+def _index_hits(R_idx, valid, S):
+    """Index-list membership version of `_bitmap_hits` (lax.map bounds the
+    (capacity, L, Lq) broadcast to one query at a time)."""
+    n_valid = jnp.maximum(valid.sum(dtype=jnp.float32), 1.0)
+
+    def one(s):
+        memb = (R_idx[:, :, None] == s[None, None, :]).any(axis=(1, 2))
+        return (memb & valid).sum(dtype=jnp.int32)
+
+    hits = jax.lax.map(one, S)
+    return hits.astype(jnp.float32) / n_valid
+
+
+@runtime_checkable
+class RRRStore(Protocol):
+    """Protocol for RRR-set stores consumed by `InfluenceEngine`."""
+    representation: str
+    n: int
+    count: int
+    capacity: int
+    version: int
+    counter: jnp.ndarray
+    sizes: jnp.ndarray
+
+    def add_batch(self, visited, counter=None) -> None: ...
+    def view(self) -> StoreView: ...
+    def hits(self, S) -> jnp.ndarray: ...
+    def coverage_stats(self) -> tuple[float, int]: ...
+    def state(self) -> dict: ...
+
+
+class _ArenaBase:
+    """Shared arena bookkeeping: pow2 capacity, doubling, fused counter."""
+
+    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY):
+        self.n = int(n)
+        self.capacity = next_pow2(capacity)
+        self.count = 0
+        self.version = 0
+        self.sizes = jnp.zeros((self.capacity,), jnp.int32)
+        self.counter = jnp.zeros((self.n,), jnp.int32)
+
+    def _grow_rows(self, need: int):
+        new_cap = next_pow2(need, self.capacity)
+        if new_cap == self.capacity:
+            return
+        self._realloc(new_cap)
+        sizes = jnp.zeros((new_cap,), jnp.int32)
+        self.sizes = _write_rows(sizes, self.sizes, jnp.int32(0))
+        self.capacity = new_cap
+
+    def _finish_add(self, batch_sizes, counter):
+        B = batch_sizes.shape[0]
+        self.sizes = _write_rows(self.sizes, batch_sizes, jnp.int32(self.count))
+        self.counter = self.counter + counter
+        self.count += int(B)
+        self.version += 1
+
+    def _valid(self):
+        return jnp.arange(self.capacity) < self.count
+
+    def coverage_stats(self) -> tuple[float, int]:
+        """(avg fractional set coverage, max set size) over stored sets."""
+        sizes = np.asarray(self.sizes)
+        avg_cov = float(sizes.sum()) / max(self.count, 1) / self.n
+        return avg_cov, max(int(sizes.max()) if sizes.size else 1, 1)
+
+    def _base_state(self) -> dict:
+        return {
+            "n": np.int64(self.n),
+            "count": np.int64(self.count),
+            "sizes": np.asarray(self.sizes),
+            "counter": np.asarray(self.counter),
+        }
+
+
+class BitmapStore(_ArenaBase):
+    """Dense bitmap arena: ``(capacity, n) uint8``, zero-padded rows."""
+
+    representation = "bitmap"
+
+    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY):
+        super().__init__(n, capacity=capacity)
+        self.R = jnp.zeros((self.capacity, self.n), jnp.uint8)
+        self._idx_cache = None      # (version, l_pad) -> R_idx
+
+    def _realloc(self, new_cap: int):
+        R = jnp.zeros((new_cap, self.n), jnp.uint8)
+        self.R = _write_rows(R, self.R, jnp.int32(0))
+
+    def add_batch(self, visited, counter=None) -> None:
+        visited = jnp.asarray(visited).astype(jnp.uint8)
+        self._grow_rows(self.count + visited.shape[0])
+        if counter is None:
+            counter = visited.sum(axis=0, dtype=jnp.int32)
+        self.R = _write_rows(self.R, visited, jnp.int32(self.count))
+        self._finish_add(visited.sum(axis=1, dtype=jnp.int32), counter)
+
+    def view(self) -> StoreView:
+        return StoreView("bitmap", self.R, self._valid(), self.n, self.count)
+
+    def index_view(self, l_pad: int) -> StoreView:
+        """Lazy C4 conversion; cached until the arena next changes."""
+        key = (self.version, int(l_pad))
+        if self._idx_cache is None or self._idx_cache[0] != key:
+            self._idx_cache = (key, bitmap_to_indices(self.R, int(l_pad)))
+        return StoreView("indices", self._idx_cache[1], self._valid(),
+                         self.n, self.count)
+
+    def hits(self, S) -> jnp.ndarray:
+        return _bitmap_hits(self.R, self._valid(), jnp.asarray(S, jnp.int32))
+
+    def state(self) -> dict:
+        st = self._base_state()
+        st["kind"] = np.asarray("bitmap")
+        st["R"] = np.asarray(self.R)
+        return st
+
+    @classmethod
+    def from_state(cls, st) -> "BitmapStore":
+        store = cls(int(st["n"]), capacity=st["R"].shape[0])
+        store.R = jnp.asarray(st["R"], jnp.uint8)
+        store.sizes = jnp.asarray(st["sizes"], jnp.int32)
+        store.counter = jnp.asarray(st["counter"], jnp.int32)
+        store.count = int(st["count"])
+        return store
+
+
+class IndexStore(_ArenaBase):
+    """Sparse index-list arena: ``(capacity, L) int32`` with sentinel ``n``.
+
+    ``L`` widens by power-of-two steps when a batch contains a larger set
+    (the widened columns backfill with the sentinel, so old rows keep their
+    meaning).  Incoming bitmap batches are converted on write — after that
+    the bitmaps are dropped, so resident memory is O(theta * L) not
+    O(theta * n).
+    """
+
+    representation = "indices"
+
+    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY,
+                 l_pad: int = MIN_INDEX_PAD):
+        super().__init__(n, capacity=capacity)
+        self.l_pad = next_pow2(l_pad, MIN_INDEX_PAD)
+        self.R = jnp.full((self.capacity, self.l_pad), self.n, jnp.int32)
+
+    def _realloc(self, new_cap: int):
+        R = jnp.full((new_cap, self.l_pad), self.n, jnp.int32)
+        self.R = _write_rows(R, self.R, jnp.int32(0))
+
+    def _widen(self, l_need: int):
+        new_l = next_pow2(l_need, self.l_pad)
+        if new_l == self.l_pad:
+            return
+        pad = jnp.full((self.capacity, new_l - self.l_pad), self.n, jnp.int32)
+        self.R = jnp.concatenate([self.R, pad], axis=1)
+        self.l_pad = new_l
+
+    def add_batch(self, visited, counter=None) -> None:
+        visited = jnp.asarray(visited).astype(jnp.uint8)
+        batch_sizes = visited.sum(axis=1, dtype=jnp.int32)
+        self._widen(int(batch_sizes.max()))
+        self._grow_rows(self.count + visited.shape[0])
+        if counter is None:
+            counter = visited.sum(axis=0, dtype=jnp.int32)
+        rows = bitmap_to_indices(visited, self.l_pad)
+        self.R = _write_rows(self.R, rows, jnp.int32(self.count))
+        self._finish_add(batch_sizes, counter)
+
+    def view(self) -> StoreView:
+        return StoreView("indices", self.R, self._valid(), self.n, self.count)
+
+    def hits(self, S) -> jnp.ndarray:
+        return _index_hits(self.R, self._valid(), jnp.asarray(S, jnp.int32))
+
+    def state(self) -> dict:
+        st = self._base_state()
+        st["kind"] = np.asarray("indices")
+        st["R"] = np.asarray(self.R)
+        return st
+
+    @classmethod
+    def from_state(cls, st) -> "IndexStore":
+        store = cls(int(st["n"]), capacity=st["R"].shape[0],
+                    l_pad=st["R"].shape[1])
+        store.R = jnp.asarray(st["R"], jnp.int32)
+        store.sizes = jnp.asarray(st["sizes"], jnp.int32)
+        store.counter = jnp.asarray(st["counter"], jnp.int32)
+        store.count = int(st["count"])
+        return store
+
+
+STORE_KINDS = {"bitmap": BitmapStore, "indices": IndexStore}
+
+
+def make_store(kind: str, n: int, **kw) -> RRRStore:
+    """Store factory: ``"auto"`` (bitmap, the back-compat default),
+    ``"bitmap"``, or ``"indices"``."""
+    kind = "bitmap" if kind == "auto" else kind
+    try:
+        return STORE_KINDS[kind](n, **kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown store kind {kind!r}; have {sorted(STORE_KINDS)}")
+
+
+def store_from_state(st) -> RRRStore:
+    """Rebuild a store from a `state()` tree (snapshot restore path)."""
+    kind = str(np.asarray(st["kind"]))
+    try:
+        return STORE_KINDS[kind].from_state(st)
+    except KeyError:
+        raise ValueError(f"snapshot has unknown store kind {kind!r}")

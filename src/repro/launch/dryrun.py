@@ -58,6 +58,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax wraps the dict per-device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # trip-count-corrected flop/byte/collective census (hlo_analysis.py) —
     # compiled.cost_analysis() counts while-loop bodies once (scan!)

@@ -1,4 +1,4 @@
-"""IMM end-to-end driver (the paper's workload).
+"""IMM end-to-end driver (the paper's workload), on the InfluenceEngine.
 
     PYTHONPATH=src python -m repro.launch.im_run --graph com-Amazon \
         --scale 0.01 --model IC --k 50
@@ -6,7 +6,9 @@
 Runs Algorithm 1 with EfficientIMM defaults (rebuild selection + fused
 counters + adaptive representation) or the Ripples-style baseline
 (--baseline), on a synthetic SNAP stand-in (hermetic container: see
-graphs/datasets.py).
+graphs/datasets.py).  Because the engine keeps its sampled RRR store,
+``--select-k`` answers extra campaign queries from the same store for free,
+and ``--snapshot-dir`` persists the store for later resumption.
 """
 from __future__ import annotations
 
@@ -15,13 +17,14 @@ import json
 import time
 
 from repro.configs.imm_snap import IMM_EXPERIMENTS
-from repro.core.imm import imm, IMMConfig
+from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.graphs.datasets import scaled_snap, synthetic_snap
 
 
 def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         eps: float = 0.5, baseline: bool = False, seed: int = 0,
-        max_theta: int = 1 << 14, log=print):
+        max_theta: int = 1 << 14, select_ks=(), snapshot_dir: str = None,
+        log=print):
     exp = IMM_EXPERIMENTS[graph]
     scale = exp.bench_scale if scale is None else scale
     t0 = time.time()
@@ -34,9 +37,25 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         selection_method="decrement" if baseline else "rebuild",
         adaptive_representation=not baseline,
     )
+    engine = InfluenceEngine(g, cfg)
+    if snapshot_dir:
+        engine.restore(snapshot_dir)       # resume if a snapshot exists
     t0 = time.time()
-    res = imm(g, cfg)
+    res = engine.run()
     t_imm = time.time() - t0
+
+    # extra (k, influence) campaign queries — same store, no re-sampling
+    t0 = time.time()
+    queries = {
+        int(q): {"influence": engine.select(int(q)).influence,
+                 "seeds": [int(s) for s in engine.select(int(q)).seeds[:10]]}
+        for q in select_ks
+    }
+    t_queries = time.time() - t0
+
+    if snapshot_dir:
+        engine.snapshot(snapshot_dir)
+
     out = {
         "graph": graph, "scale": scale, "n": g.n, "m": g.m, "model": model,
         "k": k, "mode": "ripples-style" if baseline else "efficientimm",
@@ -45,6 +64,9 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         "graph_s": round(t_graph, 3), "imm_s": round(t_imm, 3),
         "seeds": [int(s) for s in res.seeds[:10]],
     }
+    if queries:
+        out["queries"] = queries
+        out["queries_s"] = round(t_queries, 3)
     log(json.dumps(out))
     return out
 
@@ -59,9 +81,15 @@ def main(argv=None):
     ap.add_argument("--eps", type=float, default=0.5)
     ap.add_argument("--baseline", action="store_true")
     ap.add_argument("--max-theta", type=int, default=1 << 14)
+    ap.add_argument("--select-k", type=int, action="append", default=[],
+                    help="extra seed-set sizes to answer from the same "
+                         "sampled store (repeatable)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="resume from / persist the engine store here")
     args = ap.parse_args(argv)
     run(args.graph, scale=args.scale, model=args.model, k=args.k,
-        eps=args.eps, baseline=args.baseline, max_theta=args.max_theta)
+        eps=args.eps, baseline=args.baseline, max_theta=args.max_theta,
+        select_ks=args.select_k, snapshot_dir=args.snapshot_dir)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,26 @@
-"""Serving driver: batched prefill + decode with a KV cache.
+"""Serving drivers.
 
-CPU-runnable smoke serving (examples/serve_lm.py); the production decode
-cells in launch/steps.py lower the same decode_step onto the 256/512-chip
-meshes.
+Two workloads share this module:
+  * ``LMServer`` — batched prefill + decode with a KV cache (CPU-runnable
+    smoke serving; the production decode cells in launch/steps.py lower the
+    same decode_step onto the 256/512-chip meshes).
+  * ``IMServer`` — influence-query serving over one shared
+    `InfluenceEngine`: clients submit sigma(S) queries for arbitrary seed
+    sets, the server coalesces everything pending into a single fused
+    membership kernel over the resident RRR store (no re-sampling per
+    query), and seed-selection queries hit the engine's memoized
+    ``select``.  This is the multi-query regime the store redesign exists
+    for: sampling once amortizes across an entire campaign of queries.
+
+    PYTHONPATH=src python -m repro.launch.serve --workload im \
+        --graph com-Amazon --queries 64
 """
 from __future__ import annotations
 
 import argparse
 import time
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -49,14 +61,57 @@ class LMServer:
         return jnp.concatenate(out, axis=1)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args(argv)
+class IMServer:
+    """Batches concurrent influence queries against a shared engine.
 
+    ``submit`` enqueues a sigma(S) query and returns a ticket; ``flush``
+    answers every pending ticket with one fused store pass (seed sets are
+    padded to shared power-of-two shapes inside the engine, so mixed query
+    sizes don't fragment compilation).  ``select`` serves top-k queries
+    from the engine's memoized selection — repeated k values are free.
+    """
+
+    def __init__(self, engine, *, max_batch: int = 256):
+        self.engine = engine
+        self.max_batch = max_batch
+        self._pending = []          # list[(ticket, seed_set)]
+        self._next_ticket = 0
+        self.queries_served = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def submit(self, seed_set) -> int:
+        """Enqueue one sigma(S) query; returns its ticket id."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, np.asarray(seed_set, np.int32)))
+        return ticket
+
+    def flush(self) -> dict:
+        """Answer all pending queries; returns {ticket: influence}."""
+        results = {}
+        while self._pending:
+            chunk = self._pending[:self.max_batch]
+            self._pending = self._pending[self.max_batch:]
+            vals = self.engine.influences([s for _, s in chunk])
+            results.update(
+                {t: float(v) for (t, _), v in zip(chunk, vals)})
+        self.queries_served += len(results)
+        return results
+
+    def influence(self, seed_set) -> float:
+        """Convenience single-query path (submit + flush)."""
+        ticket = self.submit(seed_set)
+        return self.flush()[ticket]
+
+    def select(self, k: int):
+        """Top-k seed-selection query (memoized by the engine)."""
+        return self.engine.select(k)
+
+
+def _main_lm(args):
     arch = get_arch(args.arch)
     cfg = arch.smoke_config
     server = LMServer(cfg)
@@ -68,6 +123,62 @@ def main(argv=None):
     print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print(out[0])
+
+
+def _main_im(args):
+    from repro.configs.imm_snap import IMM_EXPERIMENTS
+    from repro.core.engine import InfluenceEngine, IMMConfig
+    from repro.graphs.datasets import scaled_snap
+
+    exp = IMM_EXPERIMENTS[args.graph]
+    scale = exp.bench_scale if args.scale is None else args.scale
+    g = scaled_snap(args.graph, scale, seed=0)
+    engine = InfluenceEngine(
+        g, IMMConfig(k=args.k, model=args.model, max_theta=args.max_theta))
+    t0 = time.time()
+    engine.extend(args.max_theta)
+    t_sample = time.time() - t0
+    server = IMServer(engine)
+
+    # a realistic mixed workload: top-k selections of several sizes plus a
+    # burst of random candidate-set influence queries, all from one store
+    t0 = time.time()
+    sels = {kk: server.select(kk) for kk in (5, args.k // 2 or 1, args.k)}
+    rng = np.random.default_rng(0)
+    tickets = [server.submit(rng.choice(g.n, size=rng.integers(1, 9),
+                                        replace=False))
+               for _ in range(args.queries)]
+    answers = server.flush()
+    dt = time.time() - t0
+    n_q = len(sels) + len(tickets)
+    print(f"[serve-im] {args.graph} n={g.n:,} theta={engine.theta}: "
+          f"sampled in {t_sample:.2f}s, answered {n_q} queries in {dt:.2f}s "
+          f"({n_q / max(dt, 1e-9):.1f} q/s)")
+    for kk, s in sorted(sels.items()):
+        print(f"  select(k={kk}): influence={s.influence:.1f} "
+              f"seeds={[int(v) for v in s.seeds[:5]]}...")
+    vals = [answers[t] for t in tickets[:4]]
+    print(f"  sample influence answers: {[round(v, 1) for v in vals]}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="lm", choices=("lm", "im"))
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--graph", default="com-Amazon")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--model", default="IC", choices=("IC", "LT"))
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--max-theta", type=int, default=4096)
+    ap.add_argument("--queries", type=int, default=64)
+    args = ap.parse_args(argv)
+    if args.workload == "im":
+        _main_im(args)
+    else:
+        _main_lm(args)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,8 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
@@ -529,10 +531,10 @@ def make_fm_sharded_logits(cfg, mesh):
         pair = 0.5 * (s * s - s2).sum(axis=-1)
         return b + wrow.sum(axis=-1) + pair
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P("model", None), P("model"), P(), P(dp, None)),
-        out_specs=P(dp), check_vma=False)
+        out_specs=P(dp))
 
 
 def _build_fm_cell(arch, shape, mesh) -> Cell:
@@ -603,10 +605,10 @@ def _build_fm_cell(arch, shape, mesh) -> Cell:
                 shard_rows=shard_rows)[..., 0]
             return const + wc + vc @ su
 
-        step = jax.shard_map(
+        step = shard_map(
             local_score, mesh=mesh,
             in_specs=(P("model", None), P("model"), P(), P(), P(dp)),
-            out_specs=P(dp), check_vma=False)
+            out_specs=P(dp))
         specs = (p_shapes["v"], p_shapes["w"], p_shapes["b"],
                  _sds((n_user_fields,), jnp.int32), _sds((C,), jnp.int32))
         in_specs = (p_specs["v"], p_specs["w"], p_specs["b"], P(), P(dp))

@@ -18,6 +18,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from repro.models.common import mlp_init, mlp_apply, layer_norm, shard_rows
 from repro.sparse.segment import segment_sum
 
@@ -182,13 +184,13 @@ def forward_edges_dst_partitioned(params, cfg: GraphCastConfig, node_feats,
         return mlp_apply(dec, h.astype(jnp.float32))
 
     rep = jax.tree.map(lambda x: P(*([None] * x.ndim)), params)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(rep["enc_node"], rep["enc_edge"], rep["dec"],
                   rep["layers"],
                   P(dp, None), P((*dp, tp), None), P((*dp, tp)),
                   P((*dp, tp))),
-        out_specs=P(dp, None), check_vma=False)
+        out_specs=P(dp, None))
     return fn(params["enc_node"], params["enc_edge"], params["dec"],
               params["layers"], node_feats, edge_feats, edge_src,
               edge_dst_local)

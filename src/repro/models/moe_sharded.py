@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -154,9 +156,8 @@ def moe_ffn_sharded(p, x, cfg):
             return y.astype(x_loc.dtype), aux
         return y.reshape(B_, S_, d).astype(x_loc.dtype), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=MESH,
         in_specs=(P(None, None), wgu_spec, wdn_spec, P(dp, tp, None)),
-        out_specs=(P(dp, tp, None), P()),
-        check_vma=False)
+        out_specs=(P(dp, tp, None), P()))
     return fn(p["router"], p["w_gate_up"], p["w_down"], x)

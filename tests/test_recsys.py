@@ -3,6 +3,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip on clean machines
 from hypothesis import given, settings, strategies as st
 
 from repro.models.recsys.fm import (

@@ -3,6 +3,9 @@ the IMM counters, GNN aggregation and recsys lookups all reduce to."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip on clean machines
 from hypothesis import given, settings, strategies as st
 
 from repro.sparse import (
@@ -113,17 +116,17 @@ def test_embedding_bag_modes():
 
 def test_sharded_embedding_lookup_single_device():
     """shard_map row-sharded lookup == plain take on a 1-device mesh."""
+    from repro.compat import shard_map
     from repro.sparse import sharded_embedding_lookup
     from jax.sharding import PartitionSpec as P
 
     mesh = jax.make_mesh((1,), ("model",))
     table = jax.random.normal(jax.random.PRNGKey(0), (16, 4))
     ids = jnp.array([[0, 3], [15, 7]], jnp.int32)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda t, i: sharded_embedding_lookup(
             t, i, axis_name="model", shard_rows=16),
-        mesh=mesh, in_specs=(P("model", None), P()), out_specs=P(),
-        check_vma=False)
+        mesh=mesh, in_specs=(P("model", None), P()), out_specs=P())
     got = fn(table, ids)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(jnp.take(table, ids, axis=0)),
