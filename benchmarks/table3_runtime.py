@@ -6,14 +6,18 @@ representation (the paper's characterization of the original framework's
 work pattern); EfficientIMM uses fused counting + rebuild + adaptive
 representation.  Relative speedups are the reproduction target — absolute
 times are CPU-container numbers.  Both paths run through the
-`InfluenceEngine` API (repro.core.engine) over preallocated RRR arenas.
+`InfluenceEngine` API (repro.core.engine) over preallocated RRR arenas;
+``--mesh N`` (or ``auto``) runs both over a mesh-sharded RRR store
+(paper C1) — results are seed-for-seed identical, so speedup ratios stay
+comparable across layouts.  On one device the default is no mesh.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from benchmarks._util import print_table, save_results
-from repro.configs.imm_snap import IMM_EXPERIMENTS
+from repro.configs.imm_snap import IMM_EXPERIMENTS, make_theta_mesh
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.graphs.datasets import scaled_snap
 
@@ -21,31 +25,36 @@ GRAPHS = ["com-Amazon", "com-DBLP", "com-YouTube", "as-Skitter",
           "web-Google", "soc-Pokec", "com-LJ"]        # Twitter7: in --full
 
 
-def _run_one(g, model, method, adaptive, k, max_theta, seed=0):
+def _run_one(g, model, method, adaptive, k, max_theta, seed=0, mesh=None):
     cfg = IMMConfig(k=k, model=model, selection_method=method,
                     adaptive_representation=adaptive,
                     max_theta=max_theta, batch=256, seed=seed)
     t0 = time.perf_counter()
     # engine construction stays inside the timed window: it runs sampler
     # preprocessing (e.g. the dense logq build) that imm() always included
-    engine = InfluenceEngine(g, cfg)
+    engine = InfluenceEngine(g, cfg, mesh=mesh)
     res = engine.run()
     return time.perf_counter() - t0, res
 
 
-def run(k: int = 20, max_theta: int = 4096, full: bool = False, log=print):
+def run(k: int = 20, max_theta: int = 4096, full: bool = False, mesh=None,
+        log=print):
+    mesh = make_theta_mesh(mesh)
     graphs = GRAPHS + (["Twitter7"] if full else [])
     rows, payload = [], {}
     for name in graphs:
         exp = IMM_EXPERIMENTS[name]
         g = scaled_snap(name, exp.bench_scale, seed=0)
-        entry = {"n": g.n, "m": g.m}
+        entry = {"n": g.n, "m": g.m,
+                 "mesh_shards": None if mesh is None else mesh.devices.size}
         for model in ("IC", "LT"):
             # warm compile both paths on the same graph
-            t_eff, r_eff = _run_one(g, model, "rebuild", True, k, max_theta)
-            t_eff, r_eff = _run_one(g, model, "rebuild", True, k, max_theta)
+            t_eff, r_eff = _run_one(g, model, "rebuild", True, k, max_theta,
+                                    mesh=mesh)
+            t_eff, r_eff = _run_one(g, model, "rebuild", True, k, max_theta,
+                                    mesh=mesh)
             t_rip, r_rip = _run_one(g, model, "decrement", False, k,
-                                    max_theta)
+                                    max_theta, mesh=mesh)
             entry[model] = {
                 "efficientimm_s": t_eff, "ripples_style_s": t_rip,
                 "speedup": t_rip / max(t_eff, 1e-9),
@@ -71,4 +80,13 @@ def run(k: int = 20, max_theta: int = 4096, full: bool = False, log=print):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--max-theta", type=int, default=4096)
+    ap.add_argument("--full", action="store_true",
+                    help="include Twitter7 (slow)")
+    ap.add_argument("--mesh", default=None,
+                    help="theta shards for the RRR store: int, 'auto', or "
+                         "omit for single-device")
+    a = ap.parse_args()
+    run(k=a.k, max_theta=a.max_theta, full=a.full, mesh=a.mesh)

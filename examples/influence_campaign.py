@@ -14,15 +14,20 @@ answer a whole sweep of questions from it —
 and finally Monte-Carlo-validates the IC influence estimate by simulating
 the diffusion forward from the chosen seeds.
 
-    PYTHONPATH=src python examples/influence_campaign.py
+``--mesh N`` (or ``auto``) runs the whole campaign against a mesh-sharded
+RRR store (paper C1) — same answers, theta partitioned across devices; on
+a single device it defaults to no mesh.
+
+    PYTHONPATH=src python examples/influence_campaign.py [--mesh auto]
 """
+import argparse
 import tempfile
 import time
 
 import numpy as np
 
 from repro.core import InfluenceEngine, IMMConfig
-from repro.configs.imm_snap import CAMPAIGN_KS
+from repro.configs.imm_snap import CAMPAIGN_KS, make_theta_mesh
 from repro.graphs.datasets import scaled_snap
 
 
@@ -48,15 +53,25 @@ def simulate_ic(graph, seeds, n_trials: int = 50, seed: int = 1):
     return total / n_trials
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default=None,
+                    help="theta shards for the RRR store: int, 'auto' "
+                         "(all devices), or omit for single-device")
+    args = ap.parse_args(argv)
+    mesh = make_theta_mesh(args.mesh)
+
     print("building YouTube-scale synthetic network (replica)...")
     g = scaled_snap("com-YouTube", 0.004)
     print(f"  n={g.n:,} m={g.m:,}")
+    if mesh is not None:
+        print(f"  RRR store sharded over {mesh.devices.size} device(s)")
 
     ks = [k for k in CAMPAIGN_KS if k <= 20]
     for model in ("IC", "LT"):
         engine = InfluenceEngine(
-            g, IMMConfig(k=max(ks), eps=0.5, model=model, max_theta=8192))
+            g, IMMConfig(k=max(ks), eps=0.5, model=model, max_theta=8192),
+            mesh=mesh)
         t0 = time.time()
         res = engine.run()
         t_solve = time.time() - t0
@@ -90,7 +105,8 @@ def main():
             with tempfile.TemporaryDirectory() as ckpt_dir:
                 engine.snapshot(ckpt_dir)
                 engine2 = InfluenceEngine(
-                    g, IMMConfig(k=max(ks), model=model, max_theta=8192))
+                    g, IMMConfig(k=max(ks), model=model, max_theta=8192),
+                    mesh=mesh)
                 engine2.restore(ckpt_dir)
                 sel2 = engine2.select(ks[0])
                 same = list(sel2.seeds) == list(engine.select(ks[0]).seeds)

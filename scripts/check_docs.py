@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Docs link checker (CI): files referenced from README/docs must exist.
+
+Scans README.md and docs/**/*.md for
+  * relative markdown links ``[text](path)`` (external URLs and #anchors
+    are skipped), resolved against the referencing file;
+  * backticked repo paths like ``src/repro/core/store.py`` — the code
+    references the docs make must resolve against the repo root.
+
+Exits non-zero listing every dangling reference.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH = re.compile(
+    r"`((?:src|docs|scripts|tests|examples|benchmarks|experiments)"
+    r"/[\w./-]+\.(?:py|md|sh|txt|json))`")
+
+
+def doc_files():
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").rglob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check(path: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for target in MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    for target in CODE_PATH.findall(text):
+        if not (REPO / target).exists():
+            errors.append(
+                f"{path.relative_to(REPO)}: missing code ref -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    if not any(f.parent.name == "docs" for f in files):
+        print("check_docs: no docs/*.md found", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    print(f"check_docs: {len(files)} files, "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} dangling refs)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: bytecode-compile everything under src, then run the fast
-# test suite (slow production cells are deselected; run them explicitly
-# with `pytest -m slow`).  Extra args pass through to pytest.
+# Tier-1 CI gate: bytecode-compile everything under src, run the fast test
+# suite (slow production cells are deselected; run them explicitly with
+# `pytest -m slow`), re-run the mesh-touching tests on a forced 4-device
+# host platform so the sharded code paths execute with real multi-device
+# buffers on CPU-only runners, and check that docs references resolve.
+# Extra args pass through to the main pytest invocation.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,3 +12,16 @@ python -m compileall -q src
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"
+
+# mesh code paths under a forced 4-device host mesh (paper C1 layouts):
+# ShardedStore, sharded selection, and the engine equivalence tests all
+# run with the theta axis physically split 4 ways
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -q -m "not slow" \
+        tests/test_sharded_store.py \
+        "tests/test_engine_store.py::test_sharded_strategy_through_engine_matches_local" \
+        "tests/test_sharded_and_integration.py::test_select_dense_sharded_equals_local"
+
+# docs health: files referenced from README/docs must exist
+python scripts/check_docs.py

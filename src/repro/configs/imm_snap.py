@@ -7,6 +7,12 @@ Each entry pairs the SNAP graph stats with the paper's hyper-parameters
 ``campaign_ks`` is the multi-query sweep a shared `InfluenceEngine` store
 answers after one sampling pass (examples/influence_campaign.py and the
 IMServer workload in launch/serve.py).
+
+``make_theta_mesh`` is the one mesh-configuration entry point every IM
+driver shares (launch/im_run.py, launch/serve.py,
+examples/influence_campaign.py, benchmarks/table3_runtime.py): it maps a
+``--mesh`` flag value onto a 1-D ``jax.sharding.Mesh`` over ``THETA_AXIS``
+that the `InfluenceEngine` uses to shard its RRR store (paper C1).
 """
 from __future__ import annotations
 
@@ -14,6 +20,34 @@ import dataclasses
 
 from repro.core.engine import IMMConfig
 from repro.graphs.datasets import SNAP_STATS
+
+# the mesh axis the RRR-set theta dimension shards over, everywhere — the
+# ShardedStore, the sampler batch placement, and sharded selection all key
+# off this name
+THETA_AXIS = "data"
+
+
+def make_theta_mesh(shards=None, *, axis: str = THETA_AXIS):
+    """Resolve a ``--mesh`` flag into a theta-sharding mesh (or None).
+
+    ``None``/``0`` -> no mesh: single-device engine, replicated
+    `BitmapStore` (the sensible one-device default).  ``"auto"`` -> one
+    theta shard per local device.  An int -> that many shards, clipped to
+    the available device count so pod-sized flags degrade gracefully on a
+    laptop (1 shard on 1 device — still the sharded code path, same
+    results; sharding never changes results, only layout).  An
+    already-built ``Mesh`` passes through unchanged, so programmatic
+    callers need no flag-vs-mesh dispatch.
+    """
+    if shards in (None, 0, "0", "none"):
+        return None
+    if hasattr(shards, "shape"):        # already a Mesh
+        return shards
+    import jax
+
+    avail = jax.device_count()
+    n = avail if shards == "auto" else min(int(shards), avail)
+    return jax.make_mesh((n,), (axis,))
 
 # seed-set sizes an influence campaign sweeps against one sampled store —
 # the engine memoizes per-k selections, so the sweep costs one selection

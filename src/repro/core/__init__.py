@@ -9,7 +9,8 @@ The paper's primary contribution, as a composable JAX module:
                      rebuild (C1+C5), Ripples-style decremental baseline,
                      and the `SelectionStrategy` registry
   * adaptive.py    — bitmap vs index-list representation choice (C4)
-  * store.py       — preallocated RRR arenas (BitmapStore / IndexStore)
+  * store.py       — preallocated RRR arenas (BitmapStore / IndexStore /
+                     mesh-sharded ShardedStore, paper C1 end-to-end)
   * engine.py      — `InfluenceEngine`: Algorithm 1 + incremental
                      extend/select/influence multi-query serving and
                      snapshot/restore resumability
@@ -37,7 +38,7 @@ from repro.core.adaptive import (
     choose_representation, bitmap_to_indices, indices_to_bitmap, l_pad_for,
 )
 from repro.core.store import (
-    RRRStore, StoreView, BitmapStore, IndexStore, make_store,
+    RRRStore, StoreView, BitmapStore, IndexStore, ShardedStore, make_store,
     store_from_state,
 )
 from repro.core.engine import (
@@ -54,8 +55,8 @@ __all__ = [
     "register_selection", "get_selection",
     "choose_representation", "bitmap_to_indices", "indices_to_bitmap",
     "l_pad_for",
-    "RRRStore", "StoreView", "BitmapStore", "IndexStore", "make_store",
-    "store_from_state",
+    "RRRStore", "StoreView", "BitmapStore", "IndexStore", "ShardedStore",
+    "make_store", "store_from_state",
     "InfluenceEngine", "Selection",
     "imm", "IMMResult", "IMMConfig",
 ]

@@ -20,7 +20,10 @@ Pieces:
     dense/sparse/sharded) instead of if/elif dispatch;
   * sampled sets land in a preallocated `RRRStore` arena (amortized
     doubling, in-place batch writes — see ``repro.core.store``), so
-    ``extend``/``select`` never re-concatenate O(theta) rows;
+    ``extend``/``select`` never re-concatenate O(theta) rows; with a mesh
+    the arena is a `ShardedStore` — the theta axis lives partitioned
+    across devices end-to-end (paper C1), so theta scales with device
+    count instead of single-device memory;
   * ``select`` results are memoized per (store version, k, method): a
     campaign sweep over many k is sampling-free after the first solve.
 
@@ -39,10 +42,10 @@ import jax.numpy as jnp
 from repro.graphs.csr import Graph
 from repro.core import martingale as mg
 from repro.core.adaptive import choose_representation, l_pad_for
-from repro.core.sampler import default_sampler_name, get_sampler
+from repro.core.sampler import bind_sampler, default_sampler_name, get_sampler
 from repro.core.selection import get_selection
 from repro.core.store import (
-    RRRStore, make_store, next_pow2, store_from_state,
+    RRRStore, ShardedStore, make_store, next_pow2, store_from_state,
 )
 from repro.checkpoint import store as ckpt
 
@@ -65,7 +68,9 @@ class IMMConfig:
     sparse_rep_min_n: int = 65536
     fuse_counters: bool = True            # C3 (informational; sampler always fuses)
     switch_ratio: int = 32
-    store: str = "auto"               # "auto" (bitmap) | "bitmap" | "indices"
+    # "auto" resolves to "sharded" when the engine has a mesh, "bitmap"
+    # otherwise; "sharded" demands a mesh
+    store: str = "auto"   # "auto" | "bitmap" | "indices" | "sharded"
     sampler: Optional[str] = None     # registry name; None = resolve by model/n
     seed: int = 0
 
@@ -99,9 +104,16 @@ class InfluenceEngine:
     ----------
     graph, cfg : the problem and its knobs (see `IMMConfig`).
     store      : optional pre-built `RRRStore` (default: ``cfg.store``).
-    mesh, theta_axes, vertex_axis : pass a mesh to route selection through
-        the sharded strategy (paper C1); axes name the mesh dims carrying
-        theta and (optionally) the vertex dimension.
+    mesh, theta_axes, vertex_axis : pass a mesh to run the paper's C1
+        partitioning end-to-end — the engine then keeps its RRR arenas in
+        a `ShardedStore` (theta axis partitioned over ``theta_axes``),
+        samplers place their batches shard-local, and selection consumes
+        the arena shards natively, psum-ing only reduced quantities.
+        ``vertex_axis`` optionally shards the vertex dimension inside
+        selection.  Passing a pre-built `ShardedStore` implies its mesh.
+
+    A mesh-equipped engine is seed-for-seed identical to a single-device
+    one for fixed ``cfg.seed`` — sharding changes layout, never results.
     """
 
     def __init__(self, graph: Graph, cfg: IMMConfig = None, *,
@@ -109,15 +121,26 @@ class InfluenceEngine:
                  theta_axes=("data",), vertex_axis=None):
         self.graph = graph
         self.cfg = cfg if cfg is not None else IMMConfig()
+        if mesh is None and isinstance(store, ShardedStore):
+            mesh, theta_axes = store.mesh, store.theta_axes
         self.mesh = mesh
         self.theta_axes = tuple(theta_axes)
         self.vertex_axis = vertex_axis
         self.key = jax.random.PRNGKey(self.cfg.seed)
+        if store is not None:
+            self.store = store
+        elif mesh is not None and self.cfg.store in ("auto", "sharded"):
+            self.store = make_store("sharded", graph.n, mesh=mesh,
+                                    theta_axes=self.theta_axes)
+        elif self.cfg.store == "sharded":
+            raise ValueError("store='sharded' needs a mesh")
+        else:
+            self.store = make_store(self.cfg.store, graph.n)
         self.sampler_name = self.cfg.sampler or default_sampler_name(
             graph, self.cfg)
-        self._sample = get_sampler(self.sampler_name)(graph, self.cfg)
-        self.store = store if store is not None else make_store(
-            self.cfg.store, graph.n)
+        self._sample = bind_sampler(
+            get_sampler(self.sampler_name), graph, self.cfg,
+            placement=getattr(self.store, "batch_sharding", None))
         self._select_cache: dict = {}
 
     # ------------------------------------------------------------ sampling
@@ -170,7 +193,10 @@ class InfluenceEngine:
             return hit
 
         if self.mesh is not None:
-            # the sharded strategies are dense-only (C1 partitions bitmaps)
+            # the sharded strategies are dense-only (C1 partitions bitmaps);
+            # a ShardedStore view hands its native arena shards straight to
+            # the strategy (no resharding), a replicated BitmapStore view is
+            # scattered on entry by shard_map
             if self.store.representation != "bitmap":
                 raise ValueError("sharded selection requires a bitmap store")
             rep, view, layout = "bitmap", self.store.view(), "sharded"
@@ -254,7 +280,13 @@ class InfluenceEngine:
             raise ValueError(
                 f"snapshot model {np.asarray(meta['model'])} != cfg.model "
                 f"{self.cfg.model}")
-        self.store = store_from_state(tree["store"])
+        # elastic across layouts: a snapshot taken on any mesh (or none)
+        # restores into this engine's *configured* store layout — sharded
+        # engines reshard, engines that deliberately keep a replicated /
+        # single-device store (cfg.store="bitmap" etc.) keep their kind
+        mesh = self.mesh if isinstance(self.store, ShardedStore) else None
+        self.store = store_from_state(
+            tree["store"], mesh=mesh, theta_axes=self.theta_axes)
         self.key = jnp.asarray(tree["key"])
         self._select_cache.clear()
         return True

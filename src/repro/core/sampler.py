@@ -5,6 +5,17 @@ fused in-place counter contribution (paper C3: counting is folded into
 generation, no re-gather pass).  The adaptive layer converts to index lists
 when sets are sparse (paper C4).
 
+Every sampler accepts an optional ``placement`` (a
+``jax.sharding.NamedSharding`` for the ``(B, n)`` visited output — a
+`ShardedStore` hands out its ``batch_sharding``).  When given, the
+constraint is applied to the *initial* frontier/visited state inside jit,
+so GSPMD partitions the whole generation loop over the batch axis and each
+device samples the rows its arena shard will store (paper C1: sampling
+writes device-local state).  PRNG values are position-keyed (threefry), so
+placement changes layout only — the sampled sets are bitwise identical on
+any mesh, which is what keeps sharded runs seed-for-seed equal to
+single-device ones.
+
 Three implementations:
   * ``sample_ic_dense``  — probabilistic reverse BFS as a *log-semiring
     mat-vec* on the dense IC matrix: P(u activated by frontier F) =
@@ -21,6 +32,7 @@ Three implementations:
 """
 from __future__ import annotations
 
+import inspect
 from functools import partial
 
 import jax
@@ -40,14 +52,22 @@ def make_logq(graph: Graph) -> jnp.ndarray:
     return jnp.maximum(jnp.log1p(-P.T), _LOGQ_CLAMP)
 
 
-@partial(jax.jit, static_argnames=("batch", "max_steps"))
-def sample_ic_dense(key, logq, *, batch: int, max_steps: int = 0):
-    """Returns (visited (B,n) uint8, counter (n,) int32, roots (B,))."""
+@partial(jax.jit, static_argnames=("batch", "max_steps", "placement"))
+def sample_ic_dense(key, logq, *, batch: int, max_steps: int = 0,
+                    placement=None):
+    """Returns (visited (B,n) uint8, counter (n,) int32, roots (B,)).
+
+    ``placement`` (optional ``NamedSharding`` over ``(B, n)``): constrains
+    the visited state so the frontier mat-vec loop is partitioned over the
+    batch axis and the output lands shard-local to the consuming store.
+    """
     n = logq.shape[0]
     max_steps = max_steps or n
     kroot, kstep = jax.random.split(key)
     roots = jax.random.randint(kroot, (batch,), 0, n)
     visited0 = jax.nn.one_hot(roots, n, dtype=jnp.bool_)
+    if placement is not None:
+        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
     frontier0 = visited0
 
     def cond(state):
@@ -70,19 +90,23 @@ def sample_ic_dense(key, logq, *, batch: int, max_steps: int = 0):
     return visited.astype(jnp.uint8), counter, roots
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps"))
+@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps",
+                                   "placement"))
 def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
-                     batch: int, max_steps: int = 0):
+                     batch: int, max_steps: int = 0, placement=None):
     """Edge-list frontier expansion with per-edge coins.
 
     edge_* are CSC-ordered (sorted by dst) but any order works.
-    Returns (visited, counter, roots).
+    Returns (visited, counter, roots).  ``placement`` as in
+    `sample_ic_dense`: batch-axis partitioning of the expansion loop.
     """
     m = edge_src.shape[0]
     max_steps = max_steps or n_nodes
     kroot, kstep = jax.random.split(key)
     roots = jax.random.randint(kroot, (batch,), 0, n_nodes)
     visited0 = jax.nn.one_hot(roots, n_nodes, dtype=jnp.bool_)
+    if placement is not None:
+        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
 
     def cond(state):
         step, frontier, visited, _ = state
@@ -106,15 +130,21 @@ def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
     return visited.astype(jnp.uint8), counter, roots
 
 
-@partial(jax.jit, static_argnames=("batch", "max_steps", "max_indeg_log2"))
+@partial(jax.jit, static_argnames=("batch", "max_steps", "max_indeg_log2",
+                                   "placement"))
 def sample_lt(key, dst_offsets, in_src, in_lt_cum, in_lt_total, *,
-              batch: int, max_steps: int = 0, max_indeg_log2: int = 32):
-    """LT-model RRR walk. Returns (visited (B,n) uint8, counter, roots)."""
+              batch: int, max_steps: int = 0, max_indeg_log2: int = 32,
+              placement=None):
+    """LT-model RRR walk. Returns (visited (B,n) uint8, counter, roots).
+    ``placement`` as in `sample_ic_dense`: the walk batch partitions over
+    the mesh so each device generates its store shard's rows."""
     n = dst_offsets.shape[0] - 1
     max_steps = max_steps or n
     kroot, kstep = jax.random.split(key)
     roots = jax.random.randint(kroot, (batch,), 0, n)
     visited0 = jax.nn.one_hot(roots, n, dtype=jnp.bool_)
+    if placement is not None:
+        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
 
     def pick_in_neighbor(cur, r):
         """Binary search within CSC segment of ``cur`` for lt_cum >= r."""
@@ -171,7 +201,10 @@ def sample_lt(key, dst_offsets, in_src, in_lt_cum, in_lt_total, *,
 # A factory takes (graph, cfg) and returns a bound sampler: a callable of a
 # PRNG key returning (visited (B, n) uint8, counter (n,) int32, roots (B,)).
 # Preprocessing (e.g. the dense log-survival matrix) happens once in the
-# factory, not per batch.
+# factory, not per batch.  Factories may additionally accept a keyword-only
+# ``placement`` (batch output sharding, see the module docstring); the
+# engine passes it only to factories that declare it (`bind_sampler`), so
+# user-registered (graph, cfg) factories keep working unchanged.
 
 _SAMPLER_REGISTRY = {}
 
@@ -214,21 +247,35 @@ def default_sampler_name(graph: Graph, cfg) -> str:
     raise ValueError(f"unknown diffusion model {cfg.model!r}")
 
 
+def bind_sampler(factory, graph: Graph, cfg, placement=None):
+    """Instantiate a sampler factory, forwarding ``placement`` only when
+    the factory declares it (keyword ``placement`` or ``**kwargs``) —
+    back-compat with user factories registered as ``(graph, cfg)``."""
+    if placement is not None:
+        params = inspect.signature(factory).parameters
+        takes_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                       for p in params.values())
+        if "placement" in params or takes_kw:
+            return factory(graph, cfg, placement=placement)
+    return factory(graph, cfg)
+
+
 @register_sampler("IC-dense")
-def _ic_dense_factory(graph: Graph, cfg):
+def _ic_dense_factory(graph: Graph, cfg, *, placement=None):
     logq = make_logq(graph)
-    return lambda key: sample_ic_dense(key, logq, batch=cfg.batch)
+    return lambda key: sample_ic_dense(
+        key, logq, batch=cfg.batch, placement=placement)
 
 
 @register_sampler("IC-sparse")
-def _ic_sparse_factory(graph: Graph, cfg):
+def _ic_sparse_factory(graph: Graph, cfg, *, placement=None):
     return lambda key: sample_ic_sparse(
         key, graph.edge_src, graph.edge_dst, graph.in_prob,
-        n_nodes=graph.n, batch=cfg.batch)
+        n_nodes=graph.n, batch=cfg.batch, placement=placement)
 
 
 @register_sampler("LT")
-def _lt_factory(graph: Graph, cfg):
+def _lt_factory(graph: Graph, cfg, *, placement=None):
     return lambda key: sample_lt(
         key, graph.dst_offsets, graph.in_src, graph.in_lt_cum,
-        graph.in_lt_total, batch=cfg.batch)
+        graph.in_lt_total, batch=cfg.batch, placement=placement)

@@ -15,9 +15,18 @@ The two are algebraically identical (property-tested); their cost profiles
 differ exactly as the paper describes — with skewed graphs most sets contain
 the first seeds, so the decremental update touches far more rows.
 
-``select_dense_sharded`` is the multi-device version: the theta axis is
-sharded across the mesh (paper C1 RRRset partitioning), each device reduces a
-partial counter, and a ``psum`` plays the role of the atomic global counter.
+``select_dense_sharded`` is the multi-device version (paper C1 RRRset
+partitioning, end-to-end since the `ShardedStore` rework): the theta axis
+of ``R`` is sharded across the mesh and each device reduces over *its own
+resident arena shard* — when fed a ``ShardedStore`` view the input specs
+match the store's native ``P(theta_axes, None)`` layout, so no arena data
+moves on entry.  Per greedy round only reduced quantities cross devices
+(the ``(n,)`` counter psum standing in for the paper's atomic adds, and a
+scalar gain); arena rows never do.  Both counter-update methods exist as
+true implementations here: ``rebuild`` re-reduces the surviving local rows
+every round (C5), ``decrement`` keeps a *local partial counter* per shard
+and subtracts the covered local rows' contribution — the running-counter
+baseline, executed shard-locally.
 
 The `SelectionStrategy` registry at the bottom exposes all of these to the
 `InfluenceEngine` as ``(method, layout)`` pairs — rebuild/decrement x
@@ -42,7 +51,9 @@ from repro.sparse.scatter import bincount_weighted
 def select_dense(R, valid, k: int, method: str = "rebuild"):
     """R: (theta, n) uint8 bitmaps; valid: (theta,) bool (generated sets).
 
-    Returns (seeds (k,) int32, covered_frac () f32, gains (k,) int32).
+    Single-device (arrays replicated / unsharded); ``valid`` may be any
+    mask.  Returns (seeds (k,) int32, covered_frac () f32,
+    gains (k,) int32).
     """
     theta, n = R.shape
     Rf = R.astype(jnp.float32)
@@ -94,7 +105,9 @@ def select_dense(R, valid, k: int, method: str = "rebuild"):
 
 @partial(jax.jit, static_argnames=("n", "k", "method"))
 def select_sparse(R_idx, valid, n: int, k: int, method: str = "rebuild"):
-    """R_idx: (theta, L) int32 with sentinel ``n`` padding."""
+    """R_idx: (theta, L) int32 with sentinel ``n`` padding; valid:
+    (theta,) bool.  Single-device.  Returns (seeds (k,) int32,
+    covered_frac () f32, gains (k,) int32)."""
     theta, L = R_idx.shape
 
     def counter_of(alive):
@@ -144,24 +157,43 @@ def select_sparse(R_idx, valid, n: int, k: int, method: str = "rebuild"):
 # -------------------------------------------------------------- sharded ----
 
 def select_dense_sharded(mesh, R, valid, k: int, *,
-                         theta_axes=("data",), vertex_axis=None):
+                         theta_axes=("data",), vertex_axis=None,
+                         method: str = "rebuild"):
     """EfficientIMM selection with the theta axis sharded over ``theta_axes``
     (paper C1) and, optionally, the vertex axis over ``vertex_axis``.
 
-    Inside shard_map each device owns a (theta_local, n[_local]) block,
-    reduces its partial counter, and the cross-device ``psum`` replaces the
-    paper's atomic adds.  The greedy argmax is computed redundantly on every
-    device (cheap, avoids a broadcast).
+    ``R (theta, n) uint8`` and ``valid (theta,) bool`` enter with specs
+    ``P(theta_axes, vertex_axis)`` / ``P(theta_axes)`` — a `ShardedStore`
+    view already carries exactly this layout (with ``vertex_axis=None``),
+    so its arena shards are consumed in place; replicated arrays are
+    scattered on entry.  ``valid`` may be any mask, not just a prefix —
+    sharded stores fill each shard independently.
+
+    Inside shard_map each device owns a ``(theta_local, n[_local])`` block.
+    Per greedy round only reduced quantities cross devices: the ``(n,)``
+    counter ``psum`` (the paper's atomic global counter) and the scalar
+    gain — never arena rows.  The greedy argmax is computed redundantly on
+    every device (cheap, avoids a broadcast).
+
+    ``method="rebuild"`` re-reduces the surviving local rows every round
+    (C5).  ``method="decrement"`` is the true decremental update executed
+    shard-locally: each device keeps a partial counter over its own rows
+    and subtracts the contribution of its newly-covered rows, so the
+    running global counter is ``psum`` of partials.  Both are exact over
+    integer-valued f32 counts and return identical selections.
+
+    Returns replicated ``(seeds (k,) int32, covered_frac () f32,
+    gains (k,) int32)``.
     """
     axes = tuple(theta_axes)
+    if method not in ("rebuild", "decrement"):
+        raise ValueError(f"unknown method {method}")
 
     def local_select(R_local, valid_local):
         Rf = R_local.astype(jnp.float32)
 
-        def body(i, state):
-            alive, seeds, gains = state
-            partial_counter = alive.astype(jnp.float32) @ Rf
-            counter = jax.lax.psum(partial_counter, axes)       # global counter
+        def pick(counter, alive):
+            """Greedy argmax over the global counter -> (v, covered)."""
             if vertex_axis is not None:
                 # vertex-sharded counter: argmax over local block, then a
                 # global argmax over (value, global index) pairs.
@@ -173,23 +205,49 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
                 vals = jax.lax.all_gather(val, vertex_axis)
                 gidxs = jax.lax.all_gather(gidx, vertex_axis)
                 v = gidxs[jnp.argmax(vals)].astype(jnp.int32)
-                member = (R_local[:, jnp.clip(v - shard * nloc, 0, nloc - 1)] > 0)
+                member = (R_local[:, jnp.clip(v - shard * nloc, 0, nloc - 1)]
+                          > 0)
                 member = jnp.where(
-                    (v >= shard * nloc) & (v < (shard + 1) * nloc), member, False)
+                    (v >= shard * nloc) & (v < (shard + 1) * nloc),
+                    member, False)
                 member = jax.lax.psum(
                     member.astype(jnp.int32), vertex_axis) > 0
             else:
                 v = jnp.argmax(counter).astype(jnp.int32)
                 member = R_local[:, v] > 0
-            covered = member & alive
-            gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
-            return alive & ~covered, seeds.at[i].set(v), gains.at[i].set(gain)
+            return v, member & alive
 
-        alive, seeds, gains = jax.lax.fori_loop(
-            0, k, body,
-            (valid_local, jnp.zeros((k,), jnp.int32),
-             jnp.zeros((k,), jnp.int32)),
-        )
+        if method == "rebuild":
+            def body(i, state):
+                alive, seeds, gains = state
+                counter = jax.lax.psum(alive.astype(jnp.float32) @ Rf, axes)
+                v, covered = pick(counter, alive)
+                gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+                return (alive & ~covered,
+                        seeds.at[i].set(v), gains.at[i].set(gain))
+
+            alive, seeds, gains = jax.lax.fori_loop(
+                0, k, body,
+                (valid_local, jnp.zeros((k,), jnp.int32),
+                 jnp.zeros((k,), jnp.int32)),
+            )
+        else:
+            partial0 = valid_local.astype(jnp.float32) @ Rf
+
+            def body(i, state):
+                alive, partial, seeds, gains = state
+                counter = jax.lax.psum(partial, axes)
+                v, covered = pick(counter, alive)
+                gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+                partial = partial - covered.astype(jnp.float32) @ Rf
+                return (alive & ~covered, partial,
+                        seeds.at[i].set(v), gains.at[i].set(gain))
+
+            alive, _, seeds, gains = jax.lax.fori_loop(
+                0, k, body,
+                (valid_local, partial0, jnp.zeros((k,), jnp.int32),
+                 jnp.zeros((k,), jnp.int32)),
+            )
         n_valid = jnp.maximum(
             jax.lax.psum(valid_local.sum(dtype=jnp.float32), axes), 1.0)
         return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
@@ -257,16 +315,13 @@ def _sparse_strategy(method):
 
 
 def _sharded_strategy(method):
-    # the psum-rebuild update serves both methods: it is algebraically
-    # identical to the decremental baseline (property-tested above), and on
-    # a mesh the rebuild *is* the paper's counter-update of choice (C5).
     def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
             **_):
         if mesh is None:
             raise ValueError("sharded selection needs a mesh")
         return select_dense_sharded(
             mesh, view.R, view.valid, k,
-            theta_axes=theta_axes, vertex_axis=vertex_axis)
+            theta_axes=theta_axes, vertex_axis=vertex_axis, method=method)
     return run
 
 

@@ -1,38 +1,52 @@
 """Persistent RRR-set arenas — the resident store behind `InfluenceEngine`.
 
-The paper's C3/C4/C5 optimizations all hinge on *where the sampled RRR sets
-live*: fused counting writes into a store-owned counter, the adaptive
-representation is a property of the store, and selection reads the store
-without reshaping it.  This module makes that explicit:
+The paper's C1/C3/C4/C5 optimizations all hinge on *where the sampled RRR
+sets live*: fused counting writes into a store-owned counter, the adaptive
+representation is a property of the store, the NUMA/device partitioning of
+the sets is a property of the store, and selection reads the store without
+reshaping it.  This module makes that explicit:
 
   * ``RRRStore``   — the protocol every backend implements: in-place
     ``add_batch``, a shape-stable ``view()`` for selection, fused per-node
     ``counter`` (C3), per-set ``sizes``, batched membership queries
     (``hits``), and ``state()``/``from_state`` for snapshots.
-  * ``BitmapStore`` — ``(capacity, n) uint8`` bitmap arena.  Capacity is a
-    power of two grown by amortized doubling; batches are written in place
-    with a donated ``dynamic_update_slice`` so the hot loop never re-concats
-    O(theta) rows and jit recompilations are bounded by O(log theta)
-    distinct arena shapes.  Converts to index lists lazily (C4) via a
-    version-keyed cache.
+  * ``BitmapStore`` — single-device ``(capacity, n) uint8`` bitmap arena.
+    Capacity is a power of two grown by amortized doubling; batches are
+    written in place with a donated ``dynamic_update_slice`` so the hot
+    loop never re-concats O(theta) rows and jit recompilations are bounded
+    by O(log theta) distinct arena shapes.  Converts to index lists lazily
+    (C4) via a version-keyed cache.
   * ``IndexStore``  — ``(capacity, L) int32`` index-list arena (sentinel
     ``n``), for regimes where sets are sparse from the start (LT walks,
     huge graphs); widens ``L`` by power-of-two steps as larger sets arrive.
+  * ``ShardedStore`` — the paper's C1 partitioning end-to-end: a bitmap
+    arena whose theta axis is sharded across a ``jax.sharding.Mesh``.
+    Every device owns a ``(cap_local, n)`` block; batch writes, fused
+    counting, and per-shard growth all happen device-locally inside a
+    donated ``shard_map`` kernel, so the full ``(theta, n)`` arena never
+    exists on any single device and theta scales with device count.
 
-Both backends preserve exact equivalence with the historical pad-to-pow2
+All backends preserve exact equivalence with the historical pad-to-pow2
 selection inputs: padding rows are all-zero (bitmap) / all-sentinel
-(indices) and masked by ``view().valid``.
+(indices) and masked by ``view().valid``.  For ``ShardedStore``, row
+*placement* is a layout detail, not a semantic one — selection, ``hits``
+and the global counter are permutation-invariant over rows (every
+reduction is an exact integer sum), so results are seed-for-seed
+identical to a ``BitmapStore`` fed the same sample stream, on any mesh.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Protocol, runtime_checkable
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.adaptive import bitmap_to_indices
 
 MIN_CAPACITY = 16     # matches the historical pad floor (1 << 4)
@@ -53,8 +67,14 @@ class StoreView:
 
     ``R`` is ``(capacity, n) uint8`` bitmaps when ``representation ==
     "bitmap"`` and ``(capacity, L) int32`` sentinel-padded index lists when
-    ``representation == "indices"``; rows at index >= ``count`` are padding
-    and are masked out by ``valid``.
+    ``representation == "indices"``.  For single-device stores, rows at
+    index >= ``count`` are padding and ``valid`` is the prefix mask
+    ``arange(capacity) < count``.  For `ShardedStore` views, ``R`` is the
+    *sharded* global arena (``P(theta_axes, None)``), valid rows are a
+    per-shard prefix rather than a global one, and ``valid`` (sharded
+    ``P(theta_axes)``) masks exactly the rows each shard has filled —
+    consumers must always mask by ``valid`` instead of assuming
+    contiguity.
 
     Views alias the live arena buffer, which `add_batch` donates to its
     in-place writer — a view is only safe to read until the store's next
@@ -67,6 +87,14 @@ class StoreView:
     valid: jnp.ndarray
     n: int
     count: int
+
+
+def _coverage_stats(sizes, count: int, n: int) -> tuple[float, int]:
+    """(avg fractional set coverage, max set size) from a sizes array —
+    padding entries are zero, so sums/maxes ignore them."""
+    sizes = np.asarray(sizes)
+    avg_cov = float(sizes.sum()) / max(count, 1) / n
+    return avg_cov, max(int(sizes.max()) if sizes.size else 1, 1)
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -101,7 +129,18 @@ def _index_hits(R_idx, valid, S):
 
 @runtime_checkable
 class RRRStore(Protocol):
-    """Protocol for RRR-set stores consumed by `InfluenceEngine`."""
+    """Protocol for RRR-set stores consumed by `InfluenceEngine`.
+
+    ``add_batch(visited, counter=None)`` takes ``(B, n) uint8`` bitmaps and
+    appends them in place (implementations donate their arena buffer — do
+    not hold references to a previous ``view()`` across a write).
+    ``counter`` is the sampler's fused ``(n,) int32`` batch contribution;
+    backends may recompute it locally instead (``ShardedStore`` does, so
+    the count stays shard-local).  ``view()`` returns a `StoreView` whose
+    arrays alias live buffers; ``hits(S)`` answers ``(Q, L) int32`` seed-
+    set membership queries as per-query covered fractions ``(Q,) f32``;
+    ``state()`` returns a host pytree for `checkpoint.store`.
+    """
     representation: str
     n: int
     count: int
@@ -149,9 +188,7 @@ class _ArenaBase:
 
     def coverage_stats(self) -> tuple[float, int]:
         """(avg fractional set coverage, max set size) over stored sets."""
-        sizes = np.asarray(self.sizes)
-        avg_cov = float(sizes.sum()) / max(self.count, 1) / self.n
-        return avg_cov, max(int(sizes.max()) if sizes.size else 1, 1)
+        return _coverage_stats(self.sizes, self.count, self.n)
 
     def _base_state(self) -> dict:
         return {
@@ -163,7 +200,9 @@ class _ArenaBase:
 
 
 class BitmapStore(_ArenaBase):
-    """Dense bitmap arena: ``(capacity, n) uint8``, zero-padded rows."""
+    """Dense single-device bitmap arena: ``(capacity, n) uint8``,
+    zero-padded rows, unsharded (replicated from the mesh's point of
+    view).  Use `ShardedStore` when theta must scale past one device."""
 
     representation = "bitmap"
 
@@ -177,6 +216,13 @@ class BitmapStore(_ArenaBase):
         self.R = _write_rows(R, self.R, jnp.int32(0))
 
     def add_batch(self, visited, counter=None) -> None:
+        """Append ``visited (B, n) uint8`` rows in place.
+
+        The arena buffer is donated to the writer — any outstanding
+        ``view()`` of this store is invalidated by this call.  ``counter``
+        is the sampler's fused ``(n,) int32`` contribution (computed here
+        when absent).
+        """
         visited = jnp.asarray(visited).astype(jnp.uint8)
         self._grow_rows(self.count + visited.shape[0])
         if counter is None:
@@ -185,6 +231,9 @@ class BitmapStore(_ArenaBase):
         self._finish_add(visited.sum(axis=1, dtype=jnp.int32), counter)
 
     def view(self) -> StoreView:
+        """Aliasing `StoreView` of the live ``(capacity, n)`` arena with
+        the prefix mask ``arange(capacity) < count``; read it before the
+        next ``add_batch`` (which donates the buffer)."""
         return StoreView("bitmap", self.R, self._valid(), self.n, self.count)
 
     def index_view(self, l_pad: int) -> StoreView:
@@ -196,9 +245,12 @@ class BitmapStore(_ArenaBase):
                          self.n, self.count)
 
     def hits(self, S) -> jnp.ndarray:
+        """Covered fraction per query: ``S (Q, L) int32`` -> ``(Q,) f32``."""
         return _bitmap_hits(self.R, self._valid(), jnp.asarray(S, jnp.int32))
 
     def state(self) -> dict:
+        """Host snapshot pytree: full ``(capacity, n)`` arena plus
+        counters (kind tag ``"bitmap"``)."""
         st = self._base_state()
         st["kind"] = np.asarray("bitmap")
         st["R"] = np.asarray(self.R)
@@ -211,6 +263,16 @@ class BitmapStore(_ArenaBase):
         store.sizes = jnp.asarray(st["sizes"], jnp.int32)
         store.counter = jnp.asarray(st["counter"], jnp.int32)
         store.count = int(st["count"])
+        return store
+
+    @classmethod
+    def from_rows(cls, rows, n: int) -> "BitmapStore":
+        """Build a store holding exactly ``rows (count, n) uint8`` — the
+        cross-layout restore path (e.g. a `ShardedStore` snapshot opened
+        without a mesh)."""
+        store = cls(int(n), capacity=max(int(rows.shape[0]), MIN_CAPACITY))
+        if rows.shape[0]:
+            store.add_batch(jnp.asarray(rows, jnp.uint8))
         return store
 
 
@@ -278,24 +340,327 @@ class IndexStore(_ArenaBase):
         return store
 
 
-STORE_KINDS = {"bitmap": BitmapStore, "indices": IndexStore}
+# ------------------------------------------------------- sharded (C1) ----
+
+
+def _sharded_zeros(shape, dtype, sharding):
+    """Zeros *born sharded*: allocated under jit with ``out_shardings`` so
+    the full logical array is never materialized on a single device."""
+    return jax.jit(partial(jnp.zeros, shape, dtype),
+                   out_shardings=sharding)()
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_write_kernels(mesh, theta_axes):
+    """Compiled per-(mesh, axes) store kernels, shared across stores.
+
+    Returns ``(write, valid)``:
+      * ``write(R, sizes, counter, counts, rows, incs)`` — every shard
+        writes its ``(b, n)`` block of the batch into its local arena at
+        its own row offset ``counts[shard]``, fuses the local size/counter
+        updates (C3 done shard-locally), and advances its count by
+        ``incs[shard]``.  ``R``/``sizes``/``counter``/``counts`` are
+        donated — the store's previous buffers are dead after the call.
+      * ``valid(counts, sizes)`` — per-shard prefix mask
+        ``local_iota < counts[shard]`` as a global ``P(theta_axes)`` bool
+        array (``sizes`` is only a shape donor).
+    """
+    sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
+
+    def write(R, sizes, counter, counts, rows, incs):
+        start = counts[0]
+        R = jax.lax.dynamic_update_slice(R, rows, (start, jnp.int32(0)))
+        live = jnp.arange(rows.shape[0], dtype=jnp.int32) < incs[0]
+        row_sizes = jnp.where(live, rows.sum(axis=1, dtype=jnp.int32), 0)
+        sizes = jax.lax.dynamic_update_slice(sizes, row_sizes, (start,))
+        counter = counter + rows.sum(axis=0, dtype=jnp.int32)[None, :]
+        return R, sizes, counter, counts + incs
+
+    write_fn = jax.jit(
+        shard_map(write, mesh=mesh,
+                  in_specs=(sp_rows, sp_vec, sp_rows, sp_vec, sp_rows,
+                            sp_vec),
+                  out_specs=(sp_rows, sp_vec, sp_rows, sp_vec)),
+        donate_argnums=(0, 1, 2, 3))
+
+    def valid(counts, sizes):
+        return jnp.arange(sizes.shape[0], dtype=jnp.int32) < counts[0]
+
+    valid_fn = jax.jit(shard_map(
+        valid, mesh=mesh, in_specs=(sp_vec, sp_vec), out_specs=sp_vec))
+    return write_fn, valid_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_grow_kernel(mesh, theta_axes, pad):
+    """Per-shard capacity doubling: every shard zero-pads its own
+    ``(cap_local, n)`` block to ``(cap_local + pad, n)`` locally (no
+    gather, no cross-device traffic; the copy itself is not donatable
+    because the output shape differs, but doubling amortizes it)."""
+    sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
+
+    def grow(R, sizes):
+        return (jnp.pad(R, ((0, pad), (0, 0))),
+                jnp.pad(sizes, ((0, pad),)))
+
+    return jax.jit(shard_map(grow, mesh=mesh, in_specs=(sp_rows, sp_vec),
+                             out_specs=(sp_rows, sp_vec)))
+
+
+class ShardedStore:
+    """Mesh-sharded dense bitmap arena — the paper's C1 RRR-set
+    partitioning applied to the *store itself*, not just selection.
+
+    State layout over ``D = prod(mesh.shape[a] for a in theta_axes)``
+    shards:
+
+      * ``R``       — ``(D * cap_local, n) uint8``, ``P(theta_axes, None)``:
+        shard ``d`` owns rows ``[d * cap_local, (d+1) * cap_local)``.  The
+        full arena never exists on one device; per-device memory is
+        ``cap_local * n`` bytes, so theta scales with device count.
+      * ``sizes``   — ``(D * cap_local,) int32``, ``P(theta_axes)``,
+        aligned with ``R`` rows.
+      * counter     — per-shard partials ``(D, n) int32``,
+        ``P(theta_axes, None)``; the ``counter`` property reduces them to
+        the replicated global fused counter for host consumers (selection
+        never needs it — it reduces shard-locally and psums).
+      * row counts  — ``(D,) int32``, ``P(theta_axes)``, plus a host
+        mirror that drives growth logic without device syncs.
+
+    ``add_batch`` splits each sampled batch into D equal row blocks
+    (zero-padding the tail when ``B % D != 0``; pad rows are masked, not
+    counted) and runs the donated shard_map write kernel: each device
+    writes its block into its local arena slot and fuses its local size /
+    counter updates.  Capacity grows *per shard* by amortized doubling
+    (``cap_local`` is a power of two), so jit retraces stay O(log theta)
+    and growth copies are device-local.
+
+    Row placement across shards is a layout detail: selection, ``hits``
+    and the global counter are permutation-invariant over rows (exact
+    integer sums), so a `ShardedStore` fed the same sample stream as a
+    `BitmapStore` yields bit-identical selections on any mesh size.
+
+    ``snapshot``/``restore`` go through ``state()``/``from_state``: the
+    snapshot stores valid rows *compacted* on host (shard order), so a
+    snapshot taken on one mesh restores onto any other mesh — or into a
+    plain `BitmapStore` when no mesh is available (see
+    `store_from_state`).
+    """
+
+    representation = "bitmap"
+
+    def __init__(self, n: int, *, mesh, theta_axes=("data",),
+                 capacity: int = MIN_CAPACITY):
+        if mesh is None:
+            raise ValueError("ShardedStore needs a jax.sharding.Mesh")
+        if isinstance(theta_axes, str):
+            theta_axes = (theta_axes,)
+        self.n = int(n)
+        self.mesh = mesh
+        self.theta_axes = tuple(theta_axes)
+        self.D = int(np.prod([mesh.shape[a] for a in self.theta_axes]))
+        self.cap_local = next_pow2(-(-int(capacity) // self.D))
+        self.version = 0
+        self._sh_rows = NamedSharding(mesh, P(self.theta_axes, None))
+        self._sh_vec = NamedSharding(mesh, P(self.theta_axes))
+        self._counts_host = np.zeros((self.D,), np.int64)
+        self.R = _sharded_zeros(
+            (self.D * self.cap_local, self.n), jnp.uint8, self._sh_rows)
+        self.sizes = _sharded_zeros(
+            (self.D * self.cap_local,), jnp.int32, self._sh_vec)
+        self._counter = _sharded_zeros(
+            (self.D, self.n), jnp.int32, self._sh_rows)
+        self._counts = _sharded_zeros((self.D,), jnp.int32, self._sh_vec)
+        self._write_fn, self._valid_fn = _sharded_write_kernels(
+            mesh, self.theta_axes)
+
+    # ------------------------------------------------------------ shape ----
+
+    @property
+    def capacity(self) -> int:
+        """Global row capacity (``D * cap_local``)."""
+        return self.D * self.cap_local
+
+    @property
+    def count(self) -> int:
+        """Total stored RRR sets across all shards."""
+        return int(self._counts_host.sum())
+
+    @property
+    def counts(self) -> np.ndarray:
+        """Per-shard valid row counts ``(D,)`` (host copy)."""
+        return self._counts_host.copy()
+
+    @property
+    def counter(self) -> jnp.ndarray:
+        """Global fused counter ``(n,) int32`` — reduces the per-shard
+        partials (an all-reduce; host/reporting use only, the selection
+        kernels consume the partials shard-locally)."""
+        return self._counter.sum(axis=0)
+
+    @property
+    def batch_sharding(self) -> NamedSharding:
+        """Sharding a sampler should place its ``(B, n)`` batch with so
+        the store write is a pure device-local slice update (rows
+        block-partitioned over ``theta_axes``, vertices replicated)."""
+        return self._sh_rows
+
+    # ---------------------------------------------------------- writing ----
+
+    def _grow_rows(self, incoming: int):
+        need = int(self._counts_host.max(initial=0)) + incoming
+        new_cap = next_pow2(need, self.cap_local)
+        if new_cap == self.cap_local:
+            return
+        grow = _sharded_grow_kernel(
+            self.mesh, self.theta_axes, new_cap - self.cap_local)
+        self.R, self.sizes = grow(self.R, self.sizes)
+        self.cap_local = new_cap
+
+    def add_batch(self, visited, counter=None) -> None:
+        """Append ``visited (B, n) uint8`` rows, block-split across shards.
+
+        Shard ``d`` receives rows ``[d*b, (d+1)*b)`` of the (zero-padded)
+        batch, where ``b = ceil(B / D)``, and writes them at its local
+        offset in place — the arena, sizes, counter and counts buffers are
+        all donated, so outstanding views are invalidated.  ``counter`` is
+        accepted for `RRRStore` API parity but ignored: the fused C3
+        contribution is recomputed *inside* the write kernel from each
+        shard's own rows, keeping the count device-local.
+        """
+        del counter  # recomputed shard-locally inside the write kernel
+        visited = jnp.asarray(visited).astype(jnp.uint8)
+        B = int(visited.shape[0])
+        if B == 0:
+            return
+        b = -(-B // self.D)
+        if b * self.D != B:
+            visited = jnp.concatenate(
+                [visited, jnp.zeros((b * self.D - B, self.n), jnp.uint8)])
+        # no-op when the sampler already placed the batch with
+        # ``batch_sharding``; otherwise reshards the (small) batch only
+        visited = jax.device_put(visited, self._sh_rows)
+        self._grow_rows(b)
+        incs_np = np.clip(B - np.arange(self.D) * b, 0, b).astype(np.int32)
+        incs = jax.device_put(jnp.asarray(incs_np), self._sh_vec)
+        self.R, self.sizes, self._counter, self._counts = self._write_fn(
+            self.R, self.sizes, self._counter, self._counts, visited, incs)
+        self._counts_host += incs_np
+        self.version += 1
+
+    # ---------------------------------------------------------- reading ----
+
+    def valid_mask(self) -> jnp.ndarray:
+        """Sharded ``(D * cap_local,) bool`` mask of filled rows (the
+        per-shard prefix ``local_iota < counts[shard]``)."""
+        return self._valid_fn(self._counts, self.sizes)
+
+    def view(self) -> StoreView:
+        """`StoreView` over the *sharded* arena: ``R`` keeps its
+        ``P(theta_axes, None)`` layout and ``valid`` its ``P(theta_axes)``
+        layout, so sharded selection strategies consume the shards
+        natively (zero resharding on entry).  Aliases live buffers —
+        consume before the next ``add_batch``."""
+        return StoreView("bitmap", self.R, self.valid_mask(), self.n,
+                         self.count)
+
+    def hits(self, S) -> jnp.ndarray:
+        """Covered fraction per query: ``S (Q, L) int32`` -> ``(Q,) f32``.
+        Each shard tests membership against its local rows; only the
+        per-query hit counts cross devices (never arena rows)."""
+        return _bitmap_hits(self.R, self.valid_mask(),
+                            jnp.asarray(S, jnp.int32))
+
+    def coverage_stats(self) -> tuple[float, int]:
+        """(avg fractional set coverage, max set size) over stored sets."""
+        return _coverage_stats(self.sizes, self.count, self.n)
+
+    # ------------------------------------------------------ checkpointing ----
+
+    def state(self) -> dict:
+        """Host snapshot pytree (kind tag ``"sharded"``): the valid rows
+        of every shard *compacted* into a contiguous ``(count, n)`` array
+        (shard order), so restore redistributes onto any mesh shape — the
+        elastic layout `checkpoint.store` promises.  This is the one
+        deliberate host gather in the store's life cycle."""
+        R = np.asarray(self.R)
+        sizes = np.asarray(self.sizes)
+        rows, row_sizes = [], []
+        for d in range(self.D):
+            c = int(self._counts_host[d])
+            lo = d * self.cap_local
+            rows.append(R[lo:lo + c])
+            row_sizes.append(sizes[lo:lo + c])
+        return {
+            "kind": np.asarray("sharded"),
+            "n": np.int64(self.n),
+            "count": np.int64(self.count),
+            "R": (np.concatenate(rows) if self.count
+                  else np.zeros((0, self.n), np.uint8)),
+            "sizes": (np.concatenate(row_sizes) if self.count
+                      else np.zeros((0,), np.int32)),
+            "counter": np.asarray(self.counter),
+        }
+
+    # rows staged per add_batch during restore: bounds the transient
+    # single-device footprint of the host->device feed to CHUNK * n bytes
+    # (the resident arena itself is born sharded and never gathers)
+    RESTORE_CHUNK = 4096
+
+    @classmethod
+    def from_state(cls, st, *, mesh, theta_axes=("data",)) -> "ShardedStore":
+        """Rebuild on ``mesh`` from a ``"sharded"`` (compact rows) *or*
+        ``"bitmap"`` (full-capacity arena) snapshot: the valid rows are
+        redistributed block-evenly across the new mesh's shards, and the
+        fused counter/sizes are recomputed shard-locally (exactly equal to
+        the saved ones).  Rows are fed in ``RESTORE_CHUNK``-row slices so
+        an arena that only fits *because* it is sharded never transits any
+        single device whole on restore."""
+        n, count = int(st["n"]), int(st["count"])
+        store = cls(n, mesh=mesh, theta_axes=theta_axes,
+                    capacity=max(count, 1))
+        rows = np.asarray(st["R"])[:count]
+        chunk = max(cls.RESTORE_CHUNK // max(store.D, 1), 1) * store.D
+        for lo in range(0, count, chunk):
+            store.add_batch(jnp.asarray(rows[lo:lo + chunk], jnp.uint8))
+        return store
+
+
+STORE_KINDS = {"bitmap": BitmapStore, "indices": IndexStore,
+               "sharded": ShardedStore}
 
 
 def make_store(kind: str, n: int, **kw) -> RRRStore:
     """Store factory: ``"auto"`` (bitmap, the back-compat default),
-    ``"bitmap"``, or ``"indices"``."""
+    ``"bitmap"``, ``"indices"``, or ``"sharded"`` (requires a ``mesh=``
+    keyword; accepts ``theta_axes=``)."""
     kind = "bitmap" if kind == "auto" else kind
     try:
-        return STORE_KINDS[kind](n, **kw)
+        ctor = STORE_KINDS[kind]
     except KeyError:
         raise ValueError(
             f"unknown store kind {kind!r}; have {sorted(STORE_KINDS)}")
+    return ctor(n, **kw)
 
 
-def store_from_state(st) -> RRRStore:
-    """Rebuild a store from a `state()` tree (snapshot restore path)."""
+def store_from_state(st, *, mesh=None, theta_axes=("data",)) -> RRRStore:
+    """Rebuild a store from a `state()` tree (snapshot restore path).
+
+    Snapshots are elastic across layouts: with ``mesh`` given, bitmap and
+    sharded snapshots both restore into a `ShardedStore` on that mesh
+    (rows redistributed); without one, a sharded snapshot restores into a
+    compacted `BitmapStore`.  Index-list snapshots are single-device only
+    (the sharded store is dense-only, like sharded selection).
+    """
     kind = str(np.asarray(st["kind"]))
-    try:
-        return STORE_KINDS[kind].from_state(st)
-    except KeyError:
+    if kind not in STORE_KINDS:
         raise ValueError(f"snapshot has unknown store kind {kind!r}")
+    if mesh is not None:
+        if kind == "indices":
+            raise ValueError(
+                "index-list snapshots cannot restore onto a mesh "
+                "(ShardedStore is dense-only)")
+        return ShardedStore.from_state(st, mesh=mesh, theta_axes=theta_axes)
+    if kind == "sharded":
+        return BitmapStore.from_rows(np.asarray(st["R"]), int(st["n"]))
+    return STORE_KINDS[kind].from_state(st)

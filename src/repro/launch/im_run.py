@@ -9,6 +9,11 @@ counters + adaptive representation) or the Ripples-style baseline
 graphs/datasets.py).  Because the engine keeps its sampled RRR store,
 ``--select-k`` answers extra campaign queries from the same store for free,
 and ``--snapshot-dir`` persists the store for later resumption.
+
+``--mesh N`` (or ``--mesh auto``) shards the RRR store's theta axis across
+N devices (paper C1 end-to-end: device-local sampling writes, sharded
+selection).  Results are seed-for-seed identical to the single-device
+default; on one device the flag degrades gracefully to a 1-shard mesh.
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ import argparse
 import json
 import time
 
-from repro.configs.imm_snap import IMM_EXPERIMENTS
+from repro.configs.imm_snap import IMM_EXPERIMENTS, make_theta_mesh
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.graphs.datasets import scaled_snap, synthetic_snap
 
@@ -24,7 +29,7 @@ from repro.graphs.datasets import scaled_snap, synthetic_snap
 def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         eps: float = 0.5, baseline: bool = False, seed: int = 0,
         max_theta: int = 1 << 14, select_ks=(), snapshot_dir: str = None,
-        log=print):
+        mesh=None, log=print):
     exp = IMM_EXPERIMENTS[graph]
     scale = exp.bench_scale if scale is None else scale
     t0 = time.time()
@@ -37,7 +42,8 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         selection_method="decrement" if baseline else "rebuild",
         adaptive_representation=not baseline,
     )
-    engine = InfluenceEngine(g, cfg)
+    mesh = make_theta_mesh(mesh)
+    engine = InfluenceEngine(g, cfg, mesh=mesh)
     if snapshot_dir:
         engine.restore(snapshot_dir)       # resume if a snapshot exists
     t0 = time.time()
@@ -59,6 +65,8 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
     out = {
         "graph": graph, "scale": scale, "n": g.n, "m": g.m, "model": model,
         "k": k, "mode": "ripples-style" if baseline else "efficientimm",
+        "mesh_shards": None if mesh is None else int(
+            engine.store.D if hasattr(engine.store, "D") else 1),
         "influence": res.influence, "covered_frac": res.covered_frac,
         "theta": res.theta, "representation": res.representation,
         "graph_s": round(t_graph, 3), "imm_s": round(t_imm, 3),
@@ -86,10 +94,14 @@ def main(argv=None):
                          "sampled store (repeatable)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="resume from / persist the engine store here")
+    ap.add_argument("--mesh", default=None,
+                    help="theta shards for the RRR store: an int, 'auto' "
+                         "(all devices), or omit for single-device")
     args = ap.parse_args(argv)
     run(args.graph, scale=args.scale, model=args.model, k=args.k,
         eps=args.eps, baseline=args.baseline, max_theta=args.max_theta,
-        select_ks=args.select_k, snapshot_dir=args.snapshot_dir)
+        select_ks=args.select_k, snapshot_dir=args.snapshot_dir,
+        mesh=args.mesh)
 
 
 if __name__ == "__main__":

@@ -11,9 +11,13 @@ Two workloads share this module:
     query), and seed-selection queries hit the engine's memoized
     ``select``.  This is the multi-query regime the store redesign exists
     for: sampling once amortizes across an entire campaign of queries.
+    ``--mesh N`` serves the same workload from a mesh-sharded RRR store
+    (paper C1): the resident arena is partitioned across devices, so the
+    served theta scales with device count — answers are seed-for-seed
+    identical to the single-device store.
 
     PYTHONPATH=src python -m repro.launch.serve --workload im \
-        --graph com-Amazon --queries 64
+        --graph com-Amazon --queries 64 --mesh auto
 """
 from __future__ import annotations
 
@@ -126,19 +130,25 @@ def _main_lm(args):
 
 
 def _main_im(args):
-    from repro.configs.imm_snap import IMM_EXPERIMENTS
+    from repro.configs.imm_snap import IMM_EXPERIMENTS, make_theta_mesh
     from repro.core.engine import InfluenceEngine, IMMConfig
     from repro.graphs.datasets import scaled_snap
 
     exp = IMM_EXPERIMENTS[args.graph]
     scale = exp.bench_scale if args.scale is None else args.scale
     g = scaled_snap(args.graph, scale, seed=0)
+    mesh = make_theta_mesh(args.mesh)
     engine = InfluenceEngine(
-        g, IMMConfig(k=args.k, model=args.model, max_theta=args.max_theta))
+        g, IMMConfig(k=args.k, model=args.model, max_theta=args.max_theta),
+        mesh=mesh)
     t0 = time.time()
     engine.extend(args.max_theta)
     t_sample = time.time() - t0
     server = IMServer(engine)
+    if mesh is not None:
+        print(f"[serve-im] sharded store: theta axis over "
+              f"{engine.store.D} device shard(s), "
+              f"cap_local={engine.store.cap_local}")
 
     # a realistic mixed workload: top-k selections of several sizes plus a
     # burst of random candidate-set influence queries, all from one store
@@ -174,6 +184,9 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--max-theta", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--mesh", default=None,
+                    help="theta shards for the IM store: int, 'auto', or "
+                         "omit for single-device")
     args = ap.parse_args(argv)
     if args.workload == "im":
         _main_im(args)

@@ -1,0 +1,107 @@
+"""Subprocess body for the forced multi-device ShardedStore checks.
+
+Run by tests/test_sharded_store.py with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the mesh code
+paths execute on real (host-platform) multi-device buffers even on
+CPU-only runners.  Asserts the C1 acceptance criteria:
+
+  * ``ShardedStore.extend`` never materializes the full arena on one
+    device (per-shard buffer shapes are ``(cap_local, n)``);
+  * sharded ``select(k)`` is seed-for-seed identical to ``BitmapStore`` +
+    dense selection for a fixed ``cfg.seed``, including the true
+    decremental sharded strategy;
+  * snapshot/restore round-trips across mesh shapes (4 -> 1 -> none)
+    without changing answers.
+
+Prints one JSON line on success (consumed by the pytest wrapper).
+"""
+import json
+import sys
+import tempfile
+
+import numpy as np
+import jax
+
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.core.store import BitmapStore, ShardedStore
+from repro.graphs import rmat_graph
+
+
+def main():
+    n_dev = jax.device_count()
+    assert n_dev == 4, f"expected 4 forced host devices, got {n_dev}"
+
+    g = rmat_graph(128, 1024, seed=4)
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3)
+    mesh = jax.make_mesh((4,), ("data",))
+
+    dense = InfluenceEngine(g, cfg)
+    sharded = InfluenceEngine(g, cfg, mesh=mesh)
+    assert isinstance(dense.store, BitmapStore)
+    assert isinstance(sharded.store, ShardedStore)
+
+    r_dense, r_sharded = dense.run(), sharded.run()
+
+    # --- seed-for-seed identity with BitmapStore + dense selection ------
+    np.testing.assert_array_equal(r_dense.seeds, r_sharded.seeds)
+    np.testing.assert_array_equal(r_dense.counter, r_sharded.counter)
+    assert r_dense.theta == r_sharded.theta
+    assert abs(r_dense.covered_frac - r_sharded.covered_frac) < 1e-7
+
+    # --- the full arena never exists on one device ----------------------
+    st = sharded.store
+    shards = st.R.addressable_shards
+    assert len(shards) == 4
+    assert all(s.data.shape == (st.cap_local, g.n) for s in shards), \
+        [s.data.shape for s in shards]
+    assert st.capacity == 4 * st.cap_local
+    assert {tuple(s.data.shape) for s in st.sizes.addressable_shards} == \
+        {(st.cap_local,)}
+    # counter partials are sharded too (one (1, n) block per device)
+    assert all(s.data.shape == (1, g.n)
+               for s in st._counter.addressable_shards)
+
+    # --- true decremental sharded strategy == rebuild == dense ----------
+    sel_reb = sharded.select(5, method="rebuild")
+    sel_dec = sharded.select(5, method="decrement")
+    np.testing.assert_array_equal(sel_reb.seeds, sel_dec.seeds)
+    np.testing.assert_array_equal(sel_reb.gains, sel_dec.gains)
+    np.testing.assert_array_equal(
+        sel_dec.seeds, dense.select(5, method="decrement").seeds)
+
+    # --- fused membership queries agree --------------------------------
+    queries = [r_dense.seeds[:2], r_dense.seeds]
+    np.testing.assert_allclose(
+        dense.influences(queries), sharded.influences(queries), rtol=1e-6)
+
+    # --- snapshot/restore across mesh shapes ---------------------------
+    with tempfile.TemporaryDirectory() as d:
+        sharded.snapshot(d)
+        on1 = InfluenceEngine(g, cfg, mesh=jax.make_mesh((1,), ("data",)))
+        assert on1.restore(d)
+        np.testing.assert_array_equal(on1.select(5).seeds, r_dense.seeds)
+        flat = InfluenceEngine(g, cfg)
+        assert flat.restore(d)
+        assert isinstance(flat.store, BitmapStore)
+        np.testing.assert_array_equal(flat.select(5).seeds, r_dense.seeds)
+        # restored engines keep sampling from the snapshotted key stream,
+        # identically to the dense engine
+        flat.extend(flat.theta + 64)
+        on4 = InfluenceEngine(g, cfg, mesh=mesh)
+        assert on4.restore(d)
+        on4.extend(on4.theta + 64)
+        dense.extend(dense.theta + 64)
+        np.testing.assert_array_equal(
+            np.asarray(dense.store.counter), np.asarray(on4.store.counter))
+        np.testing.assert_array_equal(
+            np.asarray(dense.store.counter), np.asarray(flat.store.counter))
+
+    print(json.dumps({
+        "ok": True, "devices": n_dev, "theta": int(r_sharded.theta),
+        "cap_local": int(st.cap_local),
+        "counts": [int(c) for c in st.counts],
+    }))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,219 @@
+"""ShardedStore (paper C1 end-to-end): sharded-vs-single-device
+equivalence, per-shard growth invariants, true decremental sharded
+selection, elastic snapshot/restore, and the forced 4-device subprocess
+cell.
+
+These tests use meshes over however many devices the process has — 1 in
+a plain run, 4 under scripts/ci.sh's
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` pass — and the
+subprocess test always exercises the real 4-shard layout.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.core.selection import select_dense, select_dense_sharded
+from repro.core.store import (
+    BitmapStore, ShardedStore, make_store, store_from_state,
+)
+from repro.graphs import rmat_graph
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def theta_mesh(shards: int = None):
+    return jax.make_mesh((shards or jax.device_count(),), ("data",))
+
+
+# ------------------------------------------------------------------ store ----
+
+def test_sharded_store_matches_bitmap_counters_and_hits():
+    """Same batches (incl. sizes not divisible by the shard count) into a
+    BitmapStore and a ShardedStore: identical count, fused counter,
+    coverage stats, and membership query answers."""
+    rng = np.random.default_rng(0)
+    n = 48
+    bs, ss = BitmapStore(n), ShardedStore(n, mesh=theta_mesh())
+    for B in (24, 10, 7, 64):
+        batch = (rng.random((B, n)) < 0.2).astype(np.uint8)
+        bs.add_batch(jnp.asarray(batch))
+        ss.add_batch(jnp.asarray(batch))
+    assert bs.count == ss.count == 105
+    assert ss.count == int(ss.counts.sum())
+    np.testing.assert_array_equal(np.asarray(bs.counter),
+                                  np.asarray(ss.counter))
+    assert bs.coverage_stats() == ss.coverage_stats()
+    S = np.asarray([[0, 1, 2], [5, 5, 5], [7, 30, 12]], np.int32)
+    np.testing.assert_allclose(np.asarray(bs.hits(S)), np.asarray(ss.hits(S)),
+                               rtol=1e-6)
+
+
+def test_sharded_store_per_shard_growth_and_layout():
+    """cap_local is a power of two per shard; every device shard buffer
+    is (cap_local, n) — the global arena never lives on one device."""
+    n = 32
+    ss = ShardedStore(n, mesh=theta_mesh())
+    D = ss.D
+    assert ss.capacity == D * ss.cap_local
+    cap0 = ss.cap_local
+    rng = np.random.default_rng(1)
+    # force at least one per-shard doubling
+    for _ in range(4):
+        ss.add_batch(jnp.asarray(
+            (rng.random((16 * D, n)) < 0.3).astype(np.uint8)))
+    assert ss.cap_local > cap0 and ss.cap_local & (ss.cap_local - 1) == 0
+    shards = ss.R.addressable_shards
+    local_devices = len(jax.local_devices())
+    assert len(shards) == local_devices
+    assert all(s.data.shape == (ss.cap_local * D // local_devices, n)
+               for s in shards)
+    # valid mask counts exactly the stored rows, per shard
+    assert int(np.asarray(ss.valid_mask()).sum()) == ss.count
+
+
+def test_sharded_selection_matches_dense_both_methods():
+    """Sharded rebuild AND true-decrement selection over the store's
+    native shards == single-device dense selection (permutation-invariant
+    exact integer reductions)."""
+    rng = np.random.default_rng(2)
+    n = 40
+    mesh = theta_mesh()
+    bs, ss = BitmapStore(n), ShardedStore(n, mesh=mesh)
+    for B in (24, 9, 31):
+        batch = (rng.random((B, n)) < 0.25).astype(np.uint8)
+        bs.add_batch(jnp.asarray(batch))
+        ss.add_batch(jnp.asarray(batch))
+    vd, vs = bs.view(), ss.view()
+    for method in ("rebuild", "decrement"):
+        s1, f1, g1 = select_dense(vd.R, vd.valid, 6, method)
+        s2, f2, g2 = select_dense_sharded(
+            mesh, vs.R, vs.valid, 6, theta_axes=("data",), method=method)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+        assert float(f1) == pytest.approx(float(f2))
+    with pytest.raises(ValueError):
+        select_dense_sharded(mesh, vs.R, vs.valid, 2, method="nope")
+
+
+def test_sharded_store_state_roundtrips_across_layouts():
+    rng = np.random.default_rng(3)
+    n, mesh = 36, theta_mesh()
+    ss = ShardedStore(n, mesh=mesh)
+    ss.add_batch(jnp.asarray((rng.random((50, n)) < 0.3).astype(np.uint8)))
+    st = ss.state()
+    assert str(np.asarray(st["kind"])) == "sharded"
+    assert st["R"].shape == (50, n)          # compact valid rows only
+    # sharded -> sharded (same mesh)
+    clone = store_from_state(st, mesh=mesh)
+    assert isinstance(clone, ShardedStore) and clone.count == 50
+    np.testing.assert_array_equal(np.asarray(clone.counter),
+                                  np.asarray(ss.counter))
+    # sharded -> single-device bitmap
+    flat = store_from_state(st)
+    assert isinstance(flat, BitmapStore) and flat.count == 50
+    np.testing.assert_array_equal(np.asarray(flat.counter),
+                                  np.asarray(ss.counter))
+    # bitmap -> sharded
+    resharded = store_from_state(flat.state(), mesh=mesh)
+    assert isinstance(resharded, ShardedStore) and resharded.count == 50
+    np.testing.assert_array_equal(np.asarray(resharded.counter),
+                                  np.asarray(ss.counter))
+    # index snapshots cannot land on a mesh
+    idx = make_store("indices", n)
+    idx.add_batch(jnp.asarray((rng.random((8, n)) < 0.1).astype(np.uint8)))
+    with pytest.raises(ValueError):
+        store_from_state(idx.state(), mesh=mesh)
+
+
+def test_make_store_sharded_requires_mesh():
+    assert isinstance(make_store("sharded", 16, mesh=theta_mesh()),
+                      ShardedStore)
+    with pytest.raises(TypeError):
+        make_store("sharded", 16)
+    with pytest.raises(ValueError):
+        InfluenceEngine(rmat_graph(32, 64, seed=0),
+                        IMMConfig(store="sharded"))
+
+
+# ----------------------------------------------------------------- engine ----
+
+def test_engine_sharded_run_seed_for_seed_equals_dense():
+    """The headline C1 invariant through the whole engine: run() on a
+    mesh == run() without one, bit for bit, for a fixed cfg.seed."""
+    g = rmat_graph(128, 1024, seed=4)
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3)
+    dense = InfluenceEngine(g, cfg)
+    sharded = InfluenceEngine(g, cfg, mesh=theta_mesh())
+    assert isinstance(sharded.store, ShardedStore)
+    r1, r2 = dense.run(), sharded.run()
+    np.testing.assert_array_equal(r1.seeds, r2.seeds)
+    np.testing.assert_array_equal(r1.counter, r2.counter)
+    assert r1.theta == r2.theta
+    assert r1.covered_frac == pytest.approx(r2.covered_frac)
+    np.testing.assert_allclose(
+        dense.influences([r1.seeds[:2], r1.seeds]),
+        sharded.influences([r1.seeds[:2], r1.seeds]), rtol=1e-6)
+
+
+def test_engine_sharded_snapshot_restore_seed_for_seed():
+    """Snapshot on a mesh, restore on a mesh / no mesh: selections and
+    the continued sample stream stay identical to the dense engine."""
+    g = rmat_graph(96, 768, seed=5)
+    cfg = IMMConfig(k=4, batch=32, max_theta=128, seed=11)
+    mesh = theta_mesh()
+    dense = InfluenceEngine(g, cfg)
+    sharded = InfluenceEngine(g, cfg, mesh=mesh)
+    dense.extend(128)
+    sharded.extend(128)
+    want = dense.select(4)
+    with tempfile.TemporaryDirectory() as d:
+        sharded.snapshot(d)
+        again = InfluenceEngine(g, cfg, mesh=mesh)
+        assert again.restore(d)
+        np.testing.assert_array_equal(again.select(4).seeds, want.seeds)
+        flat = InfluenceEngine(g, cfg)
+        assert flat.restore(d)
+        assert isinstance(flat.store, BitmapStore)
+        np.testing.assert_array_equal(flat.select(4).seeds, want.seeds)
+        # the restored PRNG stream continues identically across layouts
+        dense.extend(dense.theta + 64)
+        again.extend(again.theta + 64)
+        np.testing.assert_array_equal(
+            np.asarray(dense.store.counter), np.asarray(again.store.counter))
+
+
+def test_engine_prebuilt_sharded_store_implies_mesh():
+    g = rmat_graph(64, 512, seed=6)
+    store = ShardedStore(g.n, mesh=theta_mesh())
+    engine = InfluenceEngine(g, IMMConfig(k=3, batch=32), store=store)
+    assert engine.mesh is store.mesh
+    engine.extend(64)
+    sel = engine.select(3)
+    assert len(set(sel.seeds.tolist())) == 3
+
+
+# ------------------------------------------- forced 4-device subprocess ----
+
+def test_sharded_store_forced_4dev_subprocess():
+    """The C1 acceptance cell: under a forced 4-device host platform the
+    arena is physically split into 4 (cap_local, n) buffers and results
+    stay seed-for-seed identical to BitmapStore + dense selection (see
+    tests/force_mesh_check.py for the assertions)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "force_mesh_check.py")],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 4
