@@ -1,0 +1,155 @@
+"""Streaming vs re-sampling: what does a graph delta really cost?
+
+Drives a synthetic evolving network (RMAT replica with long-tail churn:
+every tick a `GraphDelta` of fringe-edge inserts/deletes/reweights lands)
+through two serving strategies:
+
+  * ``stream-refresh``  — `StreamEngine`: apply the delta, invalidate the
+    touched resident RRR rows, and `refresh()` only those (same-key
+    repair against the mutated graph);
+  * ``full-resample``   — the static baseline: rebuild a fresh
+    `InfluenceEngine` on the post-delta graph and re-sample all of theta.
+
+Both end in the *identical* store (the streaming equivalence invariant),
+so the wall-clock ratio is pure work saved.  A third row reports the
+bounded-memory mode (``max_rows`` eviction/compaction) and its selection
+quality relative to the unbounded store.
+
+Emits machine-readable ``BENCH_3.json`` rows ``{name, n, theta, wall_s}``
+(the repo's benchmark-trajectory seed format) next to a human table.
+
+    PYTHONPATH=src python -m benchmarks.stream_runtime [--tiny] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import block, print_table
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.core.store import StorePressurePolicy
+from repro.graphs import rmat_graph
+from repro.stream import StreamEngine, random_delta
+
+
+def _deltas_for(stream, ticks, rng, ops):
+    """Pre-generate the tick deltas against the evolving graph."""
+    deltas = []
+    g = stream.graph
+    for _ in range(ticks):
+        d = random_delta(g, rng, inserts=ops, deletes=ops, reweights=ops,
+                         max_dst_indeg=8)
+        deltas.append(d)
+        g = d.apply(g)
+    return deltas
+
+
+def run(n=1024, m=8192, theta=4096, k=10, batch=256, ticks=5, ops=4,
+        cap_frac=0.5, seed=0, log=print):
+    cfg = IMMConfig(k=k, batch=batch, max_theta=max(theta, 1 << 20),
+                    seed=seed)
+    # weighted-cascade probabilities: the realistic small-RRR-set regime
+    # (uniform U(0,1) probs make nearly every set span the giant SCC, so
+    # *any* delta invalidates everything and no incremental scheme can win)
+    g = rmat_graph(n, m, seed=seed, weighted_ic="wc")
+    rows, bench = [], []
+
+    def record(name, wall, extra=""):
+        bench.append({"name": name, "n": n, "theta": theta,
+                      "wall_s": round(wall, 4)})
+        rows.append([name, n, theta, f"{wall:.3f}", extra])
+
+    # ---- streaming: invalidate + same-key repair per tick -----------------
+    stream = StreamEngine(g, cfg)
+    t0 = time.perf_counter()
+    stream.extend(theta)
+    block(stream.store.counter)
+    record("initial-sample", time.perf_counter() - t0)
+
+    deltas = _deltas_for(stream, ticks, np.random.default_rng(seed + 1), ops)
+    stale_total = 0
+    t0 = time.perf_counter()
+    for d in deltas:
+        stale_total += stream.apply_delta(d)
+        stream.refresh()
+    block(stream.store.counter)
+    t_stream = time.perf_counter() - t0
+    record("stream-refresh", t_stream,
+           f"{stale_total} rows repaired over {ticks} deltas")
+
+    # ---- baseline: fresh engine + full re-sample per tick -----------------
+    graphs, gg = [], g
+    from repro.stream.delta import canonicalize
+    gg = canonicalize(g)
+    for d in deltas:
+        gg = d.apply(gg)
+        graphs.append(gg)
+    t0 = time.perf_counter()
+    for gg in graphs:
+        # same (delta-stable) sampler as the stream, so the two
+        # strategies do identical per-row work and end in identical stores
+        fresh = InfluenceEngine(gg, stream.cfg)
+        fresh.extend(theta)
+    block(fresh.store.counter)
+    t_full = time.perf_counter() - t0
+    record("full-resample", t_full, f"{ticks} full re-samples")
+
+    # equivalence sanity: both strategies end in the same store
+    assert stream.stale == 0
+    np.testing.assert_array_equal(np.asarray(stream.store.counter),
+                                  np.asarray(fresh.store.counter))
+
+    # ---- bounded-memory mode ---------------------------------------------
+    cap = max(int(theta * cap_frac) // batch * batch, batch)
+    bounded = StreamEngine(g, cfg, policy=StorePressurePolicy(max_rows=cap))
+    bounded.extend(theta)
+    t0 = time.perf_counter()
+    for d in deltas:
+        bounded.apply_delta(d)
+        bounded.refresh()
+    block(bounded.store.counter)
+    t_bound = time.perf_counter() - t0
+    assert bounded.store.capacity <= cap
+    sb = bounded.select(k)
+    su = stream.select(k)
+    sigma_b, sigma_u = stream.influences([sb.seeds, su.seeds])
+    quality = float(sigma_b) / max(float(sigma_u), 1e-9)
+    record("stream-bounded", t_bound,
+           f"cap={cap} rows, quality {quality * 100:.1f}% of unbounded")
+
+    print_table(
+        f"Streaming vs re-sample (n={n}, theta={theta}, {ticks} deltas "
+        f"x {3 * ops} ops)",
+        ["strategy", "n", "theta", "wall_s", "notes"], rows)
+    log(f"speedup (full-resample / stream-refresh): "
+        f"{t_full / max(t_stream, 1e-9):.2f}x; bounded quality "
+        f"{quality * 100:.1f}%")
+    return bench, quality
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small graph, few ticks")
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--m", type=int, default=8192)
+    ap.add_argument("--theta", type=int, default=4096)
+    ap.add_argument("--ticks", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_3.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+    if args.tiny:
+        bench, _ = run(n=192, m=1024, theta=512, batch=128, ticks=2, ops=2)
+    else:
+        bench, _ = run(n=args.n, m=args.m, theta=args.theta,
+                       ticks=args.ticks)
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"wrote {args.out} ({len(bench)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ seed-for-seed identical to the historical implementation.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Optional, Sequence
 
 import numpy as np
@@ -132,6 +133,15 @@ class InfluenceEngine:
         elif mesh is not None and self.cfg.store in ("auto", "sharded"):
             self.store = make_store("sharded", graph.n, mesh=mesh,
                                     theta_axes=self.theta_axes)
+        elif mesh is not None and self.cfg.store == "indices":
+            # fail fast: the sharded pipeline (store, selection, snapshot
+            # restore) is dense-only, and the late failure used to surface
+            # obscurely at the first select() or restore()
+            raise ValueError(
+                "store='indices' cannot be combined with a mesh: "
+                "IndexStore (and its snapshots) is single-device only. "
+                "Use the bitmap representation (store='auto' or "
+                "'bitmap'), which shards across the mesh.")
         elif self.cfg.store == "sharded":
             raise ValueError("store='sharded' needs a mesh")
         else:
@@ -155,13 +165,60 @@ class InfluenceEngine:
         Idempotent when the store is already large enough; returns the new
         store size.  The PRNG key stream is (key_i, sub_i) = split(key_{i-1})
         per batch — identical to the historical driver, so a fixed
-        ``cfg.seed`` yields a bitwise-identical sample stream.
+        ``cfg.seed`` yields a bitwise-identical sample stream.  Under a
+        `StorePressurePolicy` the target clamps to the store's row cap
+        (the store evicts to make room, so the count would never pass it).
         """
-        while self.store.count < theta:
+        cap = getattr(self.store, "row_cap", None)
+        target = theta if cap is None else min(theta, cap)
+        while self.store.count < target:
             self.key, sub = jax.random.split(self.key)
             visited, counter, _ = self._sample(sub)
             self.store.add_batch(visited, counter)
         return self.store.count
+
+    def sample_batch(self):
+        """Advance the engine's PRNG stream by one batch without writing
+        to the store: returns ``(batch_key, visited, counter)``.  The key
+        chain is the same ``split`` sequence `extend` uses, so callers
+        that record ``batch_key`` (streaming refresh) can later
+        `resample` the identical batch."""
+        self.key, sub = jax.random.split(self.key)
+        visited, counter, _ = self._sample(sub)
+        return np.asarray(sub), visited, counter
+
+    @property
+    def supports_row_resample(self) -> bool:
+        """Whether the bound sampler can re-generate an arbitrary subset
+        of a batch's rows (the stable samplers' ``positions`` hook)."""
+        return "positions" in inspect.signature(self._sample).parameters
+
+    def resample(self, batch_key, positions=None):
+        """Re-run the sampler for a recorded batch key against the
+        *current* graph: returns ``(visited, counter)``.  With a
+        delta-stable sampler, rows whose traversal avoided all mutated
+        vertices come back bitwise identical — the streaming repair path.
+        ``positions`` (requires `supports_row_resample`) re-generates
+        only those rows of the batch, so repair work is proportional to
+        stale rows."""
+        key = jnp.asarray(batch_key)
+        if positions is None:
+            visited, counter, _ = self._sample(key)
+        else:
+            visited, counter, _ = self._sample(
+                key, positions=jnp.asarray(positions, jnp.int32))
+        return visited, counter
+
+    def rebind_graph(self, graph: Graph) -> None:
+        """Point the engine at a mutated graph (streaming delta path):
+        future sampling uses the new edges while the store's resident RRR
+        sets are kept — `repro.stream` invalidates the stale ones.  The
+        select memoization is NOT cleared here; stream consumers bump the
+        store version (kill/replace) which keys the cache."""
+        self.graph = graph
+        self._sample = bind_sampler(
+            get_sampler(self.sampler_name), graph, self.cfg,
+            placement=getattr(self.store, "batch_sharding", None))
 
     # ----------------------------------------------------------- selection
 

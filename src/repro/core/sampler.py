@@ -29,6 +29,12 @@ Three implementations:
     in-neighbor with probability proportional to its LT weight (stops with
     prob 1 - sum w), terminating on revisits. Binary search over the
     per-dst cumulative weights (CSC layout).
+
+Each has a ``*-stable`` twin ("IC-dense-stable", "IC-sparse-stable",
+"LT-stable") whose randomness is keyed by *identity* (row position,
+edge/vertex id) instead of array position — delta-stable and row-
+subsettable, the form streaming refresh requires (see the delta-stable
+section below).
 """
 from __future__ import annotations
 
@@ -125,6 +131,198 @@ def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
 
     _, _, visited, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), visited0, visited0, kstep)
+    )
+    counter = visited.sum(axis=0, dtype=jnp.int32)
+    return visited.astype(jnp.uint8), counter, roots
+
+
+# -------------------------------------------------- delta-stable samplers ----
+#
+# The positional samplers above draw their randomness by *array position*
+# (``uniform(key, (batch, m))``): fast, but any change to the edge count
+# renumbers every coin, and a batch can only ever be re-generated whole.
+# The ``*-stable`` samplers below re-key every coin by **identity** — a
+# stateless counter-mode hash of (step key, row position, edge/vertex id)
+# — which buys the two properties streaming (``repro.stream``) needs:
+#
+#   * **delta stability**: re-sampling a row with the same key on a
+#     mutated graph reproduces it bitwise unless its traversal actually
+#     touched a mutated edge's destination — exactly the staleness
+#     predicate ``repro.stream.invalidate`` marks;
+#   * **row-granular repair**: ``positions`` selects an arbitrary subset
+#     of the batch's rows and re-generates *only those* (same coins the
+#     full batch would have drawn), so refresh work is proportional to
+#     stale rows, not to the batches they happen to live in.
+#
+# Distribution-wise each coin is still an independent-in-practice uniform;
+# only the key-stream mechanism differs, so the stable samplers are not
+# coin-for-coin identical to their positional twins (they are separate
+# registry entries and leave the historical ``imm()`` streams untouched).
+
+def _mix32(x):
+    """splitmix-style avalanche on uint32 (stateless counter-mode hash)."""
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> jnp.uint32(15))) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _u01(bits):
+    """uint32 hash bits -> f32 uniform in [0, 1)."""
+    return ((bits >> jnp.uint32(8)).astype(jnp.float32)
+            * jnp.float32(1.0 / (1 << 24)))
+
+
+_GOLD = 0x9E3779B9   # 2**32 / phi — the classic Weyl increment
+
+
+def _stable_setup(key, batch, n_nodes, positions, placement):
+    """Shared preamble: full-batch roots (positional randint, gathered at
+    ``positions``), initial visited state, per-row hash lanes, step key."""
+    kroot, kstep = jax.random.split(key)
+    roots_full = jax.random.randint(kroot, (batch,), 0, n_nodes)
+    pos = (jnp.arange(batch, dtype=jnp.int32) if positions is None
+           else jnp.asarray(positions, jnp.int32))
+    roots = roots_full[pos]
+    visited0 = jax.nn.one_hot(roots, n_nodes, dtype=jnp.bool_)
+    if placement is not None and positions is None:
+        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
+    bb = pos.astype(jnp.uint32)[:, None] * jnp.uint32(_GOLD)
+    return kstep, roots, visited0, bb
+
+
+@partial(jax.jit, static_argnames=("batch", "max_steps", "placement"))
+def sample_ic_dense_stable(key, logq, positions=None, *, batch: int,
+                           max_steps: int = 0, placement=None):
+    """`sample_ic_dense` with identity-keyed coins: the coin for (row b,
+    vertex u, step t) hashes (step key, b, u), so it survives edge
+    mutations (the dense matrix keeps its shape; only ``logq`` entries
+    move) and row subsets re-generate exactly.  Returns
+    ``(visited (K, n) uint8, counter (n,) int32, roots (K,))`` where
+    ``K = len(positions)`` (the full batch when ``positions`` is None).
+    """
+    n = logq.shape[0]
+    max_steps = max_steps or n
+    kstep, roots, visited0, bb = _stable_setup(
+        key, batch, n, positions, placement)
+    uids = jnp.arange(n, dtype=jnp.uint32)[None, :]
+
+    def cond(state):
+        step, frontier, visited, _ = state
+        return jnp.logical_and(step < max_steps, frontier.any())
+
+    def body(state):
+        step, frontier, visited, k = state
+        k, sub = jax.random.split(k)
+        kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
+        acc = frontier.astype(jnp.float32) @ logq
+        p_act = -jnp.expm1(acc)
+        coin = _u01(_mix32(_mix32(uids ^ kd[0]) ^ bb ^ kd[1]))
+        new = jnp.logical_and(coin < p_act, ~visited)
+        return step + 1, new, jnp.logical_or(visited, new), k
+
+    _, _, visited, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), visited0, visited0, kstep)
+    )
+    counter = visited.sum(axis=0, dtype=jnp.int32)
+    return visited.astype(jnp.uint8), counter, roots
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps",
+                                   "placement"))
+def sample_ic_sparse_stable(key, edge_src, edge_dst, edge_prob,
+                            positions=None, *, n_nodes: int, batch: int,
+                            max_steps: int = 0, placement=None):
+    """`sample_ic_sparse` with **edge-identity-keyed** coins: the coin for
+    (row b, edge u->v, step t) hashes (step key, b, u * n + v) — a
+    function of the edge's identity, not its position in the edge list —
+    so inserts/deletes renumber nothing and ``positions`` re-generates
+    row subsets exactly (see the section comment above)."""
+    max_steps = max_steps or n_nodes
+    kstep, roots, visited0, bb = _stable_setup(
+        key, batch, n_nodes, positions, placement)
+    # stable per-edge identity: unique for n < 2**16, a well-mixed hash
+    # input beyond that (uniqueness is a quality nicety, not correctness)
+    uid = (edge_src.astype(jnp.uint32) * jnp.uint32(n_nodes)
+           + edge_dst.astype(jnp.uint32))[None, :]
+
+    def cond(state):
+        step, frontier, visited, _ = state
+        return jnp.logical_and(step < max_steps, frontier.any())
+
+    def body(state):
+        step, frontier, visited, k = state
+        k, sub = jax.random.split(k)
+        kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
+        coin = _u01(_mix32(_mix32(uid ^ kd[0]) ^ bb ^ kd[1]))
+        hit = coin < edge_prob[None, :]
+        live = frontier[:, edge_dst] & hit & ~visited[:, edge_src]
+        new = jnp.zeros_like(visited).at[:, edge_src].max(live)
+        new = jnp.logical_and(new, ~visited)
+        return step + 1, new, jnp.logical_or(visited, new), k
+
+    _, _, visited, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), visited0, visited0, kstep)
+    )
+    counter = visited.sum(axis=0, dtype=jnp.int32)
+    return visited.astype(jnp.uint8), counter, roots
+
+
+@partial(jax.jit, static_argnames=("batch", "max_steps", "max_indeg_log2",
+                                   "placement"))
+def sample_lt_stable(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
+                     positions=None, *, batch: int, max_steps: int = 0,
+                     max_indeg_log2: int = 32, placement=None):
+    """`sample_lt` with identity-keyed step draws: the walk draw for
+    (row b, step t) hashes (step key, b), so a row's walk is a function
+    of its own identity plus the per-dst LT segments it visits — stable
+    across deltas that avoid those dsts, and subsettable via
+    ``positions``."""
+    n = dst_offsets.shape[0] - 1
+    max_steps = max_steps or n
+    kstep, roots, visited0, bb = _stable_setup(
+        key, batch, n, positions, placement)
+    brow = bb[:, 0]
+
+    def pick_in_neighbor(cur, r):
+        lo = dst_offsets[cur]
+        hi = dst_offsets[cur + 1]
+
+        def step_fn(_, lohi):
+            lo_, hi_ = lohi
+            mid = (lo_ + hi_) // 2
+            val = in_lt_cum[jnp.clip(mid, 0, in_lt_cum.shape[0] - 1)]
+            go_right = val < r
+            return (jnp.where(go_right, mid + 1, lo_),
+                    jnp.where(go_right, hi_, mid))
+
+        lo_f, _ = jax.lax.fori_loop(0, max_indeg_log2, step_fn, (lo, hi))
+        idx = jnp.clip(lo_f, 0, in_src.shape[0] - 1)
+        return in_src[idx]
+
+    def cond(state):
+        step, cur, active, visited, _ = state
+        return jnp.logical_and(step < max_steps, active.any())
+
+    def body(state):
+        step, cur, active, visited, k = state
+        k, sub = jax.random.split(k)
+        kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
+        r = _u01(_mix32(_mix32(brow ^ kd[0]) ^ kd[1]))
+        total = in_lt_total[cur]
+        go = jnp.logical_and(active, r < total)
+        nxt = jax.vmap(pick_in_neighbor)(cur, r)
+        revisit = jnp.take_along_axis(visited, nxt[:, None], axis=1)[:, 0]
+        go = jnp.logical_and(go, ~revisit)
+        visited = jnp.logical_or(
+            visited, jax.nn.one_hot(nxt, visited.shape[1], dtype=jnp.bool_)
+            & go[:, None]
+        )
+        cur = jnp.where(go, nxt, cur)
+        return step + 1, cur, go, visited, k
+
+    _, _, _, visited, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), roots, jnp.ones(roots.shape, jnp.bool_),
+                     visited0, kstep)
     )
     counter = visited.sum(axis=0, dtype=jnp.int32)
     return visited.astype(jnp.uint8), counter, roots
@@ -272,6 +470,27 @@ def _ic_sparse_factory(graph: Graph, cfg, *, placement=None):
     return lambda key: sample_ic_sparse(
         key, graph.edge_src, graph.edge_dst, graph.in_prob,
         n_nodes=graph.n, batch=cfg.batch, placement=placement)
+
+
+@register_sampler("IC-dense-stable")
+def _ic_dense_stable_factory(graph: Graph, cfg, *, placement=None):
+    logq = make_logq(graph)
+    return lambda key, positions=None: sample_ic_dense_stable(
+        key, logq, positions, batch=cfg.batch, placement=placement)
+
+
+@register_sampler("IC-sparse-stable")
+def _ic_sparse_stable_factory(graph: Graph, cfg, *, placement=None):
+    return lambda key, positions=None: sample_ic_sparse_stable(
+        key, graph.edge_src, graph.edge_dst, graph.in_prob, positions,
+        n_nodes=graph.n, batch=cfg.batch, placement=placement)
+
+
+@register_sampler("LT-stable")
+def _lt_stable_factory(graph: Graph, cfg, *, placement=None):
+    return lambda key, positions=None: sample_lt_stable(
+        key, graph.dst_offsets, graph.in_src, graph.in_lt_cum,
+        graph.in_lt_total, positions, batch=cfg.batch, placement=placement)
 
 
 @register_sampler("LT")

@@ -32,6 +32,13 @@ The `SelectionStrategy` registry at the bottom exposes all of these to the
 `InfluenceEngine` as ``(method, layout)`` pairs — rebuild/decrement x
 dense/sparse/sharded — so new strategies plug in via ``register_selection``
 instead of growing an if/elif ladder in the driver.
+
+Every strategy treats ``valid`` as an *arbitrary* row mask, not a prefix:
+``alive`` starts from it, the counter reduction masks by it, and
+``covered_frac`` normalizes by its popcount.  The streaming subsystem
+(``repro.stream``) leans on exactly this contract — a `GraphDelta` clears
+the live bits of stale RRR rows and they drop out of the very next
+``select``/``hits`` with no rebuild and no kernel changes here.
 """
 from __future__ import annotations
 

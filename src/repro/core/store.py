@@ -33,6 +33,26 @@ selection inputs: padding rows are all-zero (bitmap) / all-sentinel
 and the global counter are permutation-invariant over rows (every
 reduction is an exact integer sum), so results are seed-for-seed
 identical to a ``BitmapStore`` fed the same sample stream, on any mesh.
+
+Streaming (``repro.stream``) adds a **row lifecycle** on top of the
+grow-only arena: every filled row carries a ``live`` bit, and
+``view().valid`` is ``filled & live`` — a killed (stale or evicted) row
+drops out of selection, ``hits`` and the fused counter *immediately*,
+with no rebuild.  Three primitives drive it, all in place:
+
+  * ``kill_rows(mask)``    — mark rows dead and subtract their fused-
+    counter contribution (invalidation and eviction share this path);
+  * ``replace_rows(i, b)`` — overwrite dead slots with freshly sampled
+    rows and revive them (the streaming refresh write);
+  * ``compact()``          — rewrite live rows to the arena head (per
+    shard for `ShardedStore`), reclaiming dead slots; returns an
+    old-slot -> new-slot remap so callers tracking row provenance can
+    follow the move.
+
+`StorePressurePolicy` bounds resident memory (``max_rows`` /
+``max_bytes``): ``add_batch`` under a policy first compacts (dead rows
+are the first victims — staleness-first), then evicts the oldest live
+rows, so arena capacity never exceeds the cap on an indefinite stream.
 """
 from __future__ import annotations
 
@@ -59,6 +79,40 @@ def next_pow2(x: int, floor: int = MIN_CAPACITY) -> int:
     while cap < x:
         cap <<= 1
     return cap
+
+
+@dataclasses.dataclass(frozen=True)
+class StorePressurePolicy:
+    """Bounded-memory contract for an indefinite stream of batches.
+
+    ``max_rows`` caps the arena's row capacity directly; ``max_bytes``
+    caps it through the backend's bytes-per-row (``n`` for bitmaps,
+    ``4 * l_pad`` for index lists); when both are set the tighter one
+    wins.  Victim order under pressure is **staleness-first**: dead
+    (stale/invalidated) rows are reclaimed by compaction before any live
+    row is touched, then the *oldest* live rows are evicted FIFO — the
+    lowest-information residents under a growing theta schedule (HBMax's
+    observation: early small-theta samples are the cheapest to drop).
+    """
+    max_rows: int | None = None
+    max_bytes: int | None = None
+
+    def row_cap(self, row_bytes: int) -> int | None:
+        """Effective row capacity for a backend storing ``row_bytes`` per
+        row, or None when the policy is unbounded."""
+        caps = []
+        if self.max_rows is not None:
+            caps.append(int(self.max_rows))
+        if self.max_bytes is not None:
+            caps.append(int(self.max_bytes) // max(int(row_bytes), 1))
+        if not caps:
+            return None
+        cap = min(caps)
+        if cap < 1:
+            raise ValueError(
+                f"StorePressurePolicy resolves to a row cap of {cap} "
+                f"(row_bytes={row_bytes}); the cap must hold >= 1 row")
+        return cap
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +158,45 @@ def _write_rows(arena, rows, start):
     return jax.lax.dynamic_update_slice(arena, rows, start_idx)
 
 
+@partial(jax.jit, donate_argnums=(0, 1))
+def _compact_rows(R, sizes, keep, fill):
+    """Stable-partition live rows to the arena head, dead slots to
+    ``fill`` padding.  The sort key ``(~keep) * cap + iota`` is unique, so
+    the permutation is deterministic and order-preserving among kept rows
+    (oldest rows stay first — the FIFO order eviction relies on)."""
+    cap = keep.shape[0]
+    iota = jnp.arange(cap, dtype=jnp.int32)
+    perm = jnp.argsort(jnp.where(keep, 0, 1) * cap + iota)
+    newvalid = iota < keep.sum(dtype=jnp.int32)
+    R = jnp.where(newvalid[:, None], R[perm], fill)
+    sizes = jnp.where(newvalid, sizes[perm], 0)
+    return R, sizes
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _replace_rows_kernel(R, sizes, live, counter, idx, rows, row_sizes,
+                         contrib):
+    """Scatter fresh ``rows`` into dead slots ``idx``, revive their live
+    bits, and add the replacement contribution to the fused counter.
+    ``idx`` entries of -1 are padding (callers pad the target count to a
+    power of two so jit retraces stay O(log capacity)) — they scatter
+    out-of-bounds and drop; their ``contrib`` share is pre-masked."""
+    tgt = jnp.where(idx >= 0, idx, R.shape[0])
+    R = R.at[tgt].set(rows, mode="drop")
+    sizes = sizes.at[tgt].set(row_sizes, mode="drop")
+    live = live.at[tgt].set(True, mode="drop")
+    return R, sizes, live, counter + contrib
+
+
+def _restore_live(store, st) -> None:
+    """Re-apply a snapshot's live bits (absent in pre-streaming
+    snapshots, where every filled row is live)."""
+    if "live" in st:
+        live = np.asarray(st["live"]).astype(bool)
+        store.live = jnp.asarray(live)
+        store.dead = int(store.count - live[:store.count].sum())
+
+
 @jax.jit
 def _bitmap_hits(R, valid, S):
     """Fraction of valid sets hit by each seed row. S: (Q, L) int32."""
@@ -133,13 +226,17 @@ class RRRStore(Protocol):
 
     ``add_batch(visited, counter=None)`` takes ``(B, n) uint8`` bitmaps and
     appends them in place (implementations donate their arena buffer — do
-    not hold references to a previous ``view()`` across a write).
+    not hold references to a previous ``view()`` across a write),
+    returning the slot index each row landed in (streaming provenance).
     ``counter`` is the sampler's fused ``(n,) int32`` batch contribution;
     backends may recompute it locally instead (``ShardedStore`` does, so
     the count stays shard-local).  ``view()`` returns a `StoreView` whose
     arrays alias live buffers; ``hits(S)`` answers ``(Q, L) int32`` seed-
     set membership queries as per-query covered fractions ``(Q,) f32``;
-    ``state()`` returns a host pytree for `checkpoint.store`.
+    ``state()`` returns a host pytree for `checkpoint.store`.  Streaming
+    consumers additionally use the row lifecycle (``kill_rows`` /
+    ``replace_rows`` / ``compact``, ``live_count``, ``row_cap``) — see
+    the module docstring.
     """
     representation: str
     n: int
@@ -149,7 +246,7 @@ class RRRStore(Protocol):
     counter: jnp.ndarray
     sizes: jnp.ndarray
 
-    def add_batch(self, visited, counter=None) -> None: ...
+    def add_batch(self, visited, counter=None) -> np.ndarray: ...
     def view(self) -> StoreView: ...
     def hits(self, S) -> jnp.ndarray: ...
     def coverage_stats(self) -> tuple[float, int]: ...
@@ -157,23 +254,38 @@ class RRRStore(Protocol):
 
 
 class _ArenaBase:
-    """Shared arena bookkeeping: pow2 capacity, doubling, fused counter."""
+    """Shared arena bookkeeping: pow2 capacity, doubling, fused counter,
+    and the streaming row lifecycle (live bits, kill/replace/compact,
+    pressure-policy eviction)."""
 
-    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY):
+    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY,
+                 policy: StorePressurePolicy | None = None):
         self.n = int(n)
         self.capacity = next_pow2(capacity)
         self.count = 0
+        self.dead = 0           # filled rows whose live bit is cleared
         self.version = 0
+        self.policy = policy
+        self.track_remaps = False   # StreamEngine opts in to remap logging
+        self._remaps: list[np.ndarray] = []
         self.sizes = jnp.zeros((self.capacity,), jnp.int32)
         self.counter = jnp.zeros((self.n,), jnp.int32)
+        self.live = jnp.ones((self.capacity,), jnp.bool_)
 
     def _grow_rows(self, need: int):
         new_cap = next_pow2(need, self.capacity)
+        cap = self.row_cap
+        if cap is not None:
+            # capacity is clamped to the policy cap (possibly non-pow2);
+            # _ensure_room already guaranteed need <= cap
+            new_cap = min(new_cap, max(cap, self.capacity))
         if new_cap == self.capacity:
             return
         self._realloc(new_cap)
         sizes = jnp.zeros((new_cap,), jnp.int32)
         self.sizes = _write_rows(sizes, self.sizes, jnp.int32(0))
+        self.live = jnp.concatenate(
+            [self.live, jnp.ones((new_cap - self.capacity,), jnp.bool_)])
         self.capacity = new_cap
 
     def _finish_add(self, batch_sizes, counter):
@@ -184,11 +296,127 @@ class _ArenaBase:
         self.version += 1
 
     def _valid(self):
-        return jnp.arange(self.capacity) < self.count
+        return (jnp.arange(self.capacity) < self.count) & self.live
 
     def coverage_stats(self) -> tuple[float, int]:
-        """(avg fractional set coverage, max set size) over stored sets."""
-        return _coverage_stats(self.sizes, self.count, self.n)
+        """(avg fractional set coverage, max set size) over *live* sets
+        (killed rows have their sizes zeroed)."""
+        return _coverage_stats(self.sizes, self.live_count, self.n)
+
+    # ---------------------------------------------------- row lifecycle ----
+
+    @property
+    def live_count(self) -> int:
+        """Filled rows that are still live (the streaming effective theta)."""
+        return self.count - self.dead
+
+    @property
+    def row_cap(self) -> int | None:
+        """Policy row capacity for this backend, or None (unbounded)."""
+        if self.policy is None:
+            return None
+        return self.policy.row_cap(self._row_bytes())
+
+    def live_mask(self) -> jnp.ndarray:
+        """``(capacity,) bool`` live bits (True for unfilled slots too —
+        mask by the fill prefix, as ``view().valid`` does)."""
+        return self.live
+
+    def drain_remaps(self) -> list[np.ndarray]:
+        """Pop the slot remaps recorded since the last drain (only
+        populated while ``track_remaps`` is set).  Each entry maps
+        old slot -> new slot, with -1 for reclaimed slots; apply them in
+        order to follow rows across compactions."""
+        out, self._remaps = self._remaps, []
+        return out
+
+    def kill_rows(self, dead) -> int:
+        """Mark rows dead (stale or evicted): they leave ``view().valid``,
+        ``hits`` and the fused counter immediately; their slots are
+        reclaimed by the next `compact`.  ``dead`` is a ``(capacity,)``
+        bool mask (host or device); bits outside the filled-and-live set
+        are ignored.  Returns the number of newly dead rows."""
+        dead = jnp.asarray(dead) & self._valid()
+        k = int(np.asarray(dead.sum()))
+        if k == 0:
+            return 0
+        self.counter = self.counter - self._row_contrib(dead)
+        self.sizes = jnp.where(dead, 0, self.sizes)
+        self.live = self.live & ~dead
+        self.dead += k
+        self.version += 1
+        return k
+
+    def replace_rows(self, idx, rows) -> None:
+        """Overwrite dead slots ``idx (K,) int`` with fresh ``rows (K, n)
+        uint8`` bitmaps and revive them — the streaming refresh write.
+        Targets must be filled, dead slots (enforced); ``idx`` entries of
+        -1 are padding and ignored (callers may pre-pad; this method also
+        pads the batch to a power of two to bound jit retraces)."""
+        idx = np.asarray(idx, np.int64)
+        real = idx >= 0
+        k = int(real.sum())
+        if k == 0:
+            return
+        live_host = np.asarray(self.live)
+        if (idx[real] >= self.count).any() or live_host[idx[real]].any():
+            raise ValueError(
+                "replace_rows targets must be filled, dead slots "
+                "(kill_rows them first)")
+        rows = jnp.asarray(rows).astype(jnp.uint8)
+        pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
+        if pad:
+            idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
+        mask = jnp.asarray(idx >= 0)
+        rows = rows * mask[:, None].astype(jnp.uint8)   # zero pad rows
+        row_sizes = rows.sum(axis=1, dtype=jnp.int32)
+        stored = self._rows_for_storage(rows)
+        self.R, self.sizes, self.live, self.counter = _replace_rows_kernel(
+            self.R, self.sizes, self.live, self.counter,
+            jnp.asarray(idx, jnp.int32), stored, row_sizes,
+            rows.sum(axis=0, dtype=jnp.int32))
+        self.dead -= k
+        self.version += 1
+
+    def compact(self) -> np.ndarray | None:
+        """Rewrite live rows to the arena head in place, reclaiming dead
+        slots.  Returns the old->new slot remap (-1 for reclaimed slots),
+        or None when there was nothing to reclaim."""
+        if self.dead == 0:
+            return None
+        keep = np.asarray(self._valid())
+        self.R, self.sizes = _compact_rows(
+            self.R, self.sizes, jnp.asarray(keep), self._fill_value())
+        remap = np.full(self.capacity, -1, np.int64)
+        remap[keep] = np.arange(int(keep.sum()))
+        self.count = int(keep.sum())
+        self.dead = 0
+        self.live = jnp.ones((self.capacity,), jnp.bool_)
+        self.version += 1
+        if self.track_remaps:
+            self._remaps.append(remap)
+        return remap
+
+    def _ensure_room(self, incoming: int):
+        """Pressure-policy enforcement before a batch write: reclaim dead
+        slots first (staleness-first victim order), then evict the oldest
+        live rows FIFO until ``incoming`` rows fit under the cap."""
+        cap = self.row_cap
+        if cap is None:
+            return
+        if incoming > cap:
+            raise ValueError(
+                f"batch of {incoming} rows exceeds the policy row cap "
+                f"of {cap}")
+        if self.count + incoming <= cap:
+            return
+        self.compact()
+        over = self.count + incoming - cap
+        if over > 0:
+            self.kill_rows(jnp.arange(self.capacity) < over)
+            self.compact()
 
     def _base_state(self) -> dict:
         return {
@@ -196,6 +424,7 @@ class _ArenaBase:
             "count": np.int64(self.count),
             "sizes": np.asarray(self.sizes),
             "counter": np.asarray(self.counter),
+            "live": np.asarray(self.live),
         }
 
 
@@ -206,8 +435,9 @@ class BitmapStore(_ArenaBase):
 
     representation = "bitmap"
 
-    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY):
-        super().__init__(n, capacity=capacity)
+    def __init__(self, n: int, *, capacity: int = MIN_CAPACITY,
+                 policy: StorePressurePolicy | None = None):
+        super().__init__(n, capacity=capacity, policy=policy)
         self.R = jnp.zeros((self.capacity, self.n), jnp.uint8)
         self._idx_cache = None      # (version, l_pad) -> R_idx
 
@@ -215,20 +445,42 @@ class BitmapStore(_ArenaBase):
         R = jnp.zeros((new_cap, self.n), jnp.uint8)
         self.R = _write_rows(R, self.R, jnp.int32(0))
 
-    def add_batch(self, visited, counter=None) -> None:
+    def _row_bytes(self) -> int:
+        return self.n
+
+    def _fill_value(self):
+        return jnp.uint8(0)
+
+    def _rows_for_storage(self, rows):
+        return rows
+
+    def _row_contrib(self, mask):
+        """Fused-counter contribution of the masked rows (exact: counts
+        fit f32 integers)."""
+        return (mask.astype(jnp.float32)
+                @ self.R.astype(jnp.float32)).astype(jnp.int32)
+
+    def add_batch(self, visited, counter=None) -> np.ndarray:
         """Append ``visited (B, n) uint8`` rows in place.
 
         The arena buffer is donated to the writer — any outstanding
         ``view()`` of this store is invalidated by this call.  ``counter``
         is the sampler's fused ``(n,) int32`` contribution (computed here
-        when absent).
+        when absent).  Returns the slot indices the batch rows landed in
+        (streaming consumers track row provenance with them).  Under a
+        `StorePressurePolicy` the write may first compact and evict (see
+        ``_ensure_room``).
         """
         visited = jnp.asarray(visited).astype(jnp.uint8)
-        self._grow_rows(self.count + visited.shape[0])
+        B = int(visited.shape[0])
+        self._ensure_room(B)
+        self._grow_rows(self.count + B)
         if counter is None:
             counter = visited.sum(axis=0, dtype=jnp.int32)
+        slots = np.arange(self.count, self.count + B, dtype=np.int64)
         self.R = _write_rows(self.R, visited, jnp.int32(self.count))
         self._finish_add(visited.sum(axis=1, dtype=jnp.int32), counter)
+        return slots
 
     def view(self) -> StoreView:
         """Aliasing `StoreView` of the live ``(capacity, n)`` arena with
@@ -263,6 +515,7 @@ class BitmapStore(_ArenaBase):
         store.sizes = jnp.asarray(st["sizes"], jnp.int32)
         store.counter = jnp.asarray(st["counter"], jnp.int32)
         store.count = int(st["count"])
+        _restore_live(store, st)
         return store
 
     @classmethod
@@ -289,8 +542,9 @@ class IndexStore(_ArenaBase):
     representation = "indices"
 
     def __init__(self, n: int, *, capacity: int = MIN_CAPACITY,
-                 l_pad: int = MIN_INDEX_PAD):
-        super().__init__(n, capacity=capacity)
+                 l_pad: int = MIN_INDEX_PAD,
+                 policy: StorePressurePolicy | None = None):
+        super().__init__(n, capacity=capacity, policy=policy)
         self.l_pad = next_pow2(l_pad, MIN_INDEX_PAD)
         self.R = jnp.full((self.capacity, self.l_pad), self.n, jnp.int32)
 
@@ -306,16 +560,37 @@ class IndexStore(_ArenaBase):
         self.R = jnp.concatenate([self.R, pad], axis=1)
         self.l_pad = new_l
 
-    def add_batch(self, visited, counter=None) -> None:
+    def _row_bytes(self) -> int:
+        return 4 * self.l_pad
+
+    def _fill_value(self):
+        return jnp.int32(self.n)
+
+    def _rows_for_storage(self, rows):
+        self._widen(int(rows.sum(axis=1).max()))
+        return bitmap_to_indices(rows, self.l_pad)
+
+    def _row_contrib(self, mask):
+        w = jnp.broadcast_to(mask[:, None], self.R.shape)
+        return (jnp.zeros((self.n,), jnp.float32)
+                .at[self.R.reshape(-1)]
+                .add(w.reshape(-1).astype(jnp.float32), mode="drop")
+                .astype(jnp.int32))
+
+    def add_batch(self, visited, counter=None) -> np.ndarray:
         visited = jnp.asarray(visited).astype(jnp.uint8)
+        B = int(visited.shape[0])
         batch_sizes = visited.sum(axis=1, dtype=jnp.int32)
         self._widen(int(batch_sizes.max()))
-        self._grow_rows(self.count + visited.shape[0])
+        self._ensure_room(B)
+        self._grow_rows(self.count + B)
         if counter is None:
             counter = visited.sum(axis=0, dtype=jnp.int32)
         rows = bitmap_to_indices(visited, self.l_pad)
+        slots = np.arange(self.count, self.count + B, dtype=np.int64)
         self.R = _write_rows(self.R, rows, jnp.int32(self.count))
         self._finish_add(batch_sizes, counter)
+        return slots
 
     def view(self) -> StoreView:
         return StoreView("indices", self.R, self._valid(), self.n, self.count)
@@ -337,6 +612,7 @@ class IndexStore(_ArenaBase):
         store.sizes = jnp.asarray(st["sizes"], jnp.int32)
         store.counter = jnp.asarray(st["counter"], jnp.int32)
         store.count = int(st["count"])
+        _restore_live(store, st)
         return store
 
 
@@ -347,6 +623,12 @@ def _sharded_zeros(shape, dtype, sharding):
     """Zeros *born sharded*: allocated under jit with ``out_shardings`` so
     the full logical array is never materialized on a single device."""
     return jax.jit(partial(jnp.zeros, shape, dtype),
+                   out_shardings=sharding)()
+
+
+def _sharded_ones(shape, dtype, sharding):
+    """Ones born sharded (see `_sharded_zeros`)."""
+    return jax.jit(partial(jnp.ones, shape, dtype),
                    out_shardings=sharding)()
 
 
@@ -396,15 +678,87 @@ def _sharded_grow_kernel(mesh, theta_axes, pad):
     """Per-shard capacity doubling: every shard zero-pads its own
     ``(cap_local, n)`` block to ``(cap_local + pad, n)`` locally (no
     gather, no cross-device traffic; the copy itself is not donatable
-    because the output shape differs, but doubling amortizes it)."""
+    because the output shape differs, but doubling amortizes it).  Live
+    bits pad with True (unfilled slots are live-by-default)."""
     sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
 
-    def grow(R, sizes):
+    def grow(R, sizes, live):
         return (jnp.pad(R, ((0, pad), (0, 0))),
-                jnp.pad(sizes, ((0, pad),)))
+                jnp.pad(sizes, ((0, pad),)),
+                jnp.pad(live, ((0, pad),), constant_values=True))
 
-    return jax.jit(shard_map(grow, mesh=mesh, in_specs=(sp_rows, sp_vec),
-                             out_specs=(sp_rows, sp_vec)))
+    return jax.jit(shard_map(grow, mesh=mesh,
+                             in_specs=(sp_rows, sp_vec, sp_vec),
+                             out_specs=(sp_rows, sp_vec, sp_vec)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_stream_kernels(mesh, theta_axes):
+    """Compiled per-(mesh, axes) streaming row-lifecycle kernels.
+
+    Returns ``(kill, replace, compact)``, each shard-local:
+      * ``kill(R, counter, sizes, live, dead)`` — subtract the dead local
+        rows' contribution from the shard's counter partial, zero their
+        sizes, clear their live bits.  counter/sizes/live donated.
+      * ``replace(R, counter, sizes, live, offs, idx, rows)`` — ``idx``
+        and ``rows`` arrive replicated; each shard scatters the subset of
+        rows whose global slot falls in its block (out-of-block targets
+        are dropped), revives their live bits, and adds its share of the
+        contribution to its counter partial.  All state donated.
+      * ``compact(R, sizes, live, counts)`` — stable-partition the live
+        local rows to the shard's arena head and return the new per-shard
+        counts; dead slots zero out.  R/sizes donated.
+    """
+    sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
+
+    def kill(R, counter, sizes, live, dead):
+        contrib = dead.astype(jnp.float32) @ R.astype(jnp.float32)
+        counter = counter - contrib.astype(jnp.int32)[None, :]
+        return counter, jnp.where(dead, 0, sizes), live & ~dead
+
+    kill_fn = jax.jit(
+        shard_map(kill, mesh=mesh,
+                  in_specs=(sp_rows, sp_rows, sp_vec, sp_vec, sp_vec),
+                  out_specs=(sp_rows, sp_vec, sp_vec)),
+        donate_argnums=(1, 2, 3))
+
+    def replace(R, counter, sizes, live, offs, idx, rows):
+        cap_local = R.shape[0]
+        lidx = idx - offs[0]
+        ok = (lidx >= 0) & (lidx < cap_local)
+        tgt = jnp.where(ok, lidx, cap_local)        # OOB -> dropped
+        R = R.at[tgt].set(rows, mode="drop")
+        contrib = (rows * ok[:, None]).sum(axis=0, dtype=jnp.int32)
+        counter = counter + contrib[None, :]
+        sizes = sizes.at[tgt].set(rows.sum(axis=1, dtype=jnp.int32),
+                                  mode="drop")
+        live = live.at[tgt].set(True, mode="drop")
+        return R, counter, sizes, live
+
+    replace_fn = jax.jit(
+        shard_map(replace, mesh=mesh,
+                  in_specs=(sp_rows, sp_rows, sp_vec, sp_vec, sp_vec,
+                            P(None), P(None, None)),
+                  out_specs=(sp_rows, sp_rows, sp_vec, sp_vec)),
+        donate_argnums=(0, 1, 2, 3))
+
+    def comp(R, sizes, live, counts):
+        cap_local = R.shape[0]
+        iota = jnp.arange(cap_local, dtype=jnp.int32)
+        keep = (iota < counts[0]) & live
+        perm = jnp.argsort(jnp.where(keep, 0, 1) * cap_local + iota)
+        newvalid = iota < keep.sum(dtype=jnp.int32)
+        R = jnp.where(newvalid[:, None], R[perm], 0)
+        sizes = jnp.where(newvalid, sizes[perm], 0)
+        return R, sizes, keep.sum(dtype=jnp.int32)[None]
+
+    comp_fn = jax.jit(
+        shard_map(comp, mesh=mesh,
+                  in_specs=(sp_rows, sp_vec, sp_vec, sp_vec),
+                  out_specs=(sp_rows, sp_vec, sp_vec)),
+        donate_argnums=(0, 1))
+
+    return kill_fn, replace_fn, comp_fn
 
 
 class ShardedStore:
@@ -450,7 +804,8 @@ class ShardedStore:
     representation = "bitmap"
 
     def __init__(self, n: int, *, mesh, theta_axes=("data",),
-                 capacity: int = MIN_CAPACITY):
+                 capacity: int = MIN_CAPACITY,
+                 policy: StorePressurePolicy | None = None):
         if mesh is None:
             raise ValueError("ShardedStore needs a jax.sharding.Mesh")
         if isinstance(theta_axes, str):
@@ -461,18 +816,34 @@ class ShardedStore:
         self.D = int(np.prod([mesh.shape[a] for a in self.theta_axes]))
         self.cap_local = next_pow2(-(-int(capacity) // self.D))
         self.version = 0
+        self.policy = policy
+        self.track_remaps = False
+        self._remaps: list[np.ndarray] = []
         self._sh_rows = NamedSharding(mesh, P(self.theta_axes, None))
         self._sh_vec = NamedSharding(mesh, P(self.theta_axes))
+        self._sh_rep = NamedSharding(mesh, P())
         self._counts_host = np.zeros((self.D,), np.int64)
+        if policy is not None:
+            cap = policy.row_cap(self.n)
+            if cap // self.D < 1:
+                raise ValueError(
+                    f"policy row cap {cap} is below one row per shard "
+                    f"(D={self.D})")
+            self.cap_local = min(self.cap_local, cap // self.D)
+        self._live_host = np.ones((self.D * self.cap_local,), bool)
         self.R = _sharded_zeros(
             (self.D * self.cap_local, self.n), jnp.uint8, self._sh_rows)
         self.sizes = _sharded_zeros(
             (self.D * self.cap_local,), jnp.int32, self._sh_vec)
+        self.live = _sharded_ones(
+            (self.D * self.cap_local,), jnp.bool_, self._sh_vec)
         self._counter = _sharded_zeros(
             (self.D, self.n), jnp.int32, self._sh_rows)
         self._counts = _sharded_zeros((self.D,), jnp.int32, self._sh_vec)
         self._write_fn, self._valid_fn = _sharded_write_kernels(
             mesh, self.theta_axes)
+        self._kill_fn, self._replace_fn, self._compact_fn = (
+            _sharded_stream_kernels(mesh, self.theta_axes))
 
     # ------------------------------------------------------------ shape ----
 
@@ -490,6 +861,45 @@ class ShardedStore:
     def counts(self) -> np.ndarray:
         """Per-shard valid row counts ``(D,)`` (host copy)."""
         return self._counts_host.copy()
+
+    def _filled_host(self) -> np.ndarray:
+        """Host ``(D * cap_local,) bool`` per-shard fill-prefix mask."""
+        iota = np.arange(self.cap_local)
+        return (iota[None, :] < self._counts_host[:, None]).reshape(-1)
+
+    @property
+    def dead(self) -> int:
+        """Filled rows whose live bit is cleared (stale/evicted)."""
+        return int((self._filled_host() & ~self._live_host).sum())
+
+    @property
+    def live_count(self) -> int:
+        """Filled rows that are still live (the streaming effective
+        theta)."""
+        return self.count - self.dead
+
+    @property
+    def row_cap(self) -> int | None:
+        """Attainable policy row capacity, or None when unbounded.
+        Floored to a multiple of the shard count (each shard holds
+        ``cap // D`` rows) — reporting the raw policy cap would make
+        ``extend``-to-cap loops spin forever on non-divisible caps."""
+        if self.policy is None:
+            return None
+        cap = self.policy.row_cap(self.n)
+        return (cap // self.D) * self.D
+
+    def live_mask(self) -> jnp.ndarray:
+        """Sharded ``(D * cap_local,) bool`` live bits."""
+        return self.live
+
+    def drain_remaps(self) -> list[np.ndarray]:
+        """Pop slot remaps recorded since the last drain (compactions
+        *and* per-shard growth — growth renumbers global slots because
+        shard blocks move apart).  Only populated while ``track_remaps``
+        is set."""
+        out, self._remaps = self._remaps, []
+        return out
 
     @property
     def counter(self) -> jnp.ndarray:
@@ -510,14 +920,55 @@ class ShardedStore:
     def _grow_rows(self, incoming: int):
         need = int(self._counts_host.max(initial=0)) + incoming
         new_cap = next_pow2(need, self.cap_local)
+        cap = self.row_cap
+        if cap is not None:
+            new_cap = min(new_cap, max(cap // self.D, self.cap_local))
         if new_cap == self.cap_local:
             return
         grow = _sharded_grow_kernel(
             self.mesh, self.theta_axes, new_cap - self.cap_local)
-        self.R, self.sizes = grow(self.R, self.sizes)
+        self.R, self.sizes, self.live = grow(self.R, self.sizes, self.live)
+        # shard blocks moved apart: global slot d*cap_local+i is now
+        # d*new_cap+i — record the renumbering for provenance trackers
+        old_cap = self.cap_local
+        live_host = np.ones((self.D * new_cap,), bool)
+        remap = np.empty((self.D * old_cap,), np.int64)
+        for d in range(self.D):
+            remap[d * old_cap:(d + 1) * old_cap] = (
+                d * new_cap + np.arange(old_cap))
+            live_host[d * new_cap:d * new_cap + old_cap] = (
+                self._live_host[d * old_cap:(d + 1) * old_cap])
+        self._live_host = live_host
+        if self.track_remaps:
+            self._remaps.append(remap)
         self.cap_local = new_cap
 
-    def add_batch(self, visited, counter=None) -> None:
+    def _ensure_room(self, b: int):
+        """Per-shard pressure enforcement: compact away dead rows first,
+        then evict each over-full shard's oldest live rows FIFO."""
+        cap = self.row_cap
+        if cap is None:
+            return
+        local_cap = cap // self.D
+        if b > local_cap:
+            raise ValueError(
+                f"batch of {b} rows per shard exceeds the per-shard "
+                f"policy cap of {local_cap} (row cap {cap} over "
+                f"{self.D} shards)")
+        if int(self._counts_host.max(initial=0)) + b <= local_cap:
+            return
+        self.compact()
+        over = self._counts_host + b - local_cap
+        if (over > 0).any():
+            mask = np.zeros((self.D * self.cap_local,), bool)
+            for d in range(self.D):
+                if over[d] > 0:
+                    lo = d * self.cap_local
+                    mask[lo:lo + int(over[d])] = True
+            self.kill_rows(mask)
+            self.compact()
+
+    def add_batch(self, visited, counter=None) -> np.ndarray:
         """Append ``visited (B, n) uint8`` rows, block-split across shards.
 
         Shard ``d`` receives rows ``[d*b, (d+1)*b)`` of the (zero-padded)
@@ -526,13 +977,16 @@ class ShardedStore:
         all donated, so outstanding views are invalidated.  ``counter`` is
         accepted for `RRRStore` API parity but ignored: the fused C3
         contribution is recomputed *inside* the write kernel from each
-        shard's own rows, keeping the count device-local.
+        shard's own rows, keeping the count device-local.  Returns the
+        global slot index of each batch row (provenance for streaming
+        consumers); under a `StorePressurePolicy` the write may first
+        compact and evict per shard.
         """
         del counter  # recomputed shard-locally inside the write kernel
         visited = jnp.asarray(visited).astype(jnp.uint8)
         B = int(visited.shape[0])
         if B == 0:
-            return
+            return np.zeros((0,), np.int64)
         b = -(-B // self.D)
         if b * self.D != B:
             visited = jnp.concatenate(
@@ -540,20 +994,109 @@ class ShardedStore:
         # no-op when the sampler already placed the batch with
         # ``batch_sharding``; otherwise reshards the (small) batch only
         visited = jax.device_put(visited, self._sh_rows)
+        self._ensure_room(b)
         self._grow_rows(b)
         incs_np = np.clip(B - np.arange(self.D) * b, 0, b).astype(np.int32)
         incs = jax.device_put(jnp.asarray(incs_np), self._sh_vec)
+        slots = np.empty((B,), np.int64)
+        for d in range(self.D):
+            i0 = d * b
+            cnt = int(incs_np[d])
+            slots[i0:i0 + cnt] = (d * self.cap_local
+                                  + self._counts_host[d] + np.arange(cnt))
         self.R, self.sizes, self._counter, self._counts = self._write_fn(
             self.R, self.sizes, self._counter, self._counts, visited, incs)
         self._counts_host += incs_np
         self.version += 1
+        return slots
+
+    # ----------------------------------------------------- row lifecycle ----
+
+    def kill_rows(self, dead) -> int:
+        """Mark rows dead shard-locally: each shard subtracts its dead
+        rows' contribution from its own counter partial (nothing crosses
+        devices).  ``dead`` is a global ``(D * cap_local,) bool`` mask
+        (host or device); bits outside filled-and-live rows are ignored.
+        Returns the number of newly dead rows."""
+        dead_host = np.asarray(dead).astype(bool)
+        dead_host &= self._filled_host() & self._live_host
+        k = int(dead_host.sum())
+        if k == 0:
+            return 0
+        dead_dev = jax.device_put(jnp.asarray(dead_host), self._sh_vec)
+        self._counter, self.sizes, self.live = self._kill_fn(
+            self.R, self._counter, self.sizes, self.live, dead_dev)
+        self._live_host &= ~dead_host
+        self.version += 1
+        return k
+
+    def replace_rows(self, idx, rows) -> None:
+        """Overwrite dead slots with fresh rows (streaming refresh).
+        ``idx``/``rows`` are replicated into the kernel; each shard
+        scatters only the targets inside its own block.  Targets must be
+        filled, dead slots (enforced on host); ``idx`` entries of -1 are
+        padding (the batch pads to a power of two to bound retraces)."""
+        idx = np.asarray(idx, np.int64)
+        real = idx >= 0
+        k = int(real.sum())
+        if k == 0:
+            return
+        filled = self._filled_host()
+        if ((idx[real] >= self.D * self.cap_local).any()
+                or not filled[idx[real]].all()
+                or self._live_host[idx[real]].any()):
+            raise ValueError(
+                "replace_rows targets must be filled, dead slots "
+                "(kill_rows them first)")
+        rows = jnp.asarray(rows).astype(jnp.uint8)
+        pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
+        if pad:
+            idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
+        rows = jax.device_put(rows, self._sh_rep)
+        idx_dev = jax.device_put(jnp.asarray(idx, jnp.int32), self._sh_rep)
+        offs = jax.device_put(
+            jnp.arange(self.D, dtype=jnp.int32) * self.cap_local,
+            self._sh_vec)
+        self.R, self._counter, self.sizes, self.live = self._replace_fn(
+            self.R, self._counter, self.sizes, self.live, offs, idx_dev,
+            rows)
+        self._live_host[idx[real]] = True
+        self.version += 1
+
+    def compact(self) -> np.ndarray | None:
+        """Rewrite each shard's live rows to its arena-block head in
+        place, reclaiming dead slots shard-locally.  Returns the global
+        old->new slot remap (-1 for reclaimed), or None if no shard had
+        dead rows."""
+        if self.dead == 0:
+            return None
+        keep = self._filled_host() & self._live_host
+        self.R, self.sizes, self._counts = self._compact_fn(
+            self.R, self.sizes, self.live, self._counts)
+        self.live = _sharded_ones(
+            (self.D * self.cap_local,), jnp.bool_, self._sh_vec)
+        remap = np.full((self.D * self.cap_local,), -1, np.int64)
+        for d in range(self.D):
+            lo = d * self.cap_local
+            kd = keep[lo:lo + self.cap_local]
+            nkeep = int(kd.sum())
+            remap[lo:lo + self.cap_local][kd] = lo + np.arange(nkeep)
+            self._counts_host[d] = nkeep
+        self._live_host = np.ones((self.D * self.cap_local,), bool)
+        self.version += 1
+        if self.track_remaps:
+            self._remaps.append(remap)
+        return remap
 
     # ---------------------------------------------------------- reading ----
 
     def valid_mask(self) -> jnp.ndarray:
-        """Sharded ``(D * cap_local,) bool`` mask of filled rows (the
-        per-shard prefix ``local_iota < counts[shard]``)."""
-        return self._valid_fn(self._counts, self.sizes)
+        """Sharded ``(D * cap_local,) bool`` mask of filled *live* rows
+        (the per-shard prefix ``local_iota < counts[shard]``, minus any
+        rows killed by streaming invalidation/eviction)."""
+        return self._valid_fn(self._counts, self.sizes) & self.live
 
     def view(self) -> StoreView:
         """`StoreView` over the *sharded* arena: ``R`` keeps its
@@ -572,32 +1115,30 @@ class ShardedStore:
                             jnp.asarray(S, jnp.int32))
 
     def coverage_stats(self) -> tuple[float, int]:
-        """(avg fractional set coverage, max set size) over stored sets."""
-        return _coverage_stats(self.sizes, self.count, self.n)
+        """(avg fractional set coverage, max set size) over live stored
+        sets (killed rows have their sizes zeroed)."""
+        return _coverage_stats(self.sizes, self.live_count, self.n)
 
     # ------------------------------------------------------ checkpointing ----
 
     def state(self) -> dict:
-        """Host snapshot pytree (kind tag ``"sharded"``): the valid rows
-        of every shard *compacted* into a contiguous ``(count, n)`` array
-        (shard order), so restore redistributes onto any mesh shape — the
-        elastic layout `checkpoint.store` promises.  This is the one
-        deliberate host gather in the store's life cycle."""
+        """Host snapshot pytree (kind tag ``"sharded"``): the *live*
+        valid rows of every shard compacted into a contiguous
+        ``(live_count, n)`` array (shard order) — stale/killed rows are
+        dropped at snapshot time — so restore redistributes onto any mesh
+        shape, the elastic layout `checkpoint.store` promises.  This is
+        the one deliberate host gather in the store's life cycle."""
         R = np.asarray(self.R)
         sizes = np.asarray(self.sizes)
-        rows, row_sizes = [], []
-        for d in range(self.D):
-            c = int(self._counts_host[d])
-            lo = d * self.cap_local
-            rows.append(R[lo:lo + c])
-            row_sizes.append(sizes[lo:lo + c])
+        keep = self._filled_host() & self._live_host
+        live_count = int(keep.sum())
         return {
             "kind": np.asarray("sharded"),
             "n": np.int64(self.n),
-            "count": np.int64(self.count),
-            "R": (np.concatenate(rows) if self.count
+            "count": np.int64(live_count),
+            "R": (R[keep] if live_count
                   else np.zeros((0, self.n), np.uint8)),
-            "sizes": (np.concatenate(row_sizes) if self.count
+            "sizes": (sizes[keep] if live_count
                       else np.zeros((0,), np.int32)),
             "counter": np.asarray(self.counter),
         }
@@ -617,9 +1158,14 @@ class ShardedStore:
         an arena that only fits *because* it is sharded never transits any
         single device whole on restore."""
         n, count = int(st["n"]), int(st["count"])
+        rows = np.asarray(st["R"])[:count]
+        if "live" in st:
+            # a bitmap snapshot may carry dead (stale) rows in place —
+            # restore live rows only, like a sharded snapshot would
+            rows = rows[np.asarray(st["live"])[:count].astype(bool)]
+            count = rows.shape[0]
         store = cls(n, mesh=mesh, theta_axes=theta_axes,
                     capacity=max(count, 1))
-        rows = np.asarray(st["R"])[:count]
         chunk = max(cls.RESTORE_CHUNK // max(store.D, 1), 1) * store.D
         for lo in range(0, count, chunk):
             store.add_batch(jnp.asarray(rows[lo:lo + chunk], jnp.uint8))
@@ -658,8 +1204,11 @@ def store_from_state(st, *, mesh=None, theta_axes=("data",)) -> RRRStore:
     if mesh is not None:
         if kind == "indices":
             raise ValueError(
-                "index-list snapshots cannot restore onto a mesh "
-                "(ShardedStore is dense-only)")
+                "IndexStore snapshots are single-device only: the sharded "
+                "store is dense-only, so an index-list snapshot cannot "
+                "restore onto a mesh. Restore without a mesh, or re-run "
+                "with the bitmap representation (IMMConfig(store='bitmap' "
+                "or 'auto')), whose snapshots reshard elastically.")
         return ShardedStore.from_state(st, mesh=mesh, theta_axes=theta_axes)
     if kind == "sharded":
         return BitmapStore.from_rows(np.asarray(st["R"]), int(st["n"]))

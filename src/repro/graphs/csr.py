@@ -54,7 +54,7 @@ def _offsets_from_sorted(keys: np.ndarray, n: int) -> np.ndarray:
 
 
 def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
-                weighted_ic: str = "uniform") -> Graph:
+                weighted_ic: str = "uniform", lt_weight=None) -> Graph:
     """Build a Graph from numpy edge arrays.
 
     ic_prob: explicit per-edge IC probabilities (aligned with (src,dst)), or
@@ -62,6 +62,13 @@ def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
     cascade, 1/in_degree).  LT weights are normalized per-dst so they sum to
     <= 1 (paper: "probabilities of either activating a neighbor or activating
     none sum to one").
+
+    lt_weight: explicit per-edge LT weights (aligned with (src, dst)), or
+    None → generated from ``seed`` as above.  Explicit weights are taken
+    verbatim (callers keep per-dst sums <= 1) — the streaming delta path
+    uses this to rebuild a mutated graph while every untouched dst keeps a
+    bit-identical LT segment, so RRR walks through unmutated vertices
+    re-sample identically.
     """
     src = np.asarray(src, dtype=np.int32)
     dst = np.asarray(dst, dtype=np.int32)
@@ -88,17 +95,20 @@ def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
     in_src = src[order_dst]
     in_prob = ic_prob[order_dst]
 
-    # LT weights: raw U(0,1) normalized per dst by (indeg draw totals ~<=1).
-    raw = rng.uniform(0.0, 1.0, size=m).astype(np.float64)
-    indeg = (dst_offsets[1:] - dst_offsets[:-1]).astype(np.int64)
-    # per-dst sum of raw
-    seg_sum = np.zeros(n, dtype=np.float64)
-    np.add.at(seg_sum, dst_sorted, raw)
-    # scale so the per-node total weight is total0 = U(0,1) * (indeg>0)
-    total0 = rng.uniform(0.3, 1.0, size=n)
-    total0 = np.where(indeg > 0, total0, 0.0)
-    scale = np.where(seg_sum > 0, total0 / np.maximum(seg_sum, 1e-30), 0.0)
-    w = raw * scale[dst_sorted]
+    if lt_weight is None:
+        # LT weights: raw U(0,1) normalized per dst (indeg draw totals ~<=1).
+        raw = rng.uniform(0.0, 1.0, size=m).astype(np.float64)
+        indeg = (dst_offsets[1:] - dst_offsets[:-1]).astype(np.int64)
+        # per-dst sum of raw
+        seg_sum = np.zeros(n, dtype=np.float64)
+        np.add.at(seg_sum, dst_sorted, raw)
+        # scale so the per-node total weight is total0 = U(0,1) * (indeg>0)
+        total0 = rng.uniform(0.3, 1.0, size=n)
+        total0 = np.where(indeg > 0, total0, 0.0)
+        scale = np.where(seg_sum > 0, total0 / np.maximum(seg_sum, 1e-30), 0.0)
+        w = raw * scale[dst_sorted]
+    else:
+        w = np.asarray(lt_weight, dtype=np.float64)[order_dst]
     # within-segment cumulative sums
     cum = np.cumsum(w)
     seg_start_cum = np.concatenate([[0.0], cum])[dst_offsets[:-1]]
@@ -119,6 +129,33 @@ def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
         edge_src=jnp.asarray(in_src),
         edge_dst=jnp.asarray(dst_sorted),
     )
+
+
+def edge_arrays(g: Graph):
+    """Host (src, dst, ic_prob, lt_weight) arrays in CSC order — the
+    inverse of `build_graph`'s preprocessing, used by the streaming delta
+    path to rebuild a mutated graph.
+
+    The per-edge LT weight is recovered from the within-segment
+    cumulative sums (``w[e] = lt_cum[e] - lt_cum[e-1]`` inside each dst
+    segment, exact float64 differences of float32 values), so a rebuild
+    reproduces ``in_lt_cum`` bit-for-bit.  ``in_lt_total`` of a rebuilt
+    graph may differ from the original's by one float32 ulp (the forward
+    pass summed pre-rounding float64 weights); the round trip is
+    **idempotent** after one application, which is why `repro.stream`
+    canonicalizes a graph through this path before streaming from it.
+    """
+    src = np.asarray(g.in_src)
+    dst = np.asarray(g.edge_dst)
+    prob = np.asarray(g.in_prob)
+    lt_cum = np.asarray(g.in_lt_cum, dtype=np.float64)
+    dst_offsets = np.asarray(g.dst_offsets)
+    w = lt_cum.copy()
+    seg_starts = dst_offsets[:-1][dst_offsets[:-1] < g.m]
+    interior = np.ones(g.m, bool)
+    interior[seg_starts] = False
+    w[interior] = lt_cum[interior] - lt_cum[np.flatnonzero(interior) - 1]
+    return src, dst, prob, w
 
 
 def dense_ic_matrix(g: Graph) -> jnp.ndarray:

@@ -14,10 +14,14 @@ Two workloads share this module:
     ``--mesh N`` serves the same workload from a mesh-sharded RRR store
     (paper C1): the resident arena is partitioned across devices, so the
     served theta scales with device count — answers are seed-for-seed
-    identical to the single-device store.
+    identical to the single-device store.  ``--deltas N`` switches to the
+    dynamic-graph regime: the server runs a `StreamEngine`, random edge
+    deltas land between query bursts, and up to ``--refresh-budget`` rows
+    of stale-RRR repair run between flushes while every flush stays
+    epoch-consistent (see docs/streaming.md).
 
     PYTHONPATH=src python -m repro.launch.serve --workload im \
-        --graph com-Amazon --queries 64 --mesh auto
+        --graph com-Amazon --queries 64 --mesh auto --deltas 4
 """
 from __future__ import annotations
 
@@ -73,14 +77,34 @@ class IMServer:
     padded to shared power-of-two shapes inside the engine, so mixed query
     sizes don't fragment compilation).  ``select`` serves top-k queries
     from the engine's memoized selection — repeated k values are free.
+
+    **Background-refresh mode** (dynamic graphs): construct with a
+    `repro.stream.StreamEngine` and a ``refresh_budget``.  ``apply_delta``
+    forwards graph mutations to the stream (stale RRR rows leave serving
+    immediately), and every ``flush`` first answers *all* pending tickets
+    against one consistent store state — the epoch recorded in
+    ``served_epoch`` — and only then spends up to ``refresh_budget`` rows
+    of repair between flushes (cooperative backgrounding: the refresh
+    never interleaves with answering, so a flush can never mix rows from
+    two epochs — no torn reads across ``apply_delta``).
     """
 
-    def __init__(self, engine, *, max_batch: int = 256):
+    def __init__(self, engine, *, max_batch: int = 256,
+                 refresh_budget: int | None = None):
         self.engine = engine
         self.max_batch = max_batch
+        self.refresh_budget = refresh_budget
+        if refresh_budget is not None and not hasattr(engine, "refresh"):
+            raise ValueError(
+                "refresh_budget needs a StreamEngine (got a static "
+                "engine with nothing to refresh)")
+        if refresh_budget is not None and refresh_budget < 1:
+            raise ValueError(
+                f"refresh_budget must be >= 1 row (got {refresh_budget})")
         self._pending = []          # list[(ticket, seed_set)]
         self._next_ticket = 0
         self.queries_served = 0
+        self.served_epoch = getattr(engine, "epoch", None)
 
     @property
     def pending(self) -> int:
@@ -93,8 +117,23 @@ class IMServer:
         self._pending.append((ticket, np.asarray(seed_set, np.int32)))
         return ticket
 
+    def apply_delta(self, delta) -> int:
+        """Forward a `GraphDelta` to the underlying stream engine; the
+        next flush answers from the new epoch.  Returns the number of
+        resident rows that went stale."""
+        if not hasattr(self.engine, "apply_delta"):
+            raise ValueError("apply_delta needs a StreamEngine")
+        return self.engine.apply_delta(delta)
+
     def flush(self) -> dict:
-        """Answer all pending queries; returns {ticket: influence}."""
+        """Answer all pending queries; returns {ticket: influence}.
+
+        Every ticket in one flush is answered against the same store
+        state (the engine is not mutated between chunks), so the results
+        are epoch-consistent even when ``apply_delta`` landed between
+        submits.  In background-refresh mode, repair work runs *after*
+        the answers, bounded by ``refresh_budget`` rows.
+        """
         results = {}
         while self._pending:
             chunk = self._pending[:self.max_batch]
@@ -103,6 +142,9 @@ class IMServer:
             results.update(
                 {t: float(v) for (t, _), v in zip(chunk, vals)})
         self.queries_served += len(results)
+        self.served_epoch = getattr(self.engine, "epoch", None)
+        if self.refresh_budget is not None:
+            self.engine.refresh(self.refresh_budget)
         return results
 
     def influence(self, seed_set) -> float:
@@ -138,13 +180,18 @@ def _main_im(args):
     scale = exp.bench_scale if args.scale is None else args.scale
     g = scaled_snap(args.graph, scale, seed=0)
     mesh = make_theta_mesh(args.mesh)
-    engine = InfluenceEngine(
-        g, IMMConfig(k=args.k, model=args.model, max_theta=args.max_theta),
-        mesh=mesh)
+    cfg = IMMConfig(k=args.k, model=args.model, max_theta=args.max_theta)
+    if args.deltas:
+        from repro.stream import StreamEngine
+        engine = StreamEngine(g, cfg, mesh=mesh)
+    else:
+        engine = InfluenceEngine(g, cfg, mesh=mesh)
     t0 = time.time()
     engine.extend(args.max_theta)
     t_sample = time.time() - t0
-    server = IMServer(engine)
+    server = IMServer(
+        engine,
+        refresh_budget=args.refresh_budget if args.deltas else None)
     if mesh is not None:
         print(f"[serve-im] sharded store: theta axis over "
               f"{engine.store.D} device shard(s), "
@@ -170,6 +217,26 @@ def _main_im(args):
     vals = [answers[t] for t in tickets[:4]]
     print(f"  sample influence answers: {[round(v, 1) for v in vals]}")
 
+    if args.deltas:
+        from repro.stream import random_delta
+        drng = np.random.default_rng(7)
+        probe = engine.select(args.k).seeds
+        for i in range(args.deltas):
+            d = random_delta(engine.graph, drng, inserts=4, deletes=4,
+                             reweights=4)
+            stale = server.apply_delta(d)
+            tickets = [server.submit(probe) for _ in range(8)]
+            ans = server.flush()      # consistent answers + budgeted repair
+            sig = ans[tickets[0]]
+            print(f"  delta {i}: {len(d)} edge ops, {stale} rows stale, "
+                  f"epoch {server.served_epoch}, sigma(probe)={sig:.1f}, "
+                  f"backlog {engine.stale}")
+        while engine.stale:
+            engine.refresh(args.refresh_budget)
+        final = engine.select(args.k)
+        print(f"  drained: epoch {engine.epoch} consistent, "
+              f"select(k={args.k}) influence={final.influence:.1f}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -184,6 +251,12 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--max-theta", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--deltas", type=int, default=0,
+                    help="IM workload: apply N random graph deltas and "
+                         "serve through them (StreamEngine)")
+    ap.add_argument("--refresh-budget", type=int, default=1024,
+                    help="stale rows repaired between flushes in "
+                         "--deltas mode")
     ap.add_argument("--mesh", default=None,
                     help="theta shards for the IM store: int, 'auto', or "
                          "omit for single-device")

@@ -1,0 +1,30 @@
+"""Streaming influence subsystem: dynamic graphs over a resident RRR store.
+
+The static pipeline samples once and answers queries forever; real
+campaigns run on networks that change under them.  This package layers a
+delta/invalidate/refresh cycle on the `InfluenceEngine`:
+
+  * `repro.stream.delta`      — `GraphDelta` edge batches (insert /
+    delete / reweight) and their application to dense and CSR graphs;
+  * `repro.stream.invalidate` — the vertex -> RRR-row reverse-touch
+    queries that mark exactly the stale resident sets after a delta;
+  * `repro.stream.engine`     — `StreamEngine`: ``apply_delta`` /
+    ``refresh(budget)`` / epoch-tagged ``select``/``influence`` with
+    bounded-memory eviction via `repro.core.store.StorePressurePolicy`.
+
+See docs/streaming.md for the delta model, staleness semantics and the
+epoch-consistency contract.
+"""
+from repro.stream.delta import GraphDelta, canonicalize, random_delta
+from repro.stream.invalidate import invalidate, rows_touching
+from repro.stream.engine import StreamEngine, StreamSelection
+
+__all__ = [
+    "GraphDelta",
+    "canonicalize",
+    "random_delta",
+    "invalidate",
+    "rows_touching",
+    "StreamEngine",
+    "StreamSelection",
+]

@@ -1,0 +1,305 @@
+"""StreamEngine — influence serving on a graph that changes underneath.
+
+Wraps an `InfluenceEngine` with the streaming cycle:
+
+    stream = StreamEngine(graph, IMMConfig(...), policy=...)
+    stream.extend(4096)              # sample the resident store
+    stream.apply_delta(delta)        # edges change; stale rows die NOW
+    stream.select(k)                 # serves immediately (live rows only)
+    stream.refresh(budget=1024)      # repair stale rows incrementally
+    stream.refresh()                 # ... until stream.stale == 0
+
+Semantics:
+
+  * **apply_delta** applies a `GraphDelta` to the graph, rebinds the
+    sampler, and kills exactly the resident RRR sets whose traversal
+    touched a mutated edge's destination (`repro.stream.invalidate`).
+    The store version bump invalidates the engine's select memoization,
+    so queries can never mix pre- and post-delta rows.  Each call opens a
+    new **epoch**.
+  * **refresh(budget)** repairs staleness in row-budgeted slices: stale
+    rows are re-sampled *with their original batch keys* against the
+    current graph and written back in place (``replace_rows``); rows lost
+    to eviction/compaction are topped up with fresh keys drawn from the
+    same per-engine key stream `InfluenceEngine.extend` uses — the seed
+    stream is layout-independent, so a mesh-sharded stream refreshes to
+    the same rows as a single-device one.
+  * **Equivalence invariant** (tested in tests/test_stream.py): with an
+    unbounded store and a delta-stable sampler, refreshing until
+    ``stale == 0`` leaves the store holding *exactly* the multiset of
+    rows a fresh `InfluenceEngine` would sample on the post-delta graph
+    with the same seed and theta — surviving rows re-sample identically
+    (they avoided all mutated destinations), repaired rows are taken
+    from the very re-sample the fresh engine would draw.  Selection is
+    permutation-invariant over rows, so ``select(k)`` matches
+    seed-for-seed.
+  * **Bounded memory**: pass a `StorePressurePolicy` and the arena never
+    outgrows its row cap on an indefinite delta stream — dead rows are
+    compacted away first, then the oldest live rows are evicted
+    (staleness-first victim order); ``refresh`` tops back up to the cap.
+
+`StreamEngine` canonicalizes the input graph once
+(`repro.stream.delta.canonicalize`) so every delta rebuild reproduces
+untouched edges bit-for-bit, and upgrades the positional ``IC-sparse``
+sampler to the edge-identity-keyed ``IC-sparse-stable`` (the positional
+coin layout would decorrelate every row on any edge-count change).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.engine import IMMConfig, InfluenceEngine, Selection
+from repro.core.sampler import default_sampler_name
+from repro.core.store import StorePressurePolicy, make_store, next_pow2
+from repro.graphs.csr import Graph
+from repro.stream.delta import GraphDelta, canonicalize
+from repro.stream.invalidate import invalidate
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSelection(Selection):
+    """A `Selection` tagged with the stream epoch it answered in and the
+    staleness backlog at answer time (``stale == 0`` means the answer is
+    indistinguishable from a fresh engine on the current graph)."""
+    epoch: int = -1
+    stale: int = 0
+
+
+class StreamEngine:
+    """Dynamic-graph influence serving over a resident, repairable store.
+
+    Parameters
+    ----------
+    graph, cfg : as `InfluenceEngine` (``cfg.sampler == "IC-sparse"`` is
+        upgraded to the delta-stable ``"IC-sparse-stable"``).
+    mesh, theta_axes, vertex_axis : mesh sharding, as `InfluenceEngine`.
+    policy : optional `StorePressurePolicy` — bounded-memory mode.
+
+    The wrapped engine is exposed as ``.engine``; ``select`` /
+    ``influence`` / ``influences`` delegate to it (same memoization,
+    correctly keyed across deltas by the store version).
+    """
+
+    def __init__(self, graph: Graph, cfg: IMMConfig = None, *,
+                 mesh=None, theta_axes=("data",), vertex_axis=None,
+                 policy: StorePressurePolicy | None = None):
+        cfg = cfg if cfg is not None else IMMConfig()
+        name = cfg.sampler or default_sampler_name(graph, cfg)
+        # the positional samplers can only re-generate whole batches and
+        # (IC-sparse) decorrelate entirely when the edge count changes —
+        # upgrade to the delta-stable, row-subsettable twins
+        name = {"IC-dense": "IC-dense-stable",
+                "IC-sparse": "IC-sparse-stable",
+                "LT": "LT-stable"}.get(name, name)
+        cfg = dataclasses.replace(cfg, sampler=name)
+        graph = canonicalize(graph)
+        if mesh is not None:
+            if cfg.store not in ("auto", "sharded"):
+                raise ValueError(
+                    "streaming on a mesh requires the sharded bitmap "
+                    "store (cfg.store='auto')")
+            store = make_store("sharded", graph.n, mesh=mesh,
+                               theta_axes=theta_axes, policy=policy)
+        else:
+            kind = "bitmap" if cfg.store in ("auto", "sharded") else cfg.store
+            store = make_store(kind, graph.n, policy=policy)
+        store.track_remaps = True
+        self.engine = InfluenceEngine(
+            graph, cfg, store=store, mesh=mesh, theta_axes=theta_axes,
+            vertex_axis=vertex_axis)
+        self.policy = policy
+        self.epoch = 0
+        self.deltas_applied = 0
+        self.target_theta = 0
+        self._batch_keys: list[np.ndarray] = []
+        # slot provenance: which (batch id, in-batch position) produced
+        # the row living in each arena slot (-1 = unknown/empty)
+        self._slot_batch = np.full(store.capacity, -1, np.int64)
+        self._slot_pos = np.full(store.capacity, -1, np.int64)
+
+    # -------------------------------------------------------- bookkeeping
+
+    @property
+    def graph(self) -> Graph:
+        return self.engine.graph
+
+    @property
+    def cfg(self) -> IMMConfig:
+        return self.engine.cfg
+
+    @property
+    def store(self):
+        return self.engine.store
+
+    @property
+    def theta(self) -> int:
+        """Live resident RRR sets (the effective serving theta)."""
+        return self.store.live_count
+
+    @property
+    def _effective_target(self) -> int:
+        cap = self.store.row_cap
+        return (self.target_theta if cap is None
+                else min(self.target_theta, cap))
+
+    @property
+    def stale(self) -> int:
+        """Rows `refresh` still owes: dead-in-place stale rows plus any
+        eviction deficit below the (cap-clamped) target theta."""
+        return max(0, self._effective_target - self.store.live_count)
+
+    @property
+    def consistent(self) -> bool:
+        """True when serving state equals a fresh engine on the current
+        graph (no staleness backlog) — an epoch-consistent snapshot."""
+        return self.stale == 0
+
+    def _sync_layout(self):
+        """Chase store-side slot moves (compaction, per-shard growth)
+        through the provenance arrays."""
+        store = self.store
+        cap = store.capacity
+        for remap in store.drain_remaps():
+            nb = np.full(cap, -1, np.int64)
+            npos = np.full(cap, -1, np.int64)
+            old = min(remap.shape[0], self._slot_batch.shape[0])
+            r = remap[:old]
+            kept = r >= 0
+            nb[r[kept]] = self._slot_batch[:old][kept]
+            npos[r[kept]] = self._slot_pos[:old][kept]
+            self._slot_batch, self._slot_pos = nb, npos
+        if self._slot_batch.shape[0] < cap:
+            pad = cap - self._slot_batch.shape[0]
+            self._slot_batch = np.concatenate(
+                [self._slot_batch, np.full(pad, -1, np.int64)])
+            self._slot_pos = np.concatenate(
+                [self._slot_pos, np.full(pad, -1, np.int64)])
+
+    def _record(self, slots: np.ndarray, bid: int):
+        self._slot_batch[slots] = bid
+        self._slot_pos[slots] = np.arange(slots.shape[0])
+
+    def _add_recorded_batch(self) -> int:
+        """Draw one batch from the engine's key stream, store it, and
+        record its provenance.  Returns rows written."""
+        key, visited, counter = self.engine.sample_batch()
+        bid = len(self._batch_keys)
+        self._batch_keys.append(key)
+        slots = self.store.add_batch(visited, counter)
+        self._sync_layout()
+        self._record(slots, bid)
+        return slots.shape[0]
+
+    # ----------------------------------------------------------- sampling
+
+    def extend(self, theta: int) -> int:
+        """Sample until the store holds >= ``theta`` *live* rows (clamped
+        to the policy row cap), recording every batch's key for later
+        same-key repair.  Returns the live count."""
+        cap = self.store.row_cap
+        target = theta if cap is None else min(int(theta), cap)
+        while self.store.live_count < target:
+            self._add_recorded_batch()
+        self.target_theta = max(self.target_theta, target)
+        return self.store.live_count
+
+    # ------------------------------------------------------------- deltas
+
+    def apply_delta(self, delta: GraphDelta) -> int:
+        """Apply a `GraphDelta`: mutate the graph, rebind the sampler,
+        and kill exactly the resident rows whose traversal touched a
+        mutated edge's destination.  Opens a new epoch; serving continues
+        immediately on the surviving rows.  Returns the number of rows
+        that went stale."""
+        new_graph = delta.apply(self.graph)
+        stale = invalidate(self.store, delta.touched_vertices())
+        self.engine.rebind_graph(new_graph)
+        self.epoch += 1
+        self.deltas_applied += 1
+        return stale
+
+    def refresh(self, budget: int | None = None) -> int:
+        """Repair up to ``budget`` rows (None = everything) and return
+        the remaining staleness backlog.
+
+        Order of work (batch-granular, so a budget is approximate):
+        (1) stale rows whose batch key is known are re-sampled with that
+        key on the current graph and replaced in place; (2) stale slots
+        with unknown provenance are compacted away; (3) any live deficit
+        below the target theta (evictions, dropped slots) is topped up
+        with fresh batches from the engine's key stream.
+        """
+        if budget is not None and int(budget) < 1:
+            raise ValueError(
+                f"refresh budget must be >= 1 row (got {budget}); a "
+                f"zero budget can never drain the backlog")
+        store = self.store
+        if store.dead == 0 and self.stale == 0:
+            return 0     # steady state: skip the live-mask gather entirely
+        self._sync_layout()
+        left = math.inf if budget is None else int(budget)
+
+        dead_slots = np.flatnonzero(~np.asarray(store.live_mask()))
+        by_bid: dict[int, list[int]] = {}
+        for s in dead_slots:
+            by_bid.setdefault(int(self._slot_batch[s]), []).append(int(s))
+        orphans = by_bid.pop(-1, [])
+        row_repair = self.engine.supports_row_resample
+        for bid in sorted(by_bid):
+            if left <= 0:
+                break
+            slots = np.asarray(by_bid[bid], np.int64)
+            # pad the repair batch to a power of two (-1 targets are
+            # dropped by the store) so the sampler/scatter kernels retrace
+            # O(log batch) times, not once per distinct staleness count
+            k = slots.shape[0]
+            width = next_pow2(k, 1)
+            idx = np.full(width, -1, np.int64)
+            idx[:k] = slots
+            pos = np.zeros(width, np.int64)
+            pos[:k] = self._slot_pos[slots]
+            if row_repair:
+                # stable sampler: re-generate ONLY the stale rows of the
+                # batch — repair work scales with staleness, not batches
+                rows, _ = self.engine.resample(self._batch_keys[bid],
+                                               positions=pos)
+            else:
+                visited, _ = self.engine.resample(self._batch_keys[bid])
+                rows = jnp.take(visited, jnp.asarray(pos, jnp.int32),
+                                axis=0)
+            store.replace_rows(idx, rows)
+            left -= k
+
+        if orphans and left > 0:
+            store.compact()
+            self._sync_layout()
+
+        while self.store.live_count < self._effective_target and left > 0:
+            left -= self._add_recorded_batch()
+        return self.stale
+
+    # ------------------------------------------------------------ queries
+
+    def select(self, k: int = None, *, method: str = None) -> StreamSelection:
+        """Greedy top-k over the current live rows, tagged with the
+        epoch and staleness backlog it was answered under.  Memoized by
+        the wrapped engine; any delta bumps the store version, so a
+        post-delta call can never return a pre-delta answer."""
+        sel = self.engine.select(k, method=method)
+        return StreamSelection(
+            seeds=sel.seeds, covered_frac=sel.covered_frac,
+            influence=sel.influence, gains=sel.gains,
+            representation=sel.representation, theta=self.theta,
+            epoch=self.epoch, stale=self.stale)
+
+    def influences(self, seed_sets) -> np.ndarray:
+        """Batched sigma(S) against the live rows of the current epoch."""
+        return self.engine.influences(seed_sets)
+
+    def influence(self, seed_set) -> float:
+        """sigma(S) against the live rows of the current epoch."""
+        return self.engine.influence(seed_set)

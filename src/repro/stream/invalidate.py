@@ -1,0 +1,85 @@
+"""Vertex -> RRR-row reverse-touch queries: which resident sets go stale.
+
+The key observation is that the store's arena *is* the reverse-touch
+index, and it is maintained at write time for free: column ``v`` of a
+bitmap arena lists exactly the rows whose traversal touched ``v`` (the
+sampler wrote the bit the moment the traversal activated ``v``), and an
+`IndexStore` row is literally the list of touched vertices.  So the
+"index update" happens inside ``add_batch``'s existing write, and a
+staleness query after a `GraphDelta` is a masked column reduction — no
+separate structure to build, grow, or keep consistent.
+
+For a `ShardedStore` the query is shard-local by construction: the
+touched-vertex list is tiny and replicated, each device reduces over its
+own arena block, and the resulting stale mask stays sharded
+``P(theta_axes)`` — nothing row-sized crosses devices.
+
+``invalidate(store, vertices)`` marks the touched rows dead through the
+store's ``kill_rows`` primitive: they leave ``view().valid``, ``hits``
+and the fused counter immediately (the masked valid bit already flows
+through fused counting and every selection strategy), so serving
+continues on the surviving rows with no rebuild while
+`repro.stream.engine.StreamEngine.refresh` repairs in the background.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.store import next_pow2
+
+
+@jax.jit
+def _touched_bitmap(R, verts, vmask):
+    """Rows of ``R (cap, n)`` with a set bit in any masked ``verts``
+    column.  Runs shard-local on a sharded arena (columns are
+    replicated)."""
+    memb = jnp.take(R, verts, axis=1) > 0                 # (cap, V)
+    return (memb & vmask[None, :]).any(axis=1)
+
+
+@jax.jit
+def _touched_indices(R_idx, verts, vmask):
+    """Index-list version: rows containing any masked vertex (the rows
+    are the touch lists themselves)."""
+    def one(args):
+        v, ok = args
+        return (R_idx == v).any(axis=1) & ok
+
+    hit = jax.lax.map(one, (verts, vmask))                # (V, cap)
+    return hit.any(axis=0)
+
+
+def _padded_vertices(vertices, n: int):
+    """Unique in-range vertices padded to a power of two (bounds jit
+    retraces to O(log n) distinct query widths); pad entries are masked
+    out and point at vertex 0 to stay gather-safe."""
+    verts = np.unique(np.asarray(vertices, np.int32))
+    if verts.size and ((verts < 0).any() or (verts >= n).any()):
+        raise ValueError(f"touched vertices out of range for n={n}")
+    V = next_pow2(max(int(verts.size), 1), 1)
+    padded = np.zeros(V, np.int32)
+    padded[:verts.size] = verts
+    vmask = np.zeros(V, bool)
+    vmask[:verts.size] = True
+    return jnp.asarray(padded), jnp.asarray(vmask)
+
+
+def rows_touching(store, vertices) -> jnp.ndarray:
+    """``(capacity,) bool`` mask of arena rows whose RRR traversal
+    touched any of ``vertices`` (unfilled/padding rows are all-zero /
+    all-sentinel, so they never match)."""
+    verts, vmask = _padded_vertices(vertices, store.n)
+    if store.representation == "bitmap":
+        return _touched_bitmap(store.R, verts, vmask)
+    return _touched_indices(store.R, verts, vmask)
+
+
+def invalidate(store, vertices) -> int:
+    """Mark every resident RRR set that touched ``vertices`` as stale
+    (dead): the conservative staleness set for a `GraphDelta` whose
+    mutated-edge destinations are ``vertices`` (see
+    `repro.stream.delta.GraphDelta.touched_vertices`).  Returns the
+    number of newly stale rows."""
+    return store.kill_rows(rows_touching(store, vertices))
