@@ -1,0 +1,100 @@
+"""Sampler matrix: what does each traversal backend cost per model?
+
+Times `InfluenceEngine.extend(theta)` — graph preprocessing excluded,
+sampling + store writes included — for every coin model (IC, WC, GT)
+across the three frontier backends (``dense`` log-semiring mat-vec,
+``sparse`` CSC edge-list expansion, ``pallas`` — the fused MXU
+``kernels/ic_frontier.py`` step on TPU, its bitwise-equivalent jnp
+oracle elsewhere via ``kernels/ops.py`` dispatch), plus the LT walk row.
+Every backend samples the same distribution per model (dense and pallas
+are coin-for-coin identical), so the wall-clock spread is pure execution
+strategy.
+
+Emits machine-readable ``BENCH_4.json`` rows
+``{model, backend, n, theta, wall_s}`` next to a human table.
+
+    PYTHONPATH=src python -m benchmarks.sampler_matrix [--tiny] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks._util import block, print_table
+from repro.configs.imm_snap import (
+    SAMPLER_MATRIX_BACKENDS, SAMPLER_MATRIX_CELLS,
+)
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.core.sampler import sampler_matrix
+from repro.graphs import rmat_graph
+
+
+def _cells():
+    """Every registered matrix cell whose backend is in the bench grid
+    (plus walk rows) — a model added via `register_model` before this
+    runs shows up in BENCH_4 automatically."""
+    for model, backend in sampler_matrix():
+        if backend in SAMPLER_MATRIX_BACKENDS or backend == "walk":
+            yield model, backend
+
+
+def run(n=1024, m=8192, theta=4096, batch=256, seed=0, log=print):
+    # default U(0,1) edge probabilities (the paper's IC setup): every
+    # model row then times a *distinct* workload — with weighted_ic="wc"
+    # the IC rows would duplicate the WC rows coin-for-coin
+    g = rmat_graph(n, m, seed=seed)
+    rows, bench = [], []
+    for model, backend in _cells():
+        cfg = IMMConfig(model=model, backend=backend, batch=batch,
+                        max_theta=max(theta, 1 << 20), seed=seed)
+        # compile warmup on a throwaway engine (module-level jit caches
+        # are shared), so the timed run samples all theta rows from zero
+        warm = InfluenceEngine(g, cfg)
+        warm.extend(batch)
+        block(warm.store.counter)
+        engine = InfluenceEngine(g, cfg)
+        t0 = time.perf_counter()
+        engine.extend(theta)
+        block(engine.store.counter)
+        wall = time.perf_counter() - t0
+        mean_size = float(np.asarray(engine.store.sizes)
+                          [:engine.store.count].mean())
+        bench.append({"model": model, "backend": backend, "n": n,
+                      "theta": theta, "wall_s": round(wall, 4)})
+        rows.append([model, backend, n, theta, f"{wall:.3f}",
+                     f"mean |RRR| {mean_size:.1f}"])
+        log(f"[sampler-matrix] {engine.sampler_name}: {wall:.3f}s "
+            f"to theta={theta}")
+    print_table(
+        f"Sampler matrix (n={n}, m={m}, theta={theta}, batch={batch})",
+        ["model", "backend", "n", "theta", "wall_s", "notes"], rows)
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: the 'tiny' cell from "
+                         "configs/imm_snap.SAMPLER_MATRIX_CELLS")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--m", type=int, default=None)
+    ap.add_argument("--theta", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_4.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+    cell = dict(SAMPLER_MATRIX_CELLS["tiny" if args.tiny else "default"])
+    for k in ("n", "m", "theta", "batch"):
+        if getattr(args, k) is not None:
+            cell[k] = getattr(args, k)
+    bench = run(**cell)
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"wrote {args.out} ({len(bench)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,15 +14,17 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"
 
 # mesh code paths under a forced 4-device host mesh (paper C1 layouts):
-# ShardedStore, sharded selection, the engine equivalence tests, and the
-# streaming subsystem (per-shard invalidation/eviction/compaction and the
-# refresh-equivalence cells) all run with the theta axis physically split
-# 4 ways
+# ShardedStore, sharded selection, the engine equivalence tests, the
+# streaming subsystem (per-shard invalidation/eviction/compaction,
+# refresh-equivalence and snapshot-provenance cells), and the sampler
+# model x backend x stable matrix (legacy goldens + per-cell mesh
+# equivalence) all run with the theta axis physically split 4 ways
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -q -m "not slow" \
         tests/test_sharded_store.py \
         tests/test_stream.py \
+        tests/test_sampler_matrix.py \
         "tests/test_engine_store.py::test_sharded_strategy_through_engine_matches_local" \
         "tests/test_sharded_and_integration.py::test_select_dense_sharded_equals_local"
 
@@ -32,6 +34,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.stream_runtime --tiny \
         --out "${TMPDIR:-/tmp}/BENCH_3.json"
+
+# sampler-matrix benchmark smoke: every coin model across the dense /
+# sparse / pallas backends (plus the LT walk) through the engine —
+# exercises the Pallas ic_frontier dispatch end-to-end off-TPU
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.sampler_matrix --tiny \
+        --out "${TMPDIR:-/tmp}/BENCH_4.json"
 
 # docs health: files referenced from README/docs must exist
 python scripts/check_docs.py

@@ -63,6 +63,11 @@ class IMMExperiment:
     directed: bool
     cfg_ic: IMMConfig
     cfg_lt: IMMConfig
+    # the two scenario models the sampler decomposition shipped: weighted
+    # cascade (1/indeg edge probs) and generalized triggering (the LT
+    # weights as independent marginals) — both run every coin backend
+    cfg_wc: IMMConfig
+    cfg_gt: IMMConfig
     bench_scale: float        # CPU benchmark shrink factor
     campaign_ks: tuple = CAMPAIGN_KS
 
@@ -73,6 +78,8 @@ def _mk(graph: str, bench_scale: float) -> IMMExperiment:
         graph=graph, n=n, m=m, directed=directed,
         cfg_ic=IMMConfig(k=50, eps=0.5, model="IC"),
         cfg_lt=IMMConfig(k=50, eps=0.5, model="LT"),
+        cfg_wc=IMMConfig(k=50, eps=0.5, model="WC"),
+        cfg_gt=IMMConfig(k=50, eps=0.5, model="GT"),
         bench_scale=bench_scale,
     )
 
@@ -104,6 +111,18 @@ IMM_DRYRUN_CELLS = {
         "n": 875_713, "m": 5_105_039, "batch": 4_096, "bfs_steps": 16,
         "model": "IC", "note": "sparse frontier sampling, web-Google scale"},
 }
+
+
+# Sampler-matrix benchmark cells (benchmarks/sampler_matrix.py -> BENCH_4):
+# the model x backend grid timed on one synthetic graph per size class.
+# ``backends`` lists the traversal backends each coin model sweeps (the
+# walk-family LT row runs the walk backend only); ``tiny`` is the CI
+# smoke shape.
+SAMPLER_MATRIX_CELLS = {
+    "tiny":    {"n": 192, "m": 1024, "theta": 256, "batch": 128},
+    "default": {"n": 1024, "m": 8192, "theta": 4096, "batch": 256},
+}
+SAMPLER_MATRIX_BACKENDS = ("dense", "sparse", "pallas")
 
 
 # Multi-query serving cells: one resident engine store answering batched

@@ -2,9 +2,14 @@
 
 The paper's primary contribution, as a composable JAX module:
   * martingale.py  — Tang'15 sampling bounds (theta estimation, OPT LB)
-  * sampler.py     — batched RRR-set generation (IC dense/sparse, LT walk)
-                     with fused in-place counter accumulation (paper C3)
-                     plus the sampler registry the engine resolves by name
+  * sampler.py     — batched RRR-set generation composed from orthogonal
+                     axes: `DiffusionModel` (IC / WC / GT coin models, LT
+                     walk) x `TraversalBackend` (dense log-semiring,
+                     sparse edge-list, Pallas MXU kernel, walk) x a
+                     delta-stability flag, with fused in-place counter
+                     accumulation (paper C3) and the sampler registry
+                     (`make_sampler` compositions + legacy aliases) the
+                     engine resolves by name
   * selection.py   — greedy max-coverage: EfficientIMM RRR-partitioned
                      rebuild (C1+C5), Ripples-style decremental baseline,
                      and the `SelectionStrategy` registry
@@ -21,6 +26,19 @@ from repro.core.sampler import (
     sample_ic_dense,
     sample_ic_sparse,
     sample_lt,
+    CoinModel,
+    WalkModel,
+    TraversalBackend,
+    make_sampler,
+    sampler_matrix,
+    composed_name,
+    stable_variant,
+    register_model,
+    get_model,
+    registered_models,
+    register_backend,
+    get_backend,
+    registered_backends,
     register_sampler,
     get_sampler,
     registered_samplers,
@@ -49,6 +67,10 @@ from repro.core.imm import imm
 __all__ = [
     "IMMBounds", "compute_bounds", "theta_from_lb",
     "sample_ic_dense", "sample_ic_sparse", "sample_lt",
+    "CoinModel", "WalkModel", "TraversalBackend",
+    "make_sampler", "sampler_matrix", "composed_name", "stable_variant",
+    "register_model", "get_model", "registered_models",
+    "register_backend", "get_backend", "registered_backends",
     "register_sampler", "get_sampler", "registered_samplers",
     "default_sampler_name",
     "greedy_select", "select_dense", "select_sparse", "select_dense_sharded",

@@ -13,8 +13,10 @@ splits them apart around a stateful engine over a persistent `RRRStore`:
 
 Pieces:
   * sampling is resolved through the sampler registry
-    (``repro.core.sampler.register_sampler``: "IC-dense", "IC-sparse",
-    "LT", or any user-registered name);
+    (``repro.core.sampler``): a ``DiffusionModel`` x ``TraversalBackend``
+    composition — "IC/dense", "WC/sparse", "GT/pallas+stable",
+    "LT/walk", ... via ``make_sampler`` — or any user-registered name
+    (the legacy monolithic spellings still resolve, deprecated);
   * selection goes through the `SelectionStrategy` registry
     (``repro.core.selection.get_selection``: rebuild/decrement x
     dense/sparse/sharded) instead of if/elif dispatch;
@@ -56,7 +58,20 @@ class IMMConfig:
     k: int = 50
     eps: float = 0.5
     ell: float = 1.0
-    model: str = "IC"                 # "IC" | "LT"
+    # diffusion model axis: "IC" | "LT" | "WC" | "GT" | any name passed to
+    # repro.core.sampler.register_model
+    model: str = "IC"
+    # traversal backend axis: None = auto (dense below dense_sampler_max_n,
+    # sparse above it; walk for walk-family models) | "dense" | "sparse" |
+    # "pallas" (the fused MXU ic_frontier kernel; jnp oracle off-TPU) |
+    # "walk" | any name passed to register_backend
+    backend: Optional[str] = None
+    # stability axis: identity-keyed counter-mode coins + positions
+    # row-subset resampling (the delta-stable form streaming requires)
+    stable: bool = False
+    # force the Pallas ic_frontier kernel through the interpreter (CPU
+    # kernel validation; default off-TPU dispatch uses the jnp oracle)
+    pallas_interpret: bool = False
     batch: int = 256                  # RRR sets per sampling call
     max_theta: int = 1 << 16          # safety cap (config-controlled)
     dense_sampler_max_n: int = 4096   # use the MXU log-semiring sampler below
@@ -72,7 +87,9 @@ class IMMConfig:
     # "auto" resolves to "sharded" when the engine has a mesh, "bitmap"
     # otherwise; "sharded" demands a mesh
     store: str = "auto"   # "auto" | "bitmap" | "indices" | "sharded"
-    sampler: Optional[str] = None     # registry name; None = resolve by model/n
+    # full sampler-name override ("WC/pallas+stable", a legacy alias, or a
+    # user registration); None = compose from (model, backend, stable)
+    sampler: Optional[str] = None
     seed: int = 0
 
 
@@ -311,9 +328,12 @@ class InfluenceEngine:
 
     # ------------------------------------------------------- checkpointing
 
-    def snapshot(self, directory: str, *, tag: str = "engine") -> str:
-        """Persist store + PRNG state atomically (checkpoint.store format)."""
-        tree = {
+    def snapshot_tree(self) -> dict:
+        """The engine's persistent state as a host pytree (store + PRNG
+        key + meta) — `snapshot` saves exactly this; wrappers that keep
+        state of their own (`repro.stream.StreamEngine`) embed it in a
+        larger tree so one file restores the whole stack."""
+        return {
             "store": self.store.state(),
             "key": np.asarray(self.key),
             "meta": {
@@ -322,13 +342,14 @@ class InfluenceEngine:
                 "sampler": np.asarray(self.sampler_name),
             },
         }
-        return ckpt.save_named(directory, tag, tree)
 
-    def restore(self, directory: str, *, tag: str = "engine") -> bool:
-        """Resume from `snapshot`; returns False when none exists."""
-        tree = ckpt.load_named(directory, tag)
-        if tree is None:
-            return False
+    def snapshot(self, directory: str, *, tag: str = "engine") -> str:
+        """Persist store + PRNG state atomically (checkpoint.store format)."""
+        return ckpt.save_named(directory, tag, self.snapshot_tree())
+
+    def restore_tree(self, tree: dict) -> None:
+        """Adopt a `snapshot_tree` (validates n/model, rebuilds the store
+        elastically across layouts, resumes the PRNG stream)."""
         meta = tree["meta"]
         if int(meta["n"]) != self.graph.n:
             raise ValueError(
@@ -346,6 +367,13 @@ class InfluenceEngine:
             tree["store"], mesh=mesh, theta_axes=self.theta_axes)
         self.key = jnp.asarray(tree["key"])
         self._select_cache.clear()
+
+    def restore(self, directory: str, *, tag: str = "engine") -> bool:
+        """Resume from `snapshot`; returns False when none exists."""
+        tree = ckpt.load_named(directory, tag)
+        if tree is None:
+            return False
+        self.restore_tree(tree)
         return True
 
     # -------------------------------------------------- Algorithm 1 driver

@@ -8,8 +8,10 @@ That machinery now lives in the stateful engine:
     ``extend``/``select``/``influence`` multi-query serving and
     ``snapshot``/``restore`` resumability;
   * ``repro.core.store``   — preallocated bitmap/index RRR arenas (C3/C4);
-  * ``repro.core.sampler`` — the sampler registry ("IC-dense", "IC-sparse",
-    "LT", ...);
+  * ``repro.core.sampler`` — the DiffusionModel x TraversalBackend
+    sampler matrix ("IC/dense", "WC/sparse", "GT/pallas", "LT/walk",
+    ... composed by ``make_sampler``; legacy monolithic names resolve
+    as deprecated aliases);
   * ``repro.core.selection`` — the `SelectionStrategy` registry
     (rebuild/decrement x dense/sparse/sharded, C5/C1).
 

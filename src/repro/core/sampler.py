@@ -1,147 +1,207 @@
-"""Batched RRR-set samplers (Generate_RRRsets, paper Alg. 3).
+"""Batched RRR-set samplers (Generate_RRRsets, paper Alg. 3) — composed
+from two orthogonal axes instead of a monolithic per-name fork.
 
-All samplers return the batch as **visited bitmaps** ``(B, n) uint8`` plus the
-fused in-place counter contribution (paper C3: counting is folded into
-generation, no re-gather pass).  The adaptive layer converts to index lists
-when sets are sparse (paper C4).
+A *sampler* answers "draw a batch of reverse-reachable sets"; historically
+the registry hard-forked every answer six ways (``IC-dense``,
+``IC-sparse``, ``LT`` and their ``-stable`` twins), so each new diffusion
+model or execution scheme multiplied the fork count.  This module factors
+the fork matrix into the axes that actually vary (the EFFICIENTIMM
+observation — and the fused-IM-kernel result of Gökturk & Kaya,
+arXiv:2008.03095 — that activation semantics generalize across cascade
+models once they are separated from the traversal loop):
 
-Every sampler accepts an optional ``placement`` (a
-``jax.sharding.NamedSharding`` for the ``(B, n)`` visited output — a
-`ShardedStore` hands out its ``batch_sharding``).  When given, the
-constraint is applied to the *initial* frontier/visited state inside jit,
-so GSPMD partitions the whole generation loop over the batch axis and each
-device samples the rows its arena shard will store (paper C1: sampling
-writes device-local state).  PRNG values are position-keyed (threefry), so
-placement changes layout only — the sampled sets are bitwise identical on
-any mesh, which is what keeps sharded runs seed-for-seed equal to
-single-device ones.
+  * **DiffusionModel** — *what* the diffusion semantics are.  Two
+    families:
 
-Three implementations:
-  * ``sample_ic_dense``  — probabilistic reverse BFS as a *log-semiring
-    mat-vec* on the dense IC matrix: P(u activated by frontier F) =
-    1 - prod_{v in F} (1 - p_{u->v-reversed}); exact in distribution for
-    reachability (see DESIGN §2).  TPU-native: the expansion runs on the MXU
-    (Pallas kernel: kernels/ic_frontier.py).
-  * ``sample_ic_sparse`` — per-edge Bernoulli coins + segment_max frontier
-    expansion over the CSC edge list; exact live-edge semantics, scales to
-    graphs where the dense matrix does not fit.
-  * ``sample_lt``        — the LT random walk: each step picks at most one
-    in-neighbor with probability proportional to its LT weight (stops with
-    prob 1 - sum w), terminating on revisits. Binary search over the
-    per-dst cumulative weights (CSC layout).
+      - `CoinModel` ("coins"): edge-factored semantics — each in-edge
+        ``u -> v`` is consulted at most once (when ``v`` first enters the
+        reverse frontier) and fires an independent Bernoulli coin with a
+        model-supplied marginal.  This is Kempe et al.'s triggering model
+        restricted to independent inclusion; built-ins: ``IC`` (the
+        graph's per-edge probabilities), ``WC`` (weighted cascade,
+        ``1/indeg(dst)``), and ``GT`` (generalized triggering with the
+        graph's LT triggering weights as independent marginals).
+      - `WalkModel` ("walk"): pick-at-most-one semantics — the vertex the
+        walk sits at selects a single in-neighbor by weight (or none).
+        Built-in: ``LT``.
 
-Each has a ``*-stable`` twin ("IC-dense-stable", "IC-sparse-stable",
-"LT-stable") whose randomness is keyed by *identity* (row position,
-edge/vertex id) instead of array position — delta-stable and row-
-subsettable, the form streaming refresh requires (see the delta-stable
-section below).
+  * **TraversalBackend** — *how* the traversal executes:
+
+      - ``dense``  — probabilistic reverse BFS as a *log-semiring
+        mat-vec* on the dense activation matrix: P(u activated by
+        frontier F) = 1 - prod_{v in F} (1 - p_{u->v-reversed}); exact in
+        distribution for reachability (DESIGN §2). MXU-friendly.
+      - ``sparse`` — per-edge Bernoulli coins + scatter-max frontier
+        expansion over the CSC edge list; exact live-edge semantics,
+        scales to graphs where the dense matrix does not fit.
+      - ``pallas`` — the dense formulation with the frontier step
+        executed by the fused Pallas MXU kernel
+        ``kernels/ic_frontier.py`` (matmul + Bernoulli sampling + visited
+        mask in one VMEM-resident pass).  Dispatch goes through
+        ``repro.kernels.ops.ic_frontier_step``: the kernel on TPU, the
+        jnp oracle elsewhere — numerically the *same math* as ``dense``,
+        so results are bitwise identical off-TPU and on any
+        single-k-tile problem.
+      - ``walk``   — the random-walk loop (binary search over per-dst
+        cumulative weights, CSC layout) for "walk"-family models.
+
+  * **stable** — an orthogonal *flag*, not a source fork: positional
+    coins (``uniform(key, shape)`` — fast, but any shape change renumbers
+    every coin) vs identity-keyed counter-mode coins (hash of (step key,
+    row position, edge/vertex id) — delta-stable and row-subsettable via
+    ``positions``, the form streaming refresh requires).
+
+``make_sampler(model, backend, stable=...)`` composes the axes into a
+registry-compatible factory; the full matrix is pre-registered under
+canonical ``"<model>/<backend>[+stable]"`` names (e.g. ``"WC/sparse"``,
+``"IC/pallas+stable"``).  The historical monolithic names resolve as
+deprecated aliases that are **seed-for-seed identical** to the
+pre-decomposition samplers (goldens pinned in
+tests/test_sampler_matrix.py).
+
+Every bound sampler returns the batch as **visited bitmaps** ``(B, n)
+uint8`` plus the fused in-place counter contribution (paper C3) and the
+batch roots.  Factories accept an optional ``placement`` (a
+``jax.sharding.NamedSharding`` for the ``(B, n)`` output — a
+`ShardedStore` hands out its ``batch_sharding``): the constraint is
+applied to the initial frontier state inside jit, so GSPMD partitions the
+whole generation loop over the batch axis and each device samples the
+rows its arena shard will store (paper C1).  PRNG values are position- or
+identity-keyed, so placement changes layout only — sampled sets are
+bitwise identical on any mesh.
 """
 from __future__ import annotations
 
+import dataclasses
 import inspect
+import warnings
 from functools import partial
+from typing import Callable
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.csr import Graph, dense_ic_matrix
+from repro.core.store import next_pow2
+from repro.graphs.csr import Graph, dense_ic_matrix, edge_arrays, wc_edge_probs
+from repro.kernels import ops as kops
 
 _LOGQ_CLAMP = -30.0  # exp(-30) ~ 1e-13: treat p=1 edges as prob 1-1e-13
 
 
-def make_logq(graph: Graph) -> jnp.ndarray:
-    """Dense (n, n) log(1-p) matrix in *reverse-traversal* orientation:
-    logq[v, u] = log(1 - p_{u->v}) so that ``frontier @ logq`` accumulates
-    over frontier nodes v the log-survival of u w.r.t. its out-edges into v.
+# ---------------------------------------------------------------- models ----
+#
+# A DiffusionModel owns *semantics only*: how an edge (or a visited
+# vertex's in-segment) turns randomness into activation.  It supplies the
+# per-edge tables a backend consumes; it never owns a traversal loop, so
+# adding a model is ~5 lines (see docs/samplers.md) and every compatible
+# backend — including the Pallas kernel — works with it immediately.
+
+@dataclasses.dataclass(frozen=True)
+class CoinModel:
+    """Edge-factored ("coins" family) diffusion semantics.
+
+    ``edge_probs(graph) -> (m,) float32`` returns the CSC-order marginal
+    activation probability of each in-edge.  Each edge is consulted at
+    most once per RRR traversal — when its destination first enters the
+    reverse frontier — and fires independently, which is exactly the
+    triggering model with independent inclusion (IC is the instance whose
+    marginals are the graph's edge probabilities).
     """
-    P = dense_ic_matrix(graph)  # P[u, v] = p(u -> v)
+    name: str
+    edge_probs: Callable[[Graph], jnp.ndarray]
+    family: str = dataclasses.field(default="coins", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkModel:
+    """Pick-at-most-one ("walk" family) diffusion semantics.
+
+    ``walk_tables(graph) -> (dst_offsets, in_src, cum, total)`` returns
+    the CSC segment offsets, in-neighbor ids, within-segment cumulative
+    pick weights, and per-vertex total pick probability: one uniform draw
+    ``r`` selects the in-neighbor whose cumulative interval contains it
+    (or none when ``r >= total``), the Tang'15 LT RRR random walk.
+    """
+    name: str
+    walk_tables: Callable[[Graph], tuple]
+    family: str = dataclasses.field(default="walk", init=False)
+
+
+def _wc_probs(graph: Graph) -> jnp.ndarray:
+    """Weighted cascade: p(u -> v) = 1 / indeg(v) (CSC edge order; the
+    formula lives in `repro.graphs.csr.wc_edge_probs`)."""
+    return jnp.asarray(wc_edge_probs(graph.edge_dst, graph.n), jnp.float32)
+
+
+def _gt_probs(graph: Graph) -> jnp.ndarray:
+    """Generalized triggering: the graph's LT triggering weights as
+    *independent* per-edge marginals (CSC order).
+
+    LT and GT share the same per-edge marginals but sit at opposite
+    correlation extremes of the triggering framework: LT's triggering set
+    includes at most one in-neighbor (mutually exclusive picks), GT's
+    includes each in-neighbor independently.  Per-dst LT weights sum to
+    <= 1, so every marginal is a valid probability.
+    """
+    _, _, _, w = edge_arrays(graph)
+    return jnp.asarray(np.clip(w, 0.0, 1.0), jnp.float32)
+
+
+IC = CoinModel("IC", lambda g: g.in_prob)
+WC = CoinModel("WC", _wc_probs)
+GT = CoinModel("GT", _gt_probs)
+LT = WalkModel("LT", lambda g: (g.dst_offsets, g.in_src, g.in_lt_cum,
+                                g.in_lt_total))
+
+_MODEL_REGISTRY: dict = {}
+
+
+def register_model(model) -> None:
+    """Register a `CoinModel`/`WalkModel` under its name (overwrites
+    silently so experiments can shadow the built-ins).  Registered coin
+    models compose with every frontier backend; walk models with the
+    walk backend."""
+    _MODEL_REGISTRY[model.name] = model
+
+
+def get_model(name: str):
+    try:
+        return _MODEL_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown diffusion model {name!r}; registered: "
+            f"{sorted(_MODEL_REGISTRY)}")
+
+
+def registered_models():
+    return sorted(_MODEL_REGISTRY)
+
+
+for _m in (IC, WC, GT, LT):
+    register_model(_m)
+
+
+def logq_from_probs(graph: Graph, probs) -> jnp.ndarray:
+    """Dense (n, n) log(1-p) matrix in *reverse-traversal* orientation
+    for any per-edge marginal vector: logq[v, u] = log(1 - p_{u->v}) so
+    that ``frontier @ logq`` accumulates over frontier nodes v the
+    log-survival of u w.r.t. its out-edges into v."""
+    P = dense_ic_matrix(graph, probs)
     return jnp.maximum(jnp.log1p(-P.T), _LOGQ_CLAMP)
 
 
-@partial(jax.jit, static_argnames=("batch", "max_steps", "placement"))
-def sample_ic_dense(key, logq, *, batch: int, max_steps: int = 0,
-                    placement=None):
-    """Returns (visited (B,n) uint8, counter (n,) int32, roots (B,)).
-
-    ``placement`` (optional ``NamedSharding`` over ``(B, n)``): constrains
-    the visited state so the frontier mat-vec loop is partitioned over the
-    batch axis and the output lands shard-local to the consuming store.
-    """
-    n = logq.shape[0]
-    max_steps = max_steps or n
-    kroot, kstep = jax.random.split(key)
-    roots = jax.random.randint(kroot, (batch,), 0, n)
-    visited0 = jax.nn.one_hot(roots, n, dtype=jnp.bool_)
-    if placement is not None:
-        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
-    frontier0 = visited0
-
-    def cond(state):
-        step, frontier, visited, _ = state
-        return jnp.logical_and(step < max_steps, frontier.any())
-
-    def body(state):
-        step, frontier, visited, k = state
-        k, sub = jax.random.split(k)
-        acc = frontier.astype(jnp.float32) @ logq          # (B, n) log-survival
-        p_act = -jnp.expm1(acc)                            # 1 - exp(acc)
-        coin = jax.random.uniform(sub, p_act.shape)
-        new = jnp.logical_and(coin < p_act, ~visited)
-        return step + 1, new, jnp.logical_or(visited, new), k
-
-    _, _, visited, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), frontier0, visited0, kstep)
-    )
-    counter = visited.sum(axis=0, dtype=jnp.int32)          # fused count (C3)
-    return visited.astype(jnp.uint8), counter, roots
+def make_logq(graph: Graph) -> jnp.ndarray:
+    """`logq_from_probs` for the IC model (the historical entry point)."""
+    return logq_from_probs(graph, graph.in_prob)
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps",
-                                   "placement"))
-def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
-                     batch: int, max_steps: int = 0, placement=None):
-    """Edge-list frontier expansion with per-edge coins.
-
-    edge_* are CSC-ordered (sorted by dst) but any order works.
-    Returns (visited, counter, roots).  ``placement`` as in
-    `sample_ic_dense`: batch-axis partitioning of the expansion loop.
-    """
-    m = edge_src.shape[0]
-    max_steps = max_steps or n_nodes
-    kroot, kstep = jax.random.split(key)
-    roots = jax.random.randint(kroot, (batch,), 0, n_nodes)
-    visited0 = jax.nn.one_hot(roots, n_nodes, dtype=jnp.bool_)
-    if placement is not None:
-        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
-
-    def cond(state):
-        step, frontier, visited, _ = state
-        return jnp.logical_and(step < max_steps, frontier.any())
-
-    def body(state):
-        step, frontier, visited, k = state
-        k, sub = jax.random.split(k)
-        coin = jax.random.uniform(sub, (batch, m)) < edge_prob[None, :]
-        # reverse traversal: edge u->v is usable when v is in the frontier
-        live = frontier[:, edge_dst] & coin & ~visited[:, edge_src]
-        # scatter-or into src — the segment_max counter-update pattern (C1)
-        new = jnp.zeros_like(visited).at[:, edge_src].max(live)
-        new = jnp.logical_and(new, ~visited)
-        return step + 1, new, jnp.logical_or(visited, new), k
-
-    _, _, visited, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), visited0, visited0, kstep)
-    )
-    counter = visited.sum(axis=0, dtype=jnp.int32)
-    return visited.astype(jnp.uint8), counter, roots
-
-
-# -------------------------------------------------- delta-stable samplers ----
+# ------------------------------------------------ the stable-coin machinery ----
 #
-# The positional samplers above draw their randomness by *array position*
-# (``uniform(key, (batch, m))``): fast, but any change to the edge count
+# The positional loops draw their randomness by *array position*
+# (``uniform(key, shape)``): fast, but any change to the edge count
 # renumbers every coin, and a batch can only ever be re-generated whole.
-# The ``*-stable`` samplers below re-key every coin by **identity** — a
+# With ``stable=True`` every coin is re-keyed by **identity** — a
 # stateless counter-mode hash of (step key, row position, edge/vertex id)
 # — which buys the two properties streaming (``repro.stream``) needs:
 #
@@ -155,7 +215,7 @@ def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
 #     stale rows, not to the batches they happen to live in.
 #
 # Distribution-wise each coin is still an independent-in-practice uniform;
-# only the key-stream mechanism differs, so the stable samplers are not
+# only the key-stream mechanism differs, so the stable twins are not
 # coin-for-coin identical to their positional twins (they are separate
 # registry entries and leave the historical ``imm()`` streams untouched).
 
@@ -175,11 +235,28 @@ def _u01(bits):
 _GOLD = 0x9E3779B9   # 2**32 / phi — the classic Weyl increment
 
 
-def _stable_setup(key, batch, n_nodes, positions, placement):
-    """Shared preamble: full-batch roots (positional randint, gathered at
-    ``positions``), initial visited state, per-row hash lanes, step key."""
+def _setup(key, batch, n_nodes, positions, placement, stable):
+    """Shared traversal preamble: the (kroot, kstep) split, full-batch
+    roots, initial visited state, and (stable only) per-row hash lanes.
+
+    The PRNG op sequence is identical for both stability modes — one
+    ``split`` plus one ``randint`` — so the root stream of a composed
+    sampler matches the historical monolithic samplers bitwise.
+    ``positions`` (stable only) gathers a row subset of the full batch.
+    """
     kroot, kstep = jax.random.split(key)
     roots_full = jax.random.randint(kroot, (batch,), 0, n_nodes)
+    if not stable:
+        if positions is not None:
+            raise ValueError(
+                "positions-subset resampling needs stable=True "
+                "(identity-keyed coins); positional samplers can only "
+                "re-generate whole batches")
+        roots = roots_full
+        visited0 = jax.nn.one_hot(roots, n_nodes, dtype=jnp.bool_)
+        if placement is not None:
+            visited0 = jax.lax.with_sharding_constraint(visited0, placement)
+        return kstep, roots, visited0, None
     pos = (jnp.arange(batch, dtype=jnp.int32) if positions is None
            else jnp.asarray(positions, jnp.int32))
     roots = roots_full[pos]
@@ -190,21 +267,31 @@ def _stable_setup(key, batch, n_nodes, positions, placement):
     return kstep, roots, visited0, bb
 
 
-@partial(jax.jit, static_argnames=("batch", "max_steps", "placement"))
-def sample_ic_dense_stable(key, logq, positions=None, *, batch: int,
-                           max_steps: int = 0, placement=None):
-    """`sample_ic_dense` with identity-keyed coins: the coin for (row b,
-    vertex u, step t) hashes (step key, b, u), so it survives edge
-    mutations (the dense matrix keeps its shape; only ``logq`` entries
-    move) and row subsets re-generate exactly.  Returns
-    ``(visited (K, n) uint8, counter (n,) int32, roots (K,))`` where
-    ``K = len(positions)`` (the full batch when ``positions`` is None).
+# --------------------------------------------------------- traversal loops ----
+#
+# One loop per backend family, written once.  ``stable`` selects the coin
+# source; the PRNG split chain (one ``split`` per step) is shared, so the
+# positional path reproduces the historical samplers bitwise and the
+# stable path reproduces the historical ``-stable`` twins bitwise.
+
+@partial(jax.jit, static_argnames=("batch", "max_steps", "stable", "kernel",
+                                   "interpret", "placement"))
+def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
+                stable: bool = False, kernel: bool = False,
+                interpret: bool = False, placement=None):
+    """Dense log-semiring frontier expansion (the ``dense`` and
+    ``pallas`` backends; ``kernel=True`` routes the step through
+    ``kernels.ops.ic_frontier_step`` — same math, fused on the MXU).
+
+    Returns ``(visited (K, n) uint8, counter (n,) int32, roots (K,))``
+    where ``K = len(positions)`` (the full batch when ``positions`` is
+    None; positional mode requires ``positions is None``).
     """
     n = logq.shape[0]
     max_steps = max_steps or n
-    kstep, roots, visited0, bb = _stable_setup(
-        key, batch, n, positions, placement)
-    uids = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    kstep, roots, visited0, bb = _setup(
+        key, batch, n, positions, placement, stable)
+    uids = jnp.arange(n, dtype=jnp.uint32)[None, :] if stable else None
 
     def cond(state):
         step, frontier, visited, _ = state
@@ -213,37 +300,48 @@ def sample_ic_dense_stable(key, logq, positions=None, *, batch: int,
     def body(state):
         step, frontier, visited, k = state
         k, sub = jax.random.split(k)
-        kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
-        acc = frontier.astype(jnp.float32) @ logq
-        p_act = -jnp.expm1(acc)
-        coin = _u01(_mix32(_mix32(uids ^ kd[0]) ^ bb ^ kd[1]))
-        new = jnp.logical_and(coin < p_act, ~visited)
+        if stable:
+            kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
+            coin = _u01(_mix32(_mix32(uids ^ kd[0]) ^ bb ^ kd[1]))
+        else:
+            coin = jax.random.uniform(sub, frontier.shape)
+        if kernel:
+            new = kops.ic_frontier_step(
+                frontier, visited, logq, coin,
+                interpret=interpret).astype(jnp.bool_)
+        else:
+            acc = frontier.astype(jnp.float32) @ logq   # (K, n) log-survival
+            p_act = -jnp.expm1(acc)                     # 1 - exp(acc)
+            new = jnp.logical_and(coin < p_act, ~visited)
         return step + 1, new, jnp.logical_or(visited, new), k
 
     _, _, visited, _ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), visited0, visited0, kstep)
     )
-    counter = visited.sum(axis=0, dtype=jnp.int32)
+    counter = visited.sum(axis=0, dtype=jnp.int32)      # fused count (C3)
     return visited.astype(jnp.uint8), counter, roots
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps",
+@partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps", "stable",
                                    "placement"))
-def sample_ic_sparse_stable(key, edge_src, edge_dst, edge_prob,
-                            positions=None, *, n_nodes: int, batch: int,
-                            max_steps: int = 0, placement=None):
-    """`sample_ic_sparse` with **edge-identity-keyed** coins: the coin for
-    (row b, edge u->v, step t) hashes (step key, b, u * n + v) — a
-    function of the edge's identity, not its position in the edge list —
-    so inserts/deletes renumber nothing and ``positions`` re-generates
-    row subsets exactly (see the section comment above)."""
+def _sparse_loop(key, edge_src, edge_dst, edge_prob, positions=None, *,
+                 n_nodes: int, batch: int, max_steps: int = 0,
+                 stable: bool = False, placement=None):
+    """CSC edge-list frontier expansion (the ``sparse`` backend).
+
+    An edge ``u -> v`` is consulted when ``v`` is in the reverse
+    frontier (each vertex fronts at most once, so each edge gets exactly
+    one coin — independent-inclusion triggering, any `CoinModel`).
+    Stable coins key on the edge's *identity* ``u * n + v`` rather than
+    its list position, so inserts/deletes renumber nothing; padded
+    never-firing edges (see `_pad_edges_pow2`) are likewise invisible.
+    """
+    m = edge_src.shape[0]
     max_steps = max_steps or n_nodes
-    kstep, roots, visited0, bb = _stable_setup(
-        key, batch, n_nodes, positions, placement)
-    # stable per-edge identity: unique for n < 2**16, a well-mixed hash
-    # input beyond that (uniqueness is a quality nicety, not correctness)
-    uid = (edge_src.astype(jnp.uint32) * jnp.uint32(n_nodes)
-           + edge_dst.astype(jnp.uint32))[None, :]
+    kstep, roots, visited0, bb = _setup(
+        key, batch, n_nodes, positions, placement, stable)
+    uid = ((edge_src.astype(jnp.uint32) * jnp.uint32(n_nodes)
+            + edge_dst.astype(jnp.uint32))[None, :] if stable else None)
 
     def cond(state):
         step, frontier, visited, _ = state
@@ -252,10 +350,16 @@ def sample_ic_sparse_stable(key, edge_src, edge_dst, edge_prob,
     def body(state):
         step, frontier, visited, k = state
         k, sub = jax.random.split(k)
-        kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
-        coin = _u01(_mix32(_mix32(uid ^ kd[0]) ^ bb ^ kd[1]))
-        hit = coin < edge_prob[None, :]
+        if stable:
+            kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
+            coin = _u01(_mix32(_mix32(uid ^ kd[0]) ^ bb ^ kd[1]))
+            hit = coin < edge_prob[None, :]
+        else:
+            hit = jax.random.uniform(
+                sub, (batch, m)) < edge_prob[None, :]
+        # reverse traversal: edge u->v is usable when v is in the frontier
         live = frontier[:, edge_dst] & hit & ~visited[:, edge_src]
+        # scatter-or into src — the segment_max counter-update pattern (C1)
         new = jnp.zeros_like(visited).at[:, edge_src].max(live)
         new = jnp.logical_and(new, ~visited)
         return step + 1, new, jnp.logical_or(visited, new), k
@@ -268,29 +372,33 @@ def sample_ic_sparse_stable(key, edge_src, edge_dst, edge_prob,
 
 
 @partial(jax.jit, static_argnames=("batch", "max_steps", "max_indeg_log2",
-                                   "placement"))
-def sample_lt_stable(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
-                     positions=None, *, batch: int, max_steps: int = 0,
-                     max_indeg_log2: int = 32, placement=None):
-    """`sample_lt` with identity-keyed step draws: the walk draw for
-    (row b, step t) hashes (step key, b), so a row's walk is a function
-    of its own identity plus the per-dst LT segments it visits — stable
-    across deltas that avoid those dsts, and subsettable via
-    ``positions``."""
+                                   "stable", "placement"))
+def _walk_loop(key, dst_offsets, in_src, in_cum, in_total, positions=None, *,
+               batch: int, max_steps: int = 0, max_indeg_log2: int = 32,
+               stable: bool = False, placement=None):
+    """Pick-at-most-one random walk (the ``walk`` backend, `WalkModel`).
+
+    Each step the walk at ``cur`` draws one uniform ``r``: ``r >=
+    total(cur)`` stops, otherwise binary search over the per-dst
+    cumulative weights selects the in-neighbor; revisits terminate.
+    Stable draws key on the row identity so a row's walk is a function
+    of itself plus the per-dst segments it visits.
+    """
     n = dst_offsets.shape[0] - 1
     max_steps = max_steps or n
-    kstep, roots, visited0, bb = _stable_setup(
-        key, batch, n, positions, placement)
-    brow = bb[:, 0]
+    kstep, roots, visited0, bb = _setup(
+        key, batch, n, positions, placement, stable)
+    brow = bb[:, 0] if stable else None
 
     def pick_in_neighbor(cur, r):
+        """Binary search within CSC segment of ``cur`` for cum >= r."""
         lo = dst_offsets[cur]
         hi = dst_offsets[cur + 1]
 
         def step_fn(_, lohi):
             lo_, hi_ = lohi
             mid = (lo_ + hi_) // 2
-            val = in_lt_cum[jnp.clip(mid, 0, in_lt_cum.shape[0] - 1)]
+            val = in_cum[jnp.clip(mid, 0, in_cum.shape[0] - 1)]
             go_right = val < r
             return (jnp.where(go_right, mid + 1, lo_),
                     jnp.where(go_right, hi_, mid))
@@ -306,9 +414,12 @@ def sample_lt_stable(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
     def body(state):
         step, cur, active, visited, k = state
         k, sub = jax.random.split(k)
-        kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
-        r = _u01(_mix32(_mix32(brow ^ kd[0]) ^ kd[1]))
-        total = in_lt_total[cur]
+        if stable:
+            kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
+            r = _u01(_mix32(_mix32(brow ^ kd[0]) ^ kd[1]))
+        else:
+            r = jax.random.uniform(sub, (batch,))
+        total = in_total[cur]
         go = jnp.logical_and(active, r < total)
         nxt = jax.vmap(pick_in_neighbor)(cur, r)
         revisit = jnp.take_along_axis(visited, nxt[:, None], axis=1)[:, 0]
@@ -328,65 +439,244 @@ def sample_lt_stable(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
     return visited.astype(jnp.uint8), counter, roots
 
 
-@partial(jax.jit, static_argnames=("batch", "max_steps", "max_indeg_log2",
-                                   "placement"))
+# ------------------------------------------------- historical entry points ----
+#
+# The pre-decomposition function API, kept as thin wrappers over the
+# unified loops (benchmarks and launch/steps.py call these directly).
+
+def sample_ic_dense(key, logq, *, batch: int, max_steps: int = 0,
+                    placement=None):
+    """Positional dense log-semiring IC sampling (see `_dense_loop`)."""
+    return _dense_loop(key, logq, batch=batch, max_steps=max_steps,
+                       placement=placement)
+
+
+def sample_ic_dense_stable(key, logq, positions=None, *, batch: int,
+                           max_steps: int = 0, placement=None):
+    """Identity-keyed dense sampling with ``positions`` row subsets."""
+    return _dense_loop(key, logq, positions, batch=batch,
+                       max_steps=max_steps, stable=True, placement=placement)
+
+
+def sample_ic_sparse(key, edge_src, edge_dst, edge_prob, *, n_nodes: int,
+                     batch: int, max_steps: int = 0, placement=None):
+    """Positional edge-list IC sampling (see `_sparse_loop`)."""
+    return _sparse_loop(key, edge_src, edge_dst, edge_prob,
+                        n_nodes=n_nodes, batch=batch, max_steps=max_steps,
+                        placement=placement)
+
+
+def sample_ic_sparse_stable(key, edge_src, edge_dst, edge_prob,
+                            positions=None, *, n_nodes: int, batch: int,
+                            max_steps: int = 0, placement=None):
+    """Edge-identity-keyed sparse sampling with ``positions`` subsets."""
+    return _sparse_loop(key, edge_src, edge_dst, edge_prob, positions,
+                        n_nodes=n_nodes, batch=batch, max_steps=max_steps,
+                        stable=True, placement=placement)
+
+
 def sample_lt(key, dst_offsets, in_src, in_lt_cum, in_lt_total, *,
               batch: int, max_steps: int = 0, max_indeg_log2: int = 32,
               placement=None):
-    """LT-model RRR walk. Returns (visited (B,n) uint8, counter, roots).
-    ``placement`` as in `sample_ic_dense`: the walk batch partitions over
-    the mesh so each device generates its store shard's rows."""
-    n = dst_offsets.shape[0] - 1
-    max_steps = max_steps or n
-    kroot, kstep = jax.random.split(key)
-    roots = jax.random.randint(kroot, (batch,), 0, n)
-    visited0 = jax.nn.one_hot(roots, n, dtype=jnp.bool_)
-    if placement is not None:
-        visited0 = jax.lax.with_sharding_constraint(visited0, placement)
+    """Positional LT RRR random walk (see `_walk_loop`)."""
+    return _walk_loop(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
+                      batch=batch, max_steps=max_steps,
+                      max_indeg_log2=max_indeg_log2, placement=placement)
 
-    def pick_in_neighbor(cur, r):
-        """Binary search within CSC segment of ``cur`` for lt_cum >= r."""
-        lo = dst_offsets[cur]
-        hi = dst_offsets[cur + 1]
 
-        def step_fn(_, lohi):
-            lo_, hi_ = lohi
-            mid = (lo_ + hi_) // 2
-            val = in_lt_cum[jnp.clip(mid, 0, in_lt_cum.shape[0] - 1)]
-            go_right = val < r
-            return (jnp.where(go_right, mid + 1, lo_),
-                    jnp.where(go_right, hi_, mid))
+def sample_lt_stable(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
+                     positions=None, *, batch: int, max_steps: int = 0,
+                     max_indeg_log2: int = 32, placement=None):
+    """Identity-keyed LT walk with ``positions`` row subsets."""
+    return _walk_loop(key, dst_offsets, in_src, in_lt_cum, in_lt_total,
+                      positions, batch=batch, max_steps=max_steps,
+                      max_indeg_log2=max_indeg_log2, stable=True,
+                      placement=placement)
 
-        lo_f, _ = jax.lax.fori_loop(0, max_indeg_log2, step_fn, (lo, hi))
-        idx = jnp.clip(lo_f, 0, in_src.shape[0] - 1)
-        return in_src[idx]
 
-    def cond(state):
-        step, cur, active, visited, _ = state
-        return jnp.logical_and(step < max_steps, active.any())
+# -------------------------------------------------------------- backends ----
 
-    def body(state):
-        step, cur, active, visited, k = state
-        k, sub = jax.random.split(k)
-        r = jax.random.uniform(sub, (batch,))
-        total = in_lt_total[cur]
-        go = jnp.logical_and(active, r < total)
-        nxt = jax.vmap(pick_in_neighbor)(cur, r)
-        revisit = jnp.take_along_axis(visited, nxt[:, None], axis=1)[:, 0]
-        go = jnp.logical_and(go, ~revisit)
-        visited = jnp.logical_or(
-            visited, jax.nn.one_hot(nxt, visited.shape[1], dtype=jnp.bool_)
-            & go[:, None]
-        )
-        cur = jnp.where(go, nxt, cur)
-        return step + 1, cur, go, visited, k
+def _pad_edges_pow2(edge_src, edge_dst, edge_prob):
+    """Pad CSC edge arrays to the next power of two with never-firing
+    edges (prob 0, endpoints 0), so the stable sparse loop is traced per
+    pow2 *bucket* of m rather than per exact m — a `GraphDelta` that
+    changes the edge count inside the bucket reuses the compiled kernel
+    instead of retracing.  Identity-keyed coins make the pad lanes
+    invisible: a padded sampler's output is bitwise identical to the
+    unpadded one's (pinned in tests/test_sampler_matrix.py)."""
+    m = int(edge_src.shape[0])
+    m_pad = next_pow2(m, 1)
+    if m_pad == m:
+        return edge_src, edge_dst, edge_prob
+    pad = m_pad - m
+    z = jnp.zeros((pad,), edge_src.dtype)
+    return (jnp.concatenate([edge_src, z]),
+            jnp.concatenate([edge_dst, jnp.zeros((pad,), edge_dst.dtype)]),
+            jnp.concatenate([edge_prob, jnp.zeros((pad,), edge_prob.dtype)]))
 
-    _, _, _, visited, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), roots, jnp.ones((batch,), jnp.bool_),
-                     visited0, kstep)
-    )
-    counter = visited.sum(axis=0, dtype=jnp.int32)
-    return visited.astype(jnp.uint8), counter, roots
+
+@dataclasses.dataclass(frozen=True)
+class TraversalBackend:
+    """One way to execute an RRR traversal.
+
+    ``family`` names the model family it can execute ("coins" or
+    "walk"); ``bind(model, graph, cfg, *, stable, placement)`` does the
+    per-graph preprocessing once (dense matrix, edge padding, walk
+    tables) and returns the bound sampler: a callable of a PRNG key —
+    plus a keyword-only ``positions`` row subset when ``stable`` —
+    returning ``(visited (B, n) uint8, counter (n,) int32, roots (B,))``.
+    """
+    name: str
+    family: str
+    bind: Callable
+
+
+def _bind_dense(model, graph: Graph, cfg, *, stable, placement,
+                kernel=False):
+    logq = logq_from_probs(graph, model.edge_probs(graph))
+    interpret = bool(getattr(cfg, "pallas_interpret", False))
+    if stable:
+        return lambda key, positions=None: _dense_loop(
+            key, logq, positions, batch=cfg.batch, stable=True,
+            kernel=kernel, interpret=interpret, placement=placement)
+    return lambda key: _dense_loop(
+        key, logq, batch=cfg.batch, kernel=kernel, interpret=interpret,
+        placement=placement)
+
+
+def _bind_pallas(model, graph: Graph, cfg, *, stable, placement):
+    return _bind_dense(model, graph, cfg, stable=stable,
+                       placement=placement, kernel=True)
+
+
+def _bind_sparse(model, graph: Graph, cfg, *, stable, placement):
+    src, dst = graph.edge_src, graph.edge_dst
+    prob = jnp.asarray(model.edge_probs(graph), jnp.float32)
+    if stable:
+        # pow2 padding is only bitwise-invisible under identity-keyed
+        # coins; the positional coin layout is a function of m, so the
+        # positional sampler keeps the exact edge count (seed parity
+        # with the historical IC-sparse stream)
+        src, dst, prob = _pad_edges_pow2(src, dst, prob)
+        return lambda key, positions=None: _sparse_loop(
+            key, src, dst, prob, positions, n_nodes=graph.n,
+            batch=cfg.batch, stable=True, placement=placement)
+    return lambda key: _sparse_loop(
+        key, src, dst, prob, n_nodes=graph.n, batch=cfg.batch,
+        placement=placement)
+
+
+def _bind_walk(model, graph: Graph, cfg, *, stable, placement):
+    tables = model.walk_tables(graph)
+    if stable:
+        return lambda key, positions=None: _walk_loop(
+            key, *tables, positions, batch=cfg.batch, stable=True,
+            placement=placement)
+    return lambda key: _walk_loop(
+        key, *tables, batch=cfg.batch, placement=placement)
+
+
+DENSE_BACKEND = TraversalBackend("dense", "coins", _bind_dense)
+SPARSE_BACKEND = TraversalBackend("sparse", "coins", _bind_sparse)
+PALLAS_BACKEND = TraversalBackend("pallas", "coins", _bind_pallas)
+WALK_BACKEND = TraversalBackend("walk", "walk", _bind_walk)
+
+_BACKEND_REGISTRY: dict = {}
+
+
+def register_backend(backend: TraversalBackend) -> None:
+    """Register a `TraversalBackend` under its name (overwrites
+    silently)."""
+    _BACKEND_REGISTRY[backend.name] = backend
+
+
+def get_backend(name: str) -> TraversalBackend:
+    try:
+        return _BACKEND_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown traversal backend {name!r}; registered: "
+            f"{sorted(_BACKEND_REGISTRY)}")
+
+
+def registered_backends():
+    return sorted(_BACKEND_REGISTRY)
+
+
+for _b in (DENSE_BACKEND, SPARSE_BACKEND, PALLAS_BACKEND, WALK_BACKEND):
+    register_backend(_b)
+
+
+# ----------------------------------------------------------- composition ----
+
+def _check_family(model, backend) -> None:
+    if backend.family != model.family:
+        raise ValueError(
+            f"backend {backend.name!r} executes {backend.family!r}-family "
+            f"models; model {model.name!r} is {model.family!r}-family "
+            f"(coin models compose with dense/sparse/pallas, walk models "
+            f"with walk)")
+
+
+def composed_name(model: str, backend: str, stable: bool = False) -> str:
+    """Canonical registry spelling of a composition:
+    ``"<model>/<backend>"`` plus ``"+stable"`` for the identity-keyed
+    form (e.g. ``"WC/sparse"``, ``"IC/pallas+stable"``)."""
+    return f"{model}/{backend}" + ("+stable" if stable else "")
+
+
+def make_sampler(model, backend=None, *, stable: bool = False):
+    """Compose a `DiffusionModel` x `TraversalBackend` into a sampler
+    factory (registry-compatible: ``factory(graph, cfg, *,
+    placement=None) -> bound sampler``).
+
+    ``model``/``backend`` are registry names or instances; ``backend``
+    defaults to the model family's reference backend ("dense" for coin
+    models, "walk" for walk models).  ``stable=True`` selects
+    identity-keyed counter-mode coins with ``positions`` row-subset
+    resampling (the delta-stable form streaming refresh requires).
+    Incompatible families fail fast::
+
+        make_sampler("WC", "pallas")           # weighted cascade on MXU
+        make_sampler("IC", "sparse", stable=True)
+        make_sampler(CoinModel("mine", f), "dense")
+    """
+    m = get_model(model) if isinstance(model, str) else model
+    if backend is None:
+        backend = "dense" if m.family == "coins" else "walk"
+    b = get_backend(backend) if isinstance(backend, str) else backend
+    _check_family(m, b)
+    model_ref = model if isinstance(model, str) else m
+    backend_ref = backend if isinstance(backend, str) else b
+
+    def factory(graph: Graph, cfg, *, placement=None):
+        # names re-resolve per bind, so register_model/register_backend
+        # shadowing (the documented overwrite contract) reaches factories
+        # composed — or cached by get_sampler — before the re-registration
+        mm = (get_model(model_ref) if isinstance(model_ref, str)
+              else model_ref)
+        bb = (get_backend(backend_ref) if isinstance(backend_ref, str)
+              else backend_ref)
+        _check_family(mm, bb)
+        return bb.bind(mm, graph, cfg, stable=stable, placement=placement)
+
+    factory.__name__ = f"sampler_{m.name}_{b.name}" + (
+        "_stable" if stable else "")
+    factory.model, factory.backend, factory.stable = m, b, stable
+    return factory
+
+
+def sampler_matrix():
+    """Every valid (model, backend) composition over the registered
+    models and backends, as ``[(model_name, backend_name), ...]`` —
+    the docs/tests/benchmarks iterate this instead of hardcoding."""
+    cells = []
+    for mn in registered_models():
+        m = _MODEL_REGISTRY[mn]
+        for bn in registered_backends():
+            if _BACKEND_REGISTRY[bn].family == m.family:
+                cells.append((mn, bn))
+    return cells
 
 
 # ------------------------------------------------------- sampler registry ----
@@ -394,23 +684,39 @@ def sample_lt(key, dst_offsets, in_src, in_lt_cum, in_lt_total, *,
 # The engine resolves samplers by name so new diffusion models (or tuned
 # variants of the built-ins) plug in without touching the driver:
 #
+#     register_model(CoinModel("mine", edge_prob_fn))   # every backend...
+#     register_sampler("mine/dense", make_sampler("mine", "dense"))
+#
+# or, bypassing the axes entirely (a factory takes (graph, cfg) and
+# returns a bound sampler; preprocessing happens once in the factory):
+#
 #     register_sampler("IC-mykernel", lambda graph, cfg: bound_fn)
 #
-# A factory takes (graph, cfg) and returns a bound sampler: a callable of a
-# PRNG key returning (visited (B, n) uint8, counter (n,) int32, roots (B,)).
-# Preprocessing (e.g. the dense log-survival matrix) happens once in the
-# factory, not per batch.  Factories may additionally accept a keyword-only
-# ``placement`` (batch output sharding, see the module docstring); the
-# engine passes it only to factories that declare it (`bind_sampler`), so
-# user-registered (graph, cfg) factories keep working unchanged.
+# Factories may additionally accept a keyword-only ``placement`` (batch
+# output sharding, see the module docstring); the engine passes it only
+# to factories that declare it (`bind_sampler`), so user-registered
+# (graph, cfg) factories keep working unchanged.
 
 _SAMPLER_REGISTRY = {}
+
+# historical monolithic spellings -> canonical compositions.  Resolving
+# one emits a DeprecationWarning (once per name per process) pointing at
+# the `make_sampler` spelling; results are seed-for-seed identical.
+_LEGACY_ALIASES = {
+    "IC-dense": "IC/dense",
+    "IC-sparse": "IC/sparse",
+    "LT": "LT/walk",
+    "IC-dense-stable": "IC/dense+stable",
+    "IC-sparse-stable": "IC/sparse+stable",
+    "LT-stable": "LT/walk+stable",
+}
+_LEGACY_WARNED: set = set()
 
 
 def register_sampler(name: str, factory=None):
     """Register a sampler factory under ``name`` (overwrites silently so
     experiments can shadow the built-ins).  Usable as a decorator:
-    ``@register_sampler("IC-dense")``."""
+    ``@register_sampler("IC-mykernel")``."""
     if factory is None:
         def deco(f):
             _SAMPLER_REGISTRY[name] = f
@@ -420,29 +726,102 @@ def register_sampler(name: str, factory=None):
     return factory
 
 
+def _parse_composed(name: str):
+    """``(model, backend, stable)`` when ``name`` is a canonical
+    composition over *registered* axes, else None.  This is what lets a
+    post-import ``register_model``/``register_backend`` resolve through
+    configs immediately — its composed names need no pre-registration."""
+    mdl, sep, rest = name.partition("/")
+    if not sep:
+        return None
+    bkd, plus, stb = rest.partition("+")
+    if plus and stb != "stable":
+        return None
+    if mdl in _MODEL_REGISTRY and bkd in _BACKEND_REGISTRY:
+        return mdl, bkd, bool(plus)
+    return None
+
+
 def get_sampler(name: str):
-    try:
-        return _SAMPLER_REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown sampler {name!r}; registered: "
-            f"{sorted(_SAMPLER_REGISTRY)}")
+    hit = _SAMPLER_REGISTRY.get(name)
+    if hit is not None:
+        return hit
+    alias = _LEGACY_ALIASES.get(name)
+    if alias is not None:
+        if name not in _LEGACY_WARNED:
+            _LEGACY_WARNED.add(name)
+            mdl, _, rest = alias.partition("/")
+            bkd, _, stb = rest.partition("+")
+            spelling = f"make_sampler({mdl!r}, {bkd!r}" + (
+                ", stable=True)" if stb else ")")
+            warnings.warn(
+                f"sampler name {name!r} is a legacy monolithic spelling; "
+                f"use {alias!r} (= {spelling}) instead — results are "
+                f"seed-for-seed identical",
+                DeprecationWarning, stacklevel=2)
+        return _SAMPLER_REGISTRY[alias]
+    axes = _parse_composed(name)
+    if axes is not None:
+        # compose (and cache) on demand: models/backends registered
+        # after import resolve by canonical name with no extra
+        # register_sampler calls; family mismatches fail with
+        # make_sampler's explanation
+        mdl, bkd, stable = axes
+        factory = make_sampler(mdl, bkd, stable=stable)
+        _SAMPLER_REGISTRY[name] = factory
+        return factory
+    raise ValueError(
+        f"unknown sampler {name!r}; registered: "
+        f"{registered_samplers()}")
 
 
 def registered_samplers():
-    return sorted(_SAMPLER_REGISTRY)
+    """All resolvable names: the canonical ``model/backend[+stable]``
+    matrix, user registrations, and the deprecated legacy aliases."""
+    return sorted(set(_SAMPLER_REGISTRY) | set(_LEGACY_ALIASES))
+
+
+for _mn, _bn in sampler_matrix():
+    for _s in (False, True):
+        register_sampler(composed_name(_mn, _bn, _s),
+                         make_sampler(_mn, _bn, stable=_s))
 
 
 def default_sampler_name(graph: Graph, cfg) -> str:
-    """The historical dispatch: dense log-semiring IC below
-    ``dense_sampler_max_n``, edge-list IC above it, LT walk otherwise."""
-    if cfg.model == "IC":
-        if graph.n <= cfg.dense_sampler_max_n:
-            return "IC-dense"
-        return "IC-sparse"
-    if cfg.model == "LT":
-        return "LT"
-    raise ValueError(f"unknown diffusion model {cfg.model!r}")
+    """Resolve ``cfg`` to a canonical composed name: coin models take the
+    dense backend below ``cfg.dense_sampler_max_n`` and the edge-list
+    backend above it (the historical dispatch), walk models take the
+    walk backend; ``cfg.backend`` overrides the backend axis and
+    ``cfg.stable`` selects the identity-keyed form."""
+    m = get_model(cfg.model)
+    backend = getattr(cfg, "backend", None)
+    if backend is None:
+        if m.family == "walk":
+            backend = "walk"
+        else:
+            backend = ("dense" if graph.n <= cfg.dense_sampler_max_n
+                       else "sparse")
+    else:
+        # fail here with the family explanation, not later with a
+        # generic unknown-sampler error from the composed name
+        _check_family(m, get_backend(backend))
+    return composed_name(m.name, backend, bool(getattr(cfg, "stable",
+                                                       False)))
+
+
+def stable_variant(name: str) -> str:
+    """The delta-stable spelling of a sampler name: canonical names gain
+    ``+stable``, legacy aliases keep their legacy ``-stable`` spelling,
+    and unknown (user-registered) names pass through unchanged — the
+    caller keeps whatever row-resample support the custom factory has."""
+    if name.endswith("+stable") or name.endswith("-stable"):
+        return name
+    if name in _LEGACY_ALIASES:
+        return f"{name}-stable"
+    if (f"{name}+stable" in _SAMPLER_REGISTRY
+            or _parse_composed(name) is not None):
+        return f"{name}+stable"
+    return name
 
 
 def bind_sampler(factory, graph: Graph, cfg, placement=None):
@@ -456,45 +835,3 @@ def bind_sampler(factory, graph: Graph, cfg, placement=None):
         if "placement" in params or takes_kw:
             return factory(graph, cfg, placement=placement)
     return factory(graph, cfg)
-
-
-@register_sampler("IC-dense")
-def _ic_dense_factory(graph: Graph, cfg, *, placement=None):
-    logq = make_logq(graph)
-    return lambda key: sample_ic_dense(
-        key, logq, batch=cfg.batch, placement=placement)
-
-
-@register_sampler("IC-sparse")
-def _ic_sparse_factory(graph: Graph, cfg, *, placement=None):
-    return lambda key: sample_ic_sparse(
-        key, graph.edge_src, graph.edge_dst, graph.in_prob,
-        n_nodes=graph.n, batch=cfg.batch, placement=placement)
-
-
-@register_sampler("IC-dense-stable")
-def _ic_dense_stable_factory(graph: Graph, cfg, *, placement=None):
-    logq = make_logq(graph)
-    return lambda key, positions=None: sample_ic_dense_stable(
-        key, logq, positions, batch=cfg.batch, placement=placement)
-
-
-@register_sampler("IC-sparse-stable")
-def _ic_sparse_stable_factory(graph: Graph, cfg, *, placement=None):
-    return lambda key, positions=None: sample_ic_sparse_stable(
-        key, graph.edge_src, graph.edge_dst, graph.in_prob, positions,
-        n_nodes=graph.n, batch=cfg.batch, placement=placement)
-
-
-@register_sampler("LT-stable")
-def _lt_stable_factory(graph: Graph, cfg, *, placement=None):
-    return lambda key, positions=None: sample_lt_stable(
-        key, graph.dst_offsets, graph.in_src, graph.in_lt_cum,
-        graph.in_lt_total, positions, batch=cfg.batch, placement=placement)
-
-
-@register_sampler("LT")
-def _lt_factory(graph: Graph, cfg, *, placement=None):
-    return lambda key: sample_lt(
-        key, graph.dst_offsets, graph.in_src, graph.in_lt_cum,
-        graph.in_lt_total, batch=cfg.batch, placement=placement)

@@ -522,10 +522,14 @@ class BitmapStore(_ArenaBase):
     def from_rows(cls, rows, n: int) -> "BitmapStore":
         """Build a store holding exactly ``rows (count, n) uint8`` — the
         cross-layout restore path (e.g. a `ShardedStore` snapshot opened
-        without a mesh)."""
+        without a mesh).  ``_restore_slots`` records where each input row
+        landed (snapshot-row -> slot), so provenance trackers
+        (`repro.stream.StreamEngine`) can follow rows through a restore."""
         store = cls(int(n), capacity=max(int(rows.shape[0]), MIN_CAPACITY))
         if rows.shape[0]:
-            store.add_batch(jnp.asarray(rows, jnp.uint8))
+            store._restore_slots = store.add_batch(jnp.asarray(rows, jnp.uint8))
+        else:
+            store._restore_slots = np.zeros((0,), np.int64)
         return store
 
 
@@ -1167,8 +1171,14 @@ class ShardedStore:
         store = cls(n, mesh=mesh, theta_axes=theta_axes,
                     capacity=max(count, 1))
         chunk = max(cls.RESTORE_CHUNK // max(store.D, 1), 1) * store.D
+        slot_chunks = []
         for lo in range(0, count, chunk):
-            store.add_batch(jnp.asarray(rows[lo:lo + chunk], jnp.uint8))
+            slot_chunks.append(
+                store.add_batch(jnp.asarray(rows[lo:lo + chunk], jnp.uint8)))
+        # snapshot-row -> slot map for provenance trackers (row i of the
+        # *live-filtered* snapshot rows landed in slot _restore_slots[i])
+        store._restore_slots = (np.concatenate(slot_chunks) if slot_chunks
+                                else np.zeros((0,), np.int64))
         return store
 
 

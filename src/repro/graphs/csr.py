@@ -53,6 +53,16 @@ def _offsets_from_sorted(keys: np.ndarray, n: int) -> np.ndarray:
     return np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
 
 
+def wc_edge_probs(dst, n: int) -> np.ndarray:
+    """Weighted-cascade probabilities ``p(u->v) = 1/indeg(v)`` for edges
+    with destinations ``dst`` — the single definition shared by
+    `build_graph`'s ``weighted_ic="wc"`` option and the WC diffusion
+    model (``repro.core.sampler``).  Zero-indegree is clamped to 1."""
+    dst = np.asarray(dst)
+    indeg = np.bincount(dst, minlength=n).astype(np.float64)
+    return 1.0 / np.maximum(indeg[dst], 1.0)
+
+
 def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
                 weighted_ic: str = "uniform", lt_weight=None) -> Graph:
     """Build a Graph from numpy edge arrays.
@@ -77,8 +87,7 @@ def build_graph(src, dst, n: int, *, ic_prob=None, seed: int = 0,
 
     if ic_prob is None:
         if weighted_ic == "wc":
-            indeg = np.bincount(dst, minlength=n).astype(np.float64)
-            ic_prob = 1.0 / np.maximum(indeg[dst], 1.0)
+            ic_prob = wc_edge_probs(dst, n)
         else:
             ic_prob = rng.uniform(0.0, 1.0, size=m)
     ic_prob = np.asarray(ic_prob, dtype=np.float32)
@@ -158,11 +167,15 @@ def edge_arrays(g: Graph):
     return src, dst, prob, w
 
 
-def dense_ic_matrix(g: Graph) -> jnp.ndarray:
-    """Dense (n, n) matrix P with P[u, v] = IC prob of edge u->v.
+def dense_ic_matrix(g: Graph, probs=None) -> jnp.ndarray:
+    """Dense (n, n) matrix P with P[u, v] = activation prob of edge u->v.
 
-    Used by the dense (bitmap) sampling branch; only valid for small n.
+    ``probs`` overrides the per-edge marginals (CSC order, aligned with
+    ``in_src``/``edge_dst``) — diffusion models other than IC supply
+    theirs here; None uses the graph's IC probabilities.  Used by the
+    dense (bitmap) sampling branch; only valid for small n.
     """
     P = np.zeros((g.n, g.n), dtype=np.float32)
-    P[np.asarray(g.in_src), np.asarray(g.edge_dst)] = np.asarray(g.in_prob)
+    P[np.asarray(g.in_src), np.asarray(g.edge_dst)] = np.asarray(
+        g.in_prob if probs is None else probs, dtype=np.float32)
     return jnp.asarray(P)

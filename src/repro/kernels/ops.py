@@ -2,6 +2,14 @@
 
 ``use_pallas=None`` auto-detects the backend.  ``interpret=True`` forces the
 Pallas path through the interpreter (CPU validation — what the tests use).
+
+`ic_frontier_step` is also the execution step of the engine's ``pallas``
+traversal backend (``repro.core.sampler``: ``make_sampler(model,
+"pallas")`` / ``IMMConfig(backend="pallas")``): the sampler loop calls
+through this dispatch, so a pallas-backed engine runs the fused MXU
+kernel on TPU and falls back to the bitwise-equivalent jnp oracle
+anywhere else — same math, so off-TPU results match the ``dense``
+backend exactly.
 """
 from __future__ import annotations
 

@@ -29,7 +29,7 @@ from repro.graphs.datasets import scaled_snap, synthetic_snap
 def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         eps: float = 0.5, baseline: bool = False, seed: int = 0,
         max_theta: int = 1 << 14, select_ks=(), snapshot_dir: str = None,
-        mesh=None, log=print):
+        mesh=None, backend: str = None, sampler: str = None, log=print):
     exp = IMM_EXPERIMENTS[graph]
     scale = exp.bench_scale if scale is None else scale
     t0 = time.time()
@@ -38,7 +38,8 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
     t_graph = time.time() - t0
 
     cfg = IMMConfig(
-        k=k, eps=eps, model=model, max_theta=max_theta, seed=seed,
+        k=k, eps=eps, model=model, backend=backend, sampler=sampler,
+        max_theta=max_theta, seed=seed,
         selection_method="decrement" if baseline else "rebuild",
         adaptive_representation=not baseline,
     )
@@ -64,6 +65,7 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
 
     out = {
         "graph": graph, "scale": scale, "n": g.n, "m": g.m, "model": model,
+        "sampler": engine.sampler_name,
         "k": k, "mode": "ripples-style" if baseline else "efficientimm",
         "mesh_shards": None if mesh is None else int(
             engine.store.D if hasattr(engine.store, "D") else 1),
@@ -84,7 +86,19 @@ def main(argv=None):
     ap.add_argument("--graph", default="com-Amazon",
                     choices=sorted(IMM_EXPERIMENTS))
     ap.add_argument("--scale", type=float, default=None)
-    ap.add_argument("--model", default="IC", choices=("IC", "LT"))
+    ap.add_argument("--model", default="IC",
+                    choices=("IC", "WC", "GT", "LT"),
+                    help="diffusion model: IC (per-edge probs), WC "
+                         "(weighted cascade), GT (generalized triggering),"
+                         " LT (linear threshold walk)")
+    ap.add_argument("--backend", default=None,
+                    choices=("dense", "sparse", "pallas", "walk"),
+                    help="traversal backend (default: auto by model/n; "
+                         "'pallas' drives the fused MXU ic_frontier "
+                         "kernel, falling back to the jnp oracle off-TPU)")
+    ap.add_argument("--sampler", default=None,
+                    help="full sampler-name override, e.g. "
+                         "'WC/pallas+stable' (wins over --model/--backend)")
     ap.add_argument("--k", type=int, default=50)
     ap.add_argument("--eps", type=float, default=0.5)
     ap.add_argument("--baseline", action="store_true")
@@ -101,7 +115,7 @@ def main(argv=None):
     run(args.graph, scale=args.scale, model=args.model, k=args.k,
         eps=args.eps, baseline=args.baseline, max_theta=args.max_theta,
         select_ks=args.select_k, snapshot_dir=args.snapshot_dir,
-        mesh=args.mesh)
+        mesh=args.mesh, backend=args.backend, sampler=args.sampler)
 
 
 if __name__ == "__main__":

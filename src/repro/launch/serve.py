@@ -180,7 +180,8 @@ def _main_im(args):
     scale = exp.bench_scale if args.scale is None else args.scale
     g = scaled_snap(args.graph, scale, seed=0)
     mesh = make_theta_mesh(args.mesh)
-    cfg = IMMConfig(k=args.k, model=args.model, max_theta=args.max_theta)
+    cfg = IMMConfig(k=args.k, model=args.model, backend=args.backend,
+                    sampler=args.sampler, max_theta=args.max_theta)
     if args.deltas:
         from repro.stream import StreamEngine
         engine = StreamEngine(g, cfg, mesh=mesh)
@@ -247,7 +248,13 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--graph", default="com-Amazon")
     ap.add_argument("--scale", type=float, default=None)
-    ap.add_argument("--model", default="IC", choices=("IC", "LT"))
+    ap.add_argument("--model", default="IC",
+                    choices=("IC", "WC", "GT", "LT"))
+    ap.add_argument("--backend", default=None,
+                    choices=("dense", "sparse", "pallas", "walk"),
+                    help="traversal backend (default: auto by model/n)")
+    ap.add_argument("--sampler", default=None,
+                    help="full sampler-name override, e.g. 'WC/pallas'")
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--max-theta", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=64)

@@ -40,24 +40,40 @@ Semantics:
 
 `StreamEngine` canonicalizes the input graph once
 (`repro.stream.delta.canonicalize`) so every delta rebuild reproduces
-untouched edges bit-for-bit, and upgrades the positional ``IC-sparse``
-sampler to the edge-identity-keyed ``IC-sparse-stable`` (the positional
-coin layout would decorrelate every row on any edge-count change).
+untouched edges bit-for-bit, and upgrades the configured sampler to its
+delta-stable form (``repro.core.sampler.stable_variant`` — the
+positional coin layouts would decorrelate every row on any edge-count
+change).  ``snapshot``/``restore`` persist the batch-key repair
+provenance alongside the engine state, so a restored stream same-key
+repairs instead of topping up.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.checkpoint import store as ckpt
 from repro.core.engine import IMMConfig, InfluenceEngine, Selection
-from repro.core.sampler import default_sampler_name
+from repro.core.sampler import default_sampler_name, stable_variant
 from repro.core.store import StorePressurePolicy, make_store, next_pow2
-from repro.graphs.csr import Graph
+from repro.graphs.csr import Graph, edge_arrays
 from repro.stream.delta import GraphDelta, canonicalize
 from repro.stream.invalidate import invalidate
+
+
+def _graph_fingerprint(graph: Graph) -> str:
+    """Content hash of a (canonicalized) graph's edge set and weights —
+    identical iff resident RRR rows sampled on one graph are valid
+    against the other."""
+    src, dst, prob, w = edge_arrays(graph)
+    h = hashlib.sha256()
+    for a in (src, dst, prob, np.asarray(w, np.float64)):
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,8 +90,9 @@ class StreamEngine:
 
     Parameters
     ----------
-    graph, cfg : as `InfluenceEngine` (``cfg.sampler == "IC-sparse"`` is
-        upgraded to the delta-stable ``"IC-sparse-stable"``).
+    graph, cfg : as `InfluenceEngine` (the resolved sampler is upgraded
+        to its delta-stable form, e.g. ``"IC/sparse"`` ->
+        ``"IC/sparse+stable"``).
     mesh, theta_axes, vertex_axis : mesh sharding, as `InfluenceEngine`.
     policy : optional `StorePressurePolicy` — bounded-memory mode.
 
@@ -89,12 +106,11 @@ class StreamEngine:
                  policy: StorePressurePolicy | None = None):
         cfg = cfg if cfg is not None else IMMConfig()
         name = cfg.sampler or default_sampler_name(graph, cfg)
-        # the positional samplers can only re-generate whole batches and
-        # (IC-sparse) decorrelate entirely when the edge count changes —
-        # upgrade to the delta-stable, row-subsettable twins
-        name = {"IC-dense": "IC-dense-stable",
-                "IC-sparse": "IC-sparse-stable",
-                "LT": "LT-stable"}.get(name, name)
+        # the positional coin layouts can only re-generate whole batches
+        # and (sparse backends) decorrelate entirely when the edge count
+        # changes — upgrade any composed or legacy name to its
+        # delta-stable, row-subsettable form
+        name = stable_variant(name)
         cfg = dataclasses.replace(cfg, sampler=name)
         graph = canonicalize(graph)
         if mesh is not None:
@@ -281,6 +297,118 @@ class StreamEngine:
         while self.store.live_count < self._effective_target and left > 0:
             left -= self._add_recorded_batch()
         return self.stale
+
+    # ------------------------------------------------------- checkpointing
+
+    def snapshot(self, directory: str, *, tag: str = "stream") -> str:
+        """Persist the wrapped engine's state *plus* the stream's repair
+        provenance — the per-batch PRNG keys and the (batch, position)
+        that produced every resident row — so a restored stream same-key
+        repairs future staleness instead of topping up with fresh keys
+        (which would break the refresh-until-consistent equivalence with
+        a fresh engine).  One atomic file via `checkpoint.store`.
+
+        Row provenance is saved aligned with the store snapshot's row
+        order: full-arena order for a `BitmapStore` (dead rows keep
+        their provenance — a restored stream can finish an in-flight
+        repair), compacted live-row order for a `ShardedStore`.
+        """
+        self._sync_layout()
+        store = self.store
+        if hasattr(store, "_filled_host"):          # ShardedStore layout
+            keep = store._filled_host() & store._live_host
+            slot_batch = self._slot_batch[keep]
+            slot_pos = self._slot_pos[keep]
+        else:
+            slot_batch, slot_pos = self._slot_batch, self._slot_pos
+        keys = (np.stack([np.asarray(k) for k in self._batch_keys])
+                if self._batch_keys else np.zeros((0, 2), np.uint32))
+        tree = {
+            "engine": self.engine.snapshot_tree(),
+            "stream": {
+                "batch_keys": keys,
+                "slot_batch": np.asarray(slot_batch, np.int64),
+                "slot_pos": np.asarray(slot_pos, np.int64),
+                "batch": np.int64(self.cfg.batch),
+                "graph_sha": np.asarray(_graph_fingerprint(self.graph)),
+                "target_theta": np.int64(self.target_theta),
+                "epoch": np.int64(self.epoch),
+                "deltas_applied": np.int64(self.deltas_applied),
+            },
+        }
+        return ckpt.save_named(directory, tag, tree)
+
+    def restore(self, directory: str, *, tag: str = "stream") -> bool:
+        """Resume from `snapshot`; returns False when none exists.
+
+        The engine restores elastically across store layouts (any mesh
+        or none); the stream then re-derives its slot -> (batch,
+        position) provenance through the restored store's snapshot-row
+        placement (``_restore_slots``), so every surviving row keeps its
+        original batch key and the next delta repairs it in place with
+        the same coins the saved stream would have used.
+        """
+        tree = ckpt.load_named(directory, tag)
+        if tree is None:
+            return False
+        # the saved batch keys only reproduce their rows under the very
+        # sampler and batch width that drew them — a mismatched restore
+        # would silently corrupt same-key repair (positions gathers from
+        # a different-width batch), so fail loudly instead
+        saved_sampler = str(np.asarray(tree["engine"]["meta"]["sampler"]))
+        if saved_sampler != self.engine.sampler_name:
+            raise ValueError(
+                f"snapshot was sampled with {saved_sampler!r}, this "
+                f"stream resolves {self.engine.sampler_name!r}; same-key "
+                f"repair needs the identical sampler composition")
+        saved_batch = int(tree["stream"]["batch"])
+        if saved_batch != self.cfg.batch:
+            raise ValueError(
+                f"snapshot was sampled with batch={saved_batch}, this "
+                f"stream has batch={self.cfg.batch}; same-key repair "
+                f"needs the identical batch width")
+        saved_graph = str(np.asarray(tree["stream"]["graph_sha"]))
+        if saved_graph != _graph_fingerprint(self.graph):
+            raise ValueError(
+                "snapshot was taken against a different graph (edge "
+                "set/weights differ); its resident rows and batch keys "
+                "are not valid here — construct the stream with the "
+                "snapshot's graph, then apply further deltas through "
+                "apply_delta")
+        self.engine.restore_tree(tree["engine"])
+        store = self.store
+        store.track_remaps = True
+        store.policy = self.policy      # restore drops it; re-arm the cap
+        st = tree["stream"]
+        keys = np.asarray(st["batch_keys"])
+        self._batch_keys = [keys[i] for i in range(keys.shape[0])]
+        self.target_theta = int(st["target_theta"])
+        self.epoch = int(st["epoch"])
+        self.deltas_applied = int(st["deltas_applied"])
+        prov_b = np.asarray(st["slot_batch"], np.int64)
+        prov_p = np.asarray(st["slot_pos"], np.int64)
+        self._slot_batch = np.full(store.capacity, -1, np.int64)
+        self._slot_pos = np.full(store.capacity, -1, np.int64)
+        slots = getattr(store, "_restore_slots", None)
+        if slots is None:
+            # same-layout single-device restore: snapshot rows *are* the
+            # arena slots (dead rows included)
+            k = min(store.capacity, prov_b.shape[0])
+            self._slot_batch[:k] = prov_b[:k]
+            self._slot_pos[:k] = prov_p[:k]
+            return True
+        snap_store = tree["engine"]["store"]
+        if str(np.asarray(snap_store["kind"])) != "sharded":
+            # a full-arena snapshot restored through row re-adding keeps
+            # live rows only — apply the same filter to the provenance
+            count = int(snap_store["count"])
+            prov_b, prov_p = prov_b[:count], prov_p[:count]
+            if "live" in snap_store:
+                live = np.asarray(snap_store["live"])[:count].astype(bool)
+                prov_b, prov_p = prov_b[live], prov_p[live]
+        self._slot_batch[slots] = prov_b[:slots.shape[0]]
+        self._slot_pos[slots] = prov_p[:slots.shape[0]]
+        return True
 
     # ------------------------------------------------------------ queries
 

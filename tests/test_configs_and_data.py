@@ -92,6 +92,24 @@ def test_imm_experiments_cover_paper_table1():
          "as-Skitter", "web-Google", "Twitter7"])
 
 
+def test_imm_experiment_model_configs_resolve_to_registered_samplers():
+    """Every per-experiment model config (IC/LT plus the WC/GT scenario
+    models) composes to a registered sampler on both sides of the
+    dense/sparse size threshold."""
+    import dataclasses
+
+    from repro.core.sampler import default_sampler_name, get_sampler
+    from repro.graphs import rmat_graph
+    small = rmat_graph(64, 256, seed=0)
+    exp = IMM_EXPERIMENTS["com-Amazon"]
+    for cfg in (exp.cfg_ic, exp.cfg_lt, exp.cfg_wc, exp.cfg_gt):
+        name = default_sampler_name(small, cfg)
+        assert name.startswith(f"{cfg.model}/")
+        assert callable(get_sampler(name))
+        sparse_cfg = dataclasses.replace(cfg, dense_sampler_max_n=8)
+        assert callable(get_sampler(default_sampler_name(small, sparse_cfg)))
+
+
 # ------------------------------------------------------------------ data ----
 
 def test_token_pipeline_deterministic_and_sharded():

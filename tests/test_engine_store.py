@@ -207,11 +207,17 @@ def test_engine_index_store_backend_end_to_end():
 
 def test_sampler_registry_resolves_and_rejects():
     g = rmat_graph(64, 256, seed=0)
-    assert default_sampler_name(g, IMMConfig(model="IC")) == "IC-dense"
+    assert default_sampler_name(g, IMMConfig(model="IC")) == "IC/dense"
     assert default_sampler_name(
-        g, IMMConfig(model="IC", dense_sampler_max_n=8)) == "IC-sparse"
-    assert default_sampler_name(g, IMMConfig(model="LT")) == "LT"
-    assert {"IC-dense", "IC-sparse", "LT"} <= set(registered_samplers())
+        g, IMMConfig(model="IC", dense_sampler_max_n=8)) == "IC/sparse"
+    assert default_sampler_name(g, IMMConfig(model="LT")) == "LT/walk"
+    assert default_sampler_name(
+        g, IMMConfig(model="WC", stable=True)) == "WC/dense+stable"
+    assert default_sampler_name(
+        g, IMMConfig(model="GT", backend="pallas")) == "GT/pallas"
+    # canonical matrix names and deprecated legacy aliases all resolve
+    assert {"IC/dense", "WC/sparse", "GT/pallas+stable", "LT/walk",
+            "IC-dense", "IC-sparse", "LT"} <= set(registered_samplers())
     with pytest.raises(ValueError):
         get_sampler("no-such-sampler")
     with pytest.raises(ValueError):

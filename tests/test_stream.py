@@ -1,11 +1,14 @@
 """Streaming subsystem: GraphDelta semantics, reverse-touch invalidation,
 StreamEngine refresh equivalence (the headline invariant), bounded-memory
-eviction/compaction, and IMServer epoch-consistent serving.
+eviction/compaction, snapshot provenance, and IMServer epoch-consistent
+serving.
 
 Mesh-touching tests use however many devices the process has — 1 in a
 plain run, 4 under scripts/ci.sh's forced-4-device pass, where the
 per-shard eviction/compaction paths run with real multi-device buffers.
 """
+import tempfile
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -458,6 +461,91 @@ def test_bounded_stream_keeps_cap_and_quality():
     # judge both seed sets on the unbounded (higher-theta) estimator
     sigma_b, sigma_u = unbounded.influences([sb.seeds, su.seeds])
     assert sigma_b >= 0.98 * sigma_u
+
+
+# ---------------------------------------------- snapshot provenance ----
+
+@pytest.mark.parametrize("layouts", ["flat->flat", "mesh->mesh",
+                                     "flat->mesh", "mesh->flat"])
+def test_stream_snapshot_restores_batch_key_provenance(layouts):
+    """A restored stream same-key repairs instead of topping up: after
+    snapshot/restore (across any store-layout pair), a delta + refresh
+    leaves the store seed-for-seed equal to the original stream's — and
+    to a fresh engine on the post-delta graph."""
+    src_mesh, dst_mesh = [theta_mesh() if side == "mesh" else None
+                          for side in layouts.split("->")]
+    g = small_graph()
+    cfg = IMMConfig(k=4, batch=64, max_theta=512, seed=7)
+    original = StreamEngine(g, cfg, mesh=src_mesh)
+    original.extend(256)
+    with tempfile.TemporaryDirectory() as d:
+        original.snapshot(d)
+        restored = StreamEngine(g, cfg, mesh=dst_mesh)
+        assert restored.restore(d)
+    assert restored.theta == 256 and restored.target_theta == 256
+    filled = np.flatnonzero(restored._slot_batch >= 0)
+    assert filled.size == 256          # every live row kept its provenance
+    rng_a, rng_b = (np.random.default_rng(22) for _ in range(2))
+    original.apply_delta(random_delta(original.graph, rng_a, inserts=3,
+                                      deletes=3, reweights=2))
+    restored.apply_delta(random_delta(restored.graph, rng_b, inserts=3,
+                                      deletes=3, reweights=2))
+    assert original.refresh() == 0 and restored.refresh() == 0
+    a, b = original.select(4), restored.select(4)
+    np.testing.assert_array_equal(a.seeds, b.seeds)
+    np.testing.assert_array_equal(np.asarray(original.store.counter),
+                                  np.asarray(restored.store.counter))
+    _assert_stream_equals_fresh(restored, cfg, k=4)
+
+
+def test_stream_snapshot_keeps_dead_row_provenance_single_device():
+    """A single-device snapshot taken mid-repair (stale rows resident)
+    restores the dead rows' provenance too, so the restored stream
+    finishes the same-key repair the saved one had pending."""
+    g = small_graph()
+    cfg = IMMConfig(k=4, batch=64, max_theta=512, seed=9)
+    stream = StreamEngine(g, cfg)
+    stream.extend(256)
+    rng = np.random.default_rng(23)
+    stream.apply_delta(random_delta(stream.graph, rng, inserts=2,
+                                    deletes=2, reweights=2))
+    assert stream.stale > 0
+    with tempfile.TemporaryDirectory() as d:
+        stream.snapshot(d)
+        restored = StreamEngine(stream.graph, cfg)
+        assert restored.restore(d)
+    assert restored.stale == stream.stale and restored.epoch == 1
+    assert restored.refresh() == 0
+    _assert_stream_equals_fresh(restored, cfg, k=4)
+
+
+def test_stream_restore_returns_false_when_empty():
+    g = small_graph()
+    with tempfile.TemporaryDirectory() as d:
+        assert not StreamEngine(g, IMMConfig(batch=32)).restore(d)
+
+
+def test_stream_restore_rejects_mismatched_batch_or_sampler():
+    """Saved batch keys only reproduce their rows under the identical
+    sampler composition and batch width — a mismatched restore must fail
+    loudly, not silently corrupt same-key repair."""
+    g = small_graph()
+    stream = StreamEngine(g, IMMConfig(batch=64, seed=1))
+    stream.extend(128)
+    with tempfile.TemporaryDirectory() as d:
+        stream.snapshot(d)
+        with pytest.raises(ValueError, match="batch"):
+            StreamEngine(g, IMMConfig(batch=32, seed=1)).restore(d)
+        with pytest.raises(ValueError, match="sampler"):
+            StreamEngine(g, IMMConfig(batch=64, seed=1,
+                                      backend="sparse")).restore(d)
+        # ... and against the graph identity: resident rows sampled on
+        # one edge set are not valid against another
+        stream.apply_delta(random_delta(
+            stream.graph, np.random.default_rng(24), deletes=2))
+        with pytest.raises(ValueError, match="different graph"):
+            StreamEngine(stream.graph,
+                         IMMConfig(batch=64, seed=1)).restore(d)
 
 
 # --------------------------------------------------------------- IMServer ----
