@@ -1,0 +1,59 @@
+"""One schema for every BENCH_*.json emitter.
+
+Every benchmark in this repo reports machine-readable rows with the same
+five core keys —
+
+    {"name": ..., "mesh": ..., "n": ..., "theta": ..., "wall_s": ...}
+
+— plus bench-specific extras (``model``/``backend`` for the sampler
+matrix, ``bytes_per_device`` for the sharding scaling bench, ...), so the
+benchmark-trajectory tooling can diff any two BENCH files without
+per-bench parsers.  ``mesh`` is the layout tag: ``"1"`` for
+single-device, ``"R"`` for a 1D theta mesh, ``"RxC"`` for a 2D
+theta x vertex mesh (`mesh_tag` derives it from a ``jax.sharding.Mesh``).
+
+Use `bench_row` to build rows and `write_bench` to emit the file — both
+validate the schema, so a bench cannot silently drop a core key.
+"""
+from __future__ import annotations
+
+import json
+
+SCHEMA_KEYS = ("name", "mesh", "n", "theta", "wall_s")
+
+
+def mesh_tag(mesh) -> str:
+    """Layout tag for a mesh: ``"1"`` (None), ``"R"`` (1D), ``"RxC"``
+    (2D, theta x vertex axis order as built by
+    ``configs.imm_snap.make_im_mesh``)."""
+    if mesh is None:
+        return "1"
+    sizes = tuple(int(mesh.shape[a]) for a in mesh.axis_names)
+    return "x".join(str(s) for s in sizes)
+
+
+def bench_row(name: str, *, n: int, theta: int, wall_s: float,
+              mesh=None, **extra) -> dict:
+    """One schema-conformant benchmark row.  ``mesh`` may be None, a
+    ``jax.sharding.Mesh``, or a pre-built tag string; ``extra`` keys ride
+    along after the core five."""
+    tag = mesh if isinstance(mesh, str) else mesh_tag(mesh)
+    row = {"name": str(name), "mesh": tag, "n": int(n),
+           "theta": int(theta), "wall_s": round(float(wall_s), 4)}
+    for k, v in extra.items():
+        if k in row:
+            raise ValueError(f"extra key {k!r} collides with the schema")
+        row[k] = v
+    return row
+
+
+def write_bench(path: str, rows: list[dict]) -> str:
+    """Validate and write BENCH rows; returns ``path``."""
+    for i, row in enumerate(rows):
+        missing = [k for k in SCHEMA_KEYS if k not in row]
+        if missing:
+            raise ValueError(f"bench row {i} is missing {missing}: {row}")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {path} ({len(rows)} rows)")
+    return path

@@ -11,18 +11,20 @@ are coin-for-coin identical), so the wall-clock spread is pure execution
 strategy.
 
 Emits machine-readable ``BENCH_4.json`` rows
-``{model, backend, n, theta, wall_s}`` next to a human table.
+``{name, mesh, n, theta, wall_s, model, backend}`` (the shared
+`benchmarks._emit` schema; ``name`` is the composed ``model/backend``)
+next to a human table.
 
     PYTHONPATH=src python -m benchmarks.sampler_matrix [--tiny] [--out F]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
+from benchmarks._emit import bench_row, write_bench
 from benchmarks._util import block, print_table
 from repro.configs.imm_snap import (
     SAMPLER_MATRIX_BACKENDS, SAMPLER_MATRIX_CELLS,
@@ -62,8 +64,9 @@ def run(n=1024, m=8192, theta=4096, batch=256, seed=0, log=print):
         wall = time.perf_counter() - t0
         mean_size = float(np.asarray(engine.store.sizes)
                           [:engine.store.count].mean())
-        bench.append({"model": model, "backend": backend, "n": n,
-                      "theta": theta, "wall_s": round(wall, 4)})
+        bench.append(bench_row(
+            f"{model}/{backend}", n=n, theta=theta, wall_s=wall,
+            model=model, backend=backend))
         rows.append([model, backend, n, theta, f"{wall:.3f}",
                      f"mean |RRR| {mean_size:.1f}"])
         log(f"[sampler-matrix] {engine.sampler_name}: {wall:.3f}s "
@@ -91,9 +94,7 @@ def main(argv=None):
         if getattr(args, k) is not None:
             cell[k] = getattr(args, k)
     bench = run(**cell)
-    with open(args.out, "w") as f:
-        json.dump(bench, f, indent=1)
-    print(f"wrote {args.out} ({len(bench)} rows)")
+    write_bench(args.out, bench)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,124 @@
+"""2D sharding scaling: what does each mesh layout buy per device?
+
+Runs the same IMM workload — ``extend(theta)`` + ``select(k)`` through
+the `InfluenceEngine` — on every store layout the available devices
+support: single-device, the 1D theta mesh, and every 2D ``Dt x Dv``
+factorization of the device count (``make_im_mesh``).  For each layout it
+reports wall time and **bytes_per_device** — the resident arena bytes on
+one device, the quantity the 2D refactor exists to shrink: a ``Dt x Dv``
+mesh holds ``ceil(theta / Dt)`` rows x ``ceil(n / Dv)`` vertex columns
+per device, so theta scales with the theta axis and graph size with the
+vertex axis *simultaneously*.  Answers are asserted seed-for-seed
+identical across every layout before anything is emitted — the bench
+doubles as the equivalence gate on real multi-device buffers.
+
+Emits ``BENCH_5.json`` rows
+``{name, mesh, n, theta, wall_s, bytes_per_device}`` (the shared
+`benchmarks._emit` schema) next to a human table.
+
+    PYTHONPATH=src python -m benchmarks.sharding_scaling [--tiny] [--out F]
+
+CI runs the ``--tiny`` smoke under a forced 8-device host platform so
+the 2x4 / 4x2 / 8x1 / 1x8 layouts all execute with real device buffers
+(see scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from benchmarks._emit import bench_row, mesh_tag, write_bench
+from benchmarks._util import block, print_table
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.graphs import rmat_graph
+
+
+def _layouts():
+    """Every mesh layout the local devices support: None, the 1D mesh,
+    and each 2D factorization Dt x Dv of the device count."""
+    d = jax.device_count()
+    yield None
+    yield make_im_mesh(d)
+    for dv in range(1, d + 1):
+        if d % dv == 0:
+            yield make_im_mesh((d // dv, dv))
+
+
+def _arena_bytes_per_device(store) -> int:
+    """Resident arena bytes on one device (max over devices: uneven
+    theta fills are possible mid-growth)."""
+    R = getattr(store, "R", None)
+    shards = getattr(R, "addressable_shards", None)
+    if not shards:
+        return int(R.nbytes)
+    return max(int(s.data.nbytes) for s in shards)
+
+
+def run(n=1024, m=8192, theta=4096, k=10, batch=256, seed=0, log=print):
+    g = rmat_graph(n, m, seed=seed)
+    cfg = IMMConfig(k=k, batch=batch, max_theta=max(theta, 1 << 20),
+                    seed=seed)
+    rows, bench, seeds_ref = [], [], None
+    for mesh in _layouts():
+        tag = mesh_tag(mesh)
+        kw = mesh_engine_kwargs(mesh)
+        # compile warmup on a throwaway engine (module-level jit caches
+        # are shared), so the timed run samples all theta rows from zero
+        warm = InfluenceEngine(g, cfg, **kw)
+        warm.extend(batch)
+        block(warm.select(k).seeds)
+        engine = InfluenceEngine(g, cfg, **kw)
+        t0 = time.perf_counter()
+        engine.extend(theta)
+        sel = engine.select(k)
+        block(engine.store.counter)
+        wall = time.perf_counter() - t0
+        if seeds_ref is None:
+            seeds_ref = np.asarray(sel.seeds)
+        else:
+            # the equivalence gate: every layout must answer identically
+            np.testing.assert_array_equal(seeds_ref, np.asarray(sel.seeds))
+        per_dev = _arena_bytes_per_device(engine.store)
+        bench.append(bench_row(
+            "sharding-scaling", mesh=tag, n=n, theta=theta, wall_s=wall,
+            bytes_per_device=per_dev))
+        shape = ("replicated" if mesh is None else
+                 f"{getattr(engine.store, 'cap_local', theta)} rows x "
+                 f"{getattr(engine.store, 'n_local', n)} cols/dev")
+        rows.append([tag, n, theta, f"{wall:.3f}", f"{per_dev:,}", shape])
+        log(f"[sharding-scaling] mesh={tag}: {wall:.3f}s, "
+            f"{per_dev:,} arena B/device")
+    print_table(
+        f"2D sharding scaling (n={n}, m={m}, theta={theta}, k={k}, "
+        f"{jax.device_count()} device(s); identical seeds asserted)",
+        ["mesh", "n", "theta", "wall_s", "arena B/dev", "per-device tile"],
+        rows)
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small graph, small theta")
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--m", type=int, default=8192)
+    ap.add_argument("--theta", type=int, default=4096)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--out", default="BENCH_5.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+    if args.tiny:
+        bench = run(n=192, m=1024, theta=256, k=4, batch=64)
+    else:
+        bench = run(n=args.n, m=args.m, theta=args.theta, k=args.k,
+                    batch=args.batch)
+    write_bench(args.out, bench)
+
+
+if __name__ == "__main__":
+    main()

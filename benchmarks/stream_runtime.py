@@ -15,19 +15,20 @@ so the wall-clock ratio is pure work saved.  A third row reports the
 bounded-memory mode (``max_rows`` eviction/compaction) and its selection
 quality relative to the unbounded store.
 
-Emits machine-readable ``BENCH_3.json`` rows ``{name, n, theta, wall_s}``
-(the repo's benchmark-trajectory seed format) next to a human table.
+Emits machine-readable ``BENCH_3.json`` rows
+``{name, mesh, n, theta, wall_s}`` (the shared `benchmarks._emit`
+schema) next to a human table.
 
     PYTHONPATH=src python -m benchmarks.stream_runtime [--tiny] [--out F]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
+from benchmarks._emit import bench_row, write_bench
 from benchmarks._util import block, print_table
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.core.store import StorePressurePolicy
@@ -58,8 +59,7 @@ def run(n=1024, m=8192, theta=4096, k=10, batch=256, ticks=5, ops=4,
     rows, bench = [], []
 
     def record(name, wall, extra=""):
-        bench.append({"name": name, "n": n, "theta": theta,
-                      "wall_s": round(wall, 4)})
+        bench.append(bench_row(name, n=n, theta=theta, wall_s=wall))
         rows.append([name, n, theta, f"{wall:.3f}", extra])
 
     # ---- streaming: invalidate + same-key repair per tick -----------------
@@ -146,9 +146,7 @@ def main(argv=None):
     else:
         bench, _ = run(n=args.n, m=args.m, theta=args.theta,
                        ticks=args.ticks)
-    with open(args.out, "w") as f:
-        json.dump(bench, f, indent=1)
-    print(f"wrote {args.out} ({len(bench)} rows)")
+    write_bench(args.out, bench)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,9 @@ import argparse
 import time
 
 from benchmarks._util import print_table, save_results
-from repro.configs.imm_snap import IMM_EXPERIMENTS, make_theta_mesh
+from repro.configs.imm_snap import (
+    IMM_EXPERIMENTS, make_im_mesh, mesh_engine_kwargs,
+)
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.graphs.datasets import scaled_snap
 
@@ -32,14 +34,14 @@ def _run_one(g, model, method, adaptive, k, max_theta, seed=0, mesh=None):
     t0 = time.perf_counter()
     # engine construction stays inside the timed window: it runs sampler
     # preprocessing (e.g. the dense logq build) that imm() always included
-    engine = InfluenceEngine(g, cfg, mesh=mesh)
+    engine = InfluenceEngine(g, cfg, **mesh_engine_kwargs(mesh))
     res = engine.run()
     return time.perf_counter() - t0, res
 
 
 def run(k: int = 20, max_theta: int = 4096, full: bool = False, mesh=None,
         log=print):
-    mesh = make_theta_mesh(mesh)
+    mesh = make_im_mesh(mesh)
     graphs = GRAPHS + (["Twitter7"] if full else [])
     rows, payload = [], {}
     for name in graphs:
@@ -86,7 +88,8 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true",
                     help="include Twitter7 (slow)")
     ap.add_argument("--mesh", default=None,
-                    help="theta shards for the RRR store: int, 'auto', or "
-                         "omit for single-device")
+                    help="RRR store mesh: int or 'auto' (1D theta), "
+                         "'RxC' (2D theta x vertex), or omit for "
+                         "single-device")
     a = ap.parse_args()
     run(k=a.k, max_theta=a.max_theta, full=a.full, mesh=a.mesh)

@@ -27,7 +27,9 @@ import time
 import numpy as np
 
 from repro.core import InfluenceEngine, IMMConfig
-from repro.configs.imm_snap import CAMPAIGN_KS, make_theta_mesh
+from repro.configs.imm_snap import (
+    CAMPAIGN_KS, make_im_mesh, mesh_engine_kwargs,
+)
 from repro.graphs.datasets import scaled_snap
 
 
@@ -56,10 +58,11 @@ def simulate_ic(graph, seeds, n_trials: int = 50, seed: int = 1):
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mesh", default=None,
-                    help="theta shards for the RRR store: int, 'auto' "
-                         "(all devices), or omit for single-device")
+                    help="RRR store mesh: int or 'auto' (1D theta "
+                         "sharding), 'RxC' e.g. '2x4' (2D theta x "
+                         "vertex), or omit for single-device")
     args = ap.parse_args(argv)
-    mesh = make_theta_mesh(args.mesh)
+    mesh = make_im_mesh(args.mesh)
 
     print("building YouTube-scale synthetic network (replica)...")
     g = scaled_snap("com-YouTube", 0.004)
@@ -71,7 +74,7 @@ def main(argv=None):
     for model in ("IC", "LT"):
         engine = InfluenceEngine(
             g, IMMConfig(k=max(ks), eps=0.5, model=model, max_theta=8192),
-            mesh=mesh)
+            **mesh_engine_kwargs(mesh))
         t0 = time.time()
         res = engine.run()
         t_solve = time.time() - t0

@@ -14,9 +14,10 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"
 
 # mesh code paths under a forced 4-device host mesh (paper C1 layouts):
-# ShardedStore, sharded selection, the engine equivalence tests, the
-# streaming subsystem (per-shard invalidation/eviction/compaction,
-# refresh-equivalence and snapshot-provenance cells), and the sampler
+# ShardedStore (1D and 2x2 theta x vertex), sharded selection (dense and
+# sharded-sparse), the engine equivalence tests, the streaming subsystem
+# (per-shard invalidation/eviction/compaction, refresh-equivalence and
+# cross-layout snapshot-provenance cells incl. 2D), and the sampler
 # model x backend x stable matrix (legacy goldens + per-cell mesh
 # equivalence) all run with the theta axis physically split 4 ways
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
@@ -27,6 +28,23 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
         tests/test_sampler_matrix.py \
         "tests/test_engine_store.py::test_sharded_strategy_through_engine_matches_local" \
         "tests/test_sharded_and_integration.py::test_select_dense_sharded_equals_local"
+
+# the 2D acceptance cell on a forced-8-device 2x4 mesh: theta over 2
+# shards x vertices over 4 — per-device arena buffers are (cap_local,
+# n/4), the full (theta, n) arena never exists on one device, and
+# select/influence answers are bitwise identical to the single-device
+# engine (tests/force_mesh_check.py asserts all of it)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python tests/force_mesh_check.py --mesh 2x4
+
+# sharding-scaling benchmark smoke (BENCH_5): every mesh factorization of
+# 8 forced devices (1, 8, 8x1, 4x2, 2x4, 1x8) runs the same workload with
+# identical seeds asserted, reporting wall time + arena bytes per device
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.sharding_scaling --tiny \
+        --out "${TMPDIR:-/tmp}/BENCH_5.json"
 
 # streaming benchmark smoke (tiny evolving graph; the non-slow analogue of
 # the full benchmarks/stream_runtime.py run) — exercises delta apply,

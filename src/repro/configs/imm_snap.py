@@ -8,11 +8,16 @@ Each entry pairs the SNAP graph stats with the paper's hyper-parameters
 answers after one sampling pass (examples/influence_campaign.py and the
 IMServer workload in launch/serve.py).
 
-``make_theta_mesh`` is the one mesh-configuration entry point every IM
+``make_im_mesh`` is the one mesh-configuration entry point every IM
 driver shares (launch/im_run.py, launch/serve.py,
-examples/influence_campaign.py, benchmarks/table3_runtime.py): it maps a
-``--mesh`` flag value onto a 1-D ``jax.sharding.Mesh`` over ``THETA_AXIS``
-that the `InfluenceEngine` uses to shard its RRR store (paper C1).
+examples/influence_campaign.py, benchmarks/table3_runtime.py,
+benchmarks/sharding_scaling.py): it maps a ``--mesh`` flag value — an
+int/"auto" (1D theta sharding) or ``"RxC"`` (2D theta x vertex) — onto a
+``jax.sharding.Mesh`` over ``THETA_AXIS``/``VERTEX_AXIS`` that the
+`InfluenceEngine` uses to shard its RRR store (paper C1, both axes);
+``mesh_engine_kwargs`` turns the mesh back into the engine's
+``mesh``/``theta_axes``/``vertex_axis`` keywords so drivers stay
+one-liners.  ``make_theta_mesh`` remains as the 1D-only spelling.
 """
 from __future__ import annotations
 
@@ -25,6 +30,10 @@ from repro.graphs.datasets import SNAP_STATS
 # ShardedStore, the sampler batch placement, and sharded selection all key
 # off this name
 THETA_AXIS = "data"
+# the mesh axis the vertex dimension shards over on 2D meshes — arena
+# columns, sampler traversal tables, counter partials, and selection all
+# key off this name
+VERTEX_AXIS = "vertex"
 
 
 def make_theta_mesh(shards=None, *, axis: str = THETA_AXIS):
@@ -48,6 +57,56 @@ def make_theta_mesh(shards=None, *, axis: str = THETA_AXIS):
     avail = jax.device_count()
     n = avail if shards == "auto" else min(int(shards), avail)
     return jax.make_mesh((n,), (axis,))
+
+
+def make_im_mesh(spec=None, *, theta_axis: str = THETA_AXIS,
+                 vertex_axis: str = VERTEX_AXIS):
+    """Resolve a ``--mesh`` flag into a 1D *or* 2D influence mesh.
+
+    Accepts everything `make_theta_mesh` does (None/0, int, ``"auto"``,
+    a pre-built ``Mesh``) plus the 2D spellings ``"RxC"`` (e.g.
+    ``"2x4"``: R theta shards x C vertex shards) and a ``(R, C)`` tuple.
+    2D shapes clip to the available device count the same graceful way
+    the 1D path does — the vertex axis shrinks first (theta sharding is
+    the cheaper win: no frontier exchange), down to a 1-tile mesh on one
+    device, which still runs the full 2D code path with identical
+    results.
+    """
+    if spec in (None, 0, "0", "none"):
+        return None
+    if hasattr(spec, "shape"):          # already a Mesh
+        return spec
+    if isinstance(spec, str) and "x" in spec.lower():
+        dt, dv = (int(p) for p in spec.lower().split("x", 1))
+    elif isinstance(spec, (tuple, list)):
+        dt, dv = int(spec[0]), int(spec[1])
+    else:
+        return make_theta_mesh(spec, axis=theta_axis)
+    if dt < 1 or dv < 1:
+        raise ValueError(f"mesh shape {dt}x{dv} must be >= 1x1")
+    import jax
+
+    avail = jax.device_count()
+    dt = max(min(dt, avail), 1)             # theta sharding survives...
+    dv = max(min(dv, avail // dt), 1)       # ...the vertex axis shrinks
+    return jax.make_mesh((dt, dv), (theta_axis, vertex_axis))
+
+
+def mesh_engine_kwargs(mesh) -> dict:
+    """`InfluenceEngine`/`StreamEngine` keyword arguments for a mesh from
+    `make_im_mesh`: ``{}`` for None, otherwise ``mesh`` + ``theta_axes``
+    (every axis that is not ``VERTEX_AXIS`` — so 1D meshes with custom
+    axis names work too), plus ``vertex_axis`` when the mesh carries
+    ``VERTEX_AXIS`` — drivers construct engines as ``Engine(g, cfg,
+    **mesh_engine_kwargs(mesh))`` with no shape dispatch of their own."""
+    if mesh is None:
+        return {}
+    names = tuple(mesh.axis_names)
+    kw = {"mesh": mesh,
+          "theta_axes": tuple(a for a in names if a != VERTEX_AXIS)}
+    if VERTEX_AXIS in names:
+        kw["vertex_axis"] = VERTEX_AXIS
+    return kw
 
 # seed-set sizes an influence campaign sweeps against one sampled store —
 # the engine memoizes per-k selections, so the sweep costs one selection

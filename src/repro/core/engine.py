@@ -127,8 +127,13 @@ class InfluenceEngine:
         a `ShardedStore` (theta axis partitioned over ``theta_axes``),
         samplers place their batches shard-local, and selection consumes
         the arena shards natively, psum-ing only reduced quantities.
-        ``vertex_axis`` optionally shards the vertex dimension inside
-        selection.  Passing a pre-built `ShardedStore` implies its mesh.
+        ``vertex_axis`` names a second mesh axis that shards the *vertex*
+        dimension end-to-end: arena columns, sampler traversal tables,
+        fused counter partials, and selection all hold only ``n / Dv``
+        vertex columns per device, so theta scales with the theta axis
+        and graph size with the vertex axis simultaneously (build the
+        mesh with ``configs.imm_snap.make_im_mesh``).  Passing a
+        pre-built `ShardedStore` implies its mesh and axes.
 
     A mesh-equipped engine is seed-for-seed identical to a single-device
     one for fixed ``cfg.seed`` — sharding changes layout, never results.
@@ -141,6 +146,7 @@ class InfluenceEngine:
         self.cfg = cfg if cfg is not None else IMMConfig()
         if mesh is None and isinstance(store, ShardedStore):
             mesh, theta_axes = store.mesh, store.theta_axes
+            vertex_axis = store.vertex_axis
         self.mesh = mesh
         self.theta_axes = tuple(theta_axes)
         self.vertex_axis = vertex_axis
@@ -149,7 +155,8 @@ class InfluenceEngine:
             self.store = store
         elif mesh is not None and self.cfg.store in ("auto", "sharded"):
             self.store = make_store("sharded", graph.n, mesh=mesh,
-                                    theta_axes=self.theta_axes)
+                                    theta_axes=self.theta_axes,
+                                    vertex_axis=vertex_axis)
         elif mesh is not None and self.cfg.store == "indices":
             # fail fast: the sharded pipeline (store, selection, snapshot
             # restore) is dense-only, and the late failure used to surface
@@ -168,7 +175,23 @@ class InfluenceEngine:
         self._sample = bind_sampler(
             get_sampler(self.sampler_name), graph, self.cfg,
             placement=getattr(self.store, "batch_sharding", None))
+        # C4 routed per-backend: when the arena is an IndexStore and the
+        # bound sampler can emit index lists natively (the sparse
+        # backend), batches flow sampler -> arena as lists — no (B, n)
+        # bitmap densification and no bitmap_to_indices pass at the write
+        self._reset_index_emission()
         self._select_cache: dict = {}
+
+    def _reset_index_emission(self) -> None:
+        """Recompute the native-emission width for the *current* store —
+        zero (bitmap path) unless the store is an IndexStore and the
+        bound sampler supports ``emit_l``.  Called at construction and
+        after every store swap (restore is elastic across store kinds, so
+        a stale width would route bitmap stores into the index path)."""
+        self._emit_l = 0
+        if (self.store.representation == "indices"
+                and getattr(self._sample, "supports_index_emit", False)):
+            self._emit_l = int(getattr(self.store, "l_pad", 4))
 
     # ------------------------------------------------------------ sampling
 
@@ -190,9 +213,29 @@ class InfluenceEngine:
         target = theta if cap is None else min(theta, cap)
         while self.store.count < target:
             self.key, sub = jax.random.split(self.key)
-            visited, counter, _ = self._sample(sub)
-            self.store.add_batch(visited, counter)
+            if self._emit_l:
+                rows_idx, counter = self._sample_index_batch(sub)
+                self.store.add_index_batch(rows_idx, counter)
+            else:
+                visited, counter, _ = self._sample(sub)
+                self.store.add_batch(visited, counter)
         return self.store.count
+
+    def _sample_index_batch(self, sub):
+        """Draw one batch natively as index lists (C4 per-backend).  A
+        row that comes back *full* may have been truncated at the
+        emission width — double ``emit_l`` and re-emit with the same key
+        (same coins, wider lists; bounded by O(log n) retries over the
+        engine's lifetime, since the width only ever grows).  The width
+        caps at ``n`` exactly (not the next power of two: the top_k
+        inside the conversion cannot exceed the bitmap's minor dimension,
+        and no set can hold more than n members)."""
+        while True:
+            rows_idx, counter, _ = self._sample(sub, emit_l=self._emit_l)
+            if (self._emit_l >= self.graph.n
+                    or not bool((rows_idx[:, -1] < self.graph.n).any())):
+                return rows_idx, counter
+            self._emit_l = min(self._emit_l * 2, self.graph.n)
 
     def sample_batch(self):
         """Advance the engine's PRNG stream by one batch without writing
@@ -244,6 +287,16 @@ class InfluenceEngine:
             return "indices"
         cfg = self.cfg
         if cfg.adaptive_representation and self.graph.n >= cfg.sparse_rep_min_n:
+            if isinstance(self.store, ShardedStore):
+                # C4 per *vertex shard*: each shard's index lists hold
+                # only its own n_local columns of every set, so both the
+                # width threshold and the bitmap width it competes with
+                # are local quantities — adding vertex shards makes the
+                # index representation win earlier
+                avg_cov, _ = self.store.coverage_stats()
+                return choose_representation(
+                    avg_cov, self.store.n_local,
+                    self.store.max_local_size(), cfg.switch_ratio)
             avg_cov, l_max = self.store.coverage_stats()
             return choose_representation(
                 avg_cov, self.graph.n, l_max, cfg.switch_ratio)
@@ -267,13 +320,21 @@ class InfluenceEngine:
             return hit
 
         if self.mesh is not None:
-            # the sharded strategies are dense-only (C1 partitions bitmaps);
-            # a ShardedStore view hands its native arena shards straight to
-            # the strategy (no resharding), a replicated BitmapStore view is
-            # scattered on entry by shard_map
+            # a ShardedStore view hands its native arena tiles straight to
+            # the strategy (no resharding), a replicated BitmapStore view
+            # is scattered on entry by shard_map.  The C4 adaptive choice
+            # runs here too (per vertex shard): when sets are sparse
+            # enough, selection consumes a tile-local index view through
+            # the sharded-sparse strategy instead of the bitmaps
             if self.store.representation != "bitmap":
                 raise ValueError("sharded selection requires a bitmap store")
-            rep, view, layout = "bitmap", self.store.view(), "sharded"
+            rep = self._choose_representation()
+            if rep == "indices" and isinstance(self.store, ShardedStore):
+                view = self.store.index_view(
+                    l_pad_for(self.store.max_local_size()))
+                layout = "sharded-sparse"
+            else:
+                rep, view, layout = "bitmap", self.store.view(), "sharded"
         else:
             rep = self._choose_representation()
             if rep == "indices" and self.store.representation == "bitmap":
@@ -364,8 +425,10 @@ class InfluenceEngine:
         # single-device store (cfg.store="bitmap" etc.) keep their kind
         mesh = self.mesh if isinstance(self.store, ShardedStore) else None
         self.store = store_from_state(
-            tree["store"], mesh=mesh, theta_axes=self.theta_axes)
+            tree["store"], mesh=mesh, theta_axes=self.theta_axes,
+            vertex_axis=self.vertex_axis if mesh is not None else None)
         self.key = jnp.asarray(tree["key"])
+        self._reset_index_emission()
         self._select_cache.clear()
 
     def restore(self, directory: str, *, tag: str = "engine") -> bool:

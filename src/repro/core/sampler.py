@@ -61,14 +61,21 @@ tests/test_sampler_matrix.py).
 
 Every bound sampler returns the batch as **visited bitmaps** ``(B, n)
 uint8`` plus the fused in-place counter contribution (paper C3) and the
-batch roots.  Factories accept an optional ``placement`` (a
-``jax.sharding.NamedSharding`` for the ``(B, n)`` output — a
-`ShardedStore` hands out its ``batch_sharding``): the constraint is
-applied to the initial frontier state inside jit, so GSPMD partitions the
-whole generation loop over the batch axis and each device samples the
-rows its arena shard will store (paper C1).  PRNG values are position- or
-identity-keyed, so placement changes layout only — sampled sets are
-bitwise identical on any mesh.
+batch roots (the sparse backend can alternatively emit index lists
+natively — C4 routed per-backend, see ``emit_l``).  Factories accept an
+optional ``placement`` (a ``jax.sharding.NamedSharding`` for the
+``(B, n)`` output — a `ShardedStore` hands out its ``batch_sharding``):
+the constraint is applied to the initial frontier state inside jit, so
+GSPMD partitions the whole generation loop over the batch axis — and,
+when the placement is 2D (``P(theta_axes, vertex_axis)``), over the
+vertex axis too: each device samples exactly the (row block, vertex
+block) tile its arena shard will store (paper C1, both axes).  The coin
+backends additionally pin their graph tables to the same vertex blocks
+(`_shard_cols`): the dense ``logq`` matrix is column-partitioned so each
+device expands only its own vertex block from the all-gathered frontier
+— the frontier exchange is the only cross-shard traffic in the loop.
+PRNG values are position- or identity-keyed, so placement changes layout
+only — sampled sets are bitwise identical on any mesh shape.
 """
 from __future__ import annotations
 
@@ -81,12 +88,70 @@ from typing import Callable
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core.adaptive import bitmap_to_indices
 from repro.core.store import next_pow2
 from repro.graphs.csr import Graph, dense_ic_matrix, edge_arrays, wc_edge_probs
 from repro.kernels import ops as kops
 
 _LOGQ_CLAMP = -30.0  # exp(-30) ~ 1e-13: treat p=1 edges as prob 1-1e-13
+
+
+# ------------------------------------------- vertex-partitioned tables ----
+#
+# With a 2D batch placement (``P(theta_axes, vertex_axis)``, handed out by
+# a 2D `ShardedStore`), the traversal state is column-partitioned over the
+# vertex axis — so the graph tables the frontier step reads should be too,
+# or every step would re-broadcast them.  ``_shard_cols`` pins a table's
+# trailing axis to the placement's vertex axis (the same contiguous block
+# layout as ``repro.graphs.partition.vertex_partition``, which GSPMD uses
+# for trailing-dim shardings): the dense ``logq`` matrix becomes
+# column-blocked, so each device computes activations only for its own
+# vertex block from the all-gathered frontier — the frontier exchange is
+# the only cross-shard traffic in the loop — and the CSC edge arrays
+# become contiguous dst-block slabs (CSC order is dst-sorted, so an even
+# split of the edge list approximates the dst blocks).  PRNG values are
+# position- or identity-keyed, so all of this changes layout only: the
+# sampled sets stay bitwise identical on any mesh shape.
+
+def _vertex_axis_of(placement):
+    """The vertex (column) mesh axis of a 2D batch placement, or None."""
+    if placement is None:
+        return None
+    spec = tuple(placement.spec)
+    return spec[1] if len(spec) > 1 else None
+
+
+def _shard_cols(x, placement):
+    """Constrain a graph table's trailing axis to the placement's vertex
+    axis (no-op for 1D/absent placements): ``(n, n)`` tables become
+    column-blocked, ``(m,)``/``(n,)`` tables contiguous slabs."""
+    vx = _vertex_axis_of(placement)
+    if vx is None:
+        return x
+    spec = PartitionSpec(*((None,) * (x.ndim - 1) + (vx,)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(placement.mesh, spec))
+
+
+def _pin_replicated(x, placement):
+    """Pin a freshly drawn threefry array to the replicated layout under
+    a 2D placement.  The container's jax runs the *non-partitionable*
+    threefry (``jax_threefry_partitionable=False``), whose generator
+    GSPMD may lower differently per sharding context — an unpinned
+    ``uniform``/``randint`` inside a vertex-sharded computation produces
+    *different values* than the single-device trace, silently breaking
+    the layout-independent key stream.  Replicating the draw (generation
+    is redundant per device; the masked traversal compute downstream
+    stays partitioned) restores the historical stream bitwise.  The
+    identity-keyed stable coins never hit this: they are elementwise
+    counter-mode hashes of (key, row, vertex/edge id), which partition
+    cleanly over both mesh axes with no pin."""
+    if _vertex_axis_of(placement) is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(placement.mesh, PartitionSpec()))
 
 
 # ---------------------------------------------------------------- models ----
@@ -245,7 +310,8 @@ def _setup(key, batch, n_nodes, positions, placement, stable):
     ``positions`` (stable only) gathers a row subset of the full batch.
     """
     kroot, kstep = jax.random.split(key)
-    roots_full = jax.random.randint(kroot, (batch,), 0, n_nodes)
+    roots_full = _pin_replicated(
+        jax.random.randint(kroot, (batch,), 0, n_nodes), placement)
     if not stable:
         if positions is not None:
             raise ValueError(
@@ -289,6 +355,11 @@ def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
     """
     n = logq.shape[0]
     max_steps = max_steps or n
+    # 2D placement: column-block the activation matrix over the vertex
+    # axis once, outside the loop — each device then owns the logq
+    # columns of its own vertex block, and the per-step mat-vec needs
+    # only the all-gathered frontier (the frontier exchange)
+    logq = _shard_cols(logq, placement)
     kstep, roots, visited0, bb = _setup(
         key, batch, n, positions, placement, stable)
     uids = jnp.arange(n, dtype=jnp.uint32)[None, :] if stable else None
@@ -304,7 +375,8 @@ def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
             kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
             coin = _u01(_mix32(_mix32(uids ^ kd[0]) ^ bb ^ kd[1]))
         else:
-            coin = jax.random.uniform(sub, frontier.shape)
+            coin = _pin_replicated(
+                jax.random.uniform(sub, frontier.shape), placement)
         if kernel:
             new = kops.ic_frontier_step(
                 frontier, visited, logq, coin,
@@ -323,10 +395,10 @@ def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
 
 
 @partial(jax.jit, static_argnames=("n_nodes", "batch", "max_steps", "stable",
-                                   "placement"))
+                                   "placement", "emit_l"))
 def _sparse_loop(key, edge_src, edge_dst, edge_prob, positions=None, *,
                  n_nodes: int, batch: int, max_steps: int = 0,
-                 stable: bool = False, placement=None):
+                 stable: bool = False, placement=None, emit_l: int = 0):
     """CSC edge-list frontier expansion (the ``sparse`` backend).
 
     An edge ``u -> v`` is consulted when ``v`` is in the reverse
@@ -335,9 +407,25 @@ def _sparse_loop(key, edge_src, edge_dst, edge_prob, positions=None, *,
     Stable coins key on the edge's *identity* ``u * n + v`` rather than
     its list position, so inserts/deletes renumber nothing; padded
     never-firing edges (see `_pad_edges_pow2`) are likewise invisible.
+
+    ``emit_l > 0`` emits the batch *natively as index lists* ``(K,
+    emit_l) int32`` (ascending, sentinel ``n_nodes``) instead of
+    bitmaps — the C4 representation routed per-backend: the conversion
+    fuses into this jit (the transient visited state never round-trips
+    through an arena-sized bitmap write), and an `IndexStore` ingests the
+    rows as-is (`add_index_batch`).  The coin stream is untouched, so
+    emitted rows equal the bitmap rows converted after the fact, bit for
+    bit.  Rows with more than ``emit_l`` members are truncated — callers
+    grow ``emit_l`` and re-emit when a row comes back full (same key,
+    same coins, wider lists).
     """
     m = edge_src.shape[0]
     max_steps = max_steps or n_nodes
+    # 2D placement: slab the CSC edge arrays over the vertex axis (CSC
+    # order is dst-sorted, so contiguous slabs track the dst blocks)
+    edge_src = _shard_cols(edge_src, placement)
+    edge_dst = _shard_cols(edge_dst, placement)
+    edge_prob = _shard_cols(edge_prob, placement)
     kstep, roots, visited0, bb = _setup(
         key, batch, n_nodes, positions, placement, stable)
     uid = ((edge_src.astype(jnp.uint32) * jnp.uint32(n_nodes)
@@ -355,8 +443,9 @@ def _sparse_loop(key, edge_src, edge_dst, edge_prob, positions=None, *,
             coin = _u01(_mix32(_mix32(uid ^ kd[0]) ^ bb ^ kd[1]))
             hit = coin < edge_prob[None, :]
         else:
-            hit = jax.random.uniform(
-                sub, (batch, m)) < edge_prob[None, :]
+            hit = _pin_replicated(
+                jax.random.uniform(sub, (batch, m)),
+                placement) < edge_prob[None, :]
         # reverse traversal: edge u->v is usable when v is in the frontier
         live = frontier[:, edge_dst] & hit & ~visited[:, edge_src]
         # scatter-or into src — the segment_max counter-update pattern (C1)
@@ -368,6 +457,9 @@ def _sparse_loop(key, edge_src, edge_dst, edge_prob, positions=None, *,
         cond, body, (jnp.int32(0), visited0, visited0, kstep)
     )
     counter = visited.sum(axis=0, dtype=jnp.int32)
+    if emit_l:
+        return bitmap_to_indices(visited.astype(jnp.uint8),
+                                 emit_l), counter, roots
     return visited.astype(jnp.uint8), counter, roots
 
 
@@ -383,6 +475,13 @@ def _walk_loop(key, dst_offsets, in_src, in_cum, in_total, positions=None, *,
     cumulative weights selects the in-neighbor; revisits terminate.
     Stable draws key on the row identity so a row's walk is a function
     of itself plus the per-dst segments it visits.
+
+    Under a 2D placement the visited rows are still born as shard-local
+    column slices (the ``placement`` constraint partitions the one-hot
+    scatter), but the walk tables stay replicated: a walk's next gather
+    is data-dependent and uniformly random over vertices, so there is no
+    block locality for a column partition to exploit — tables are
+    O(m + n) scalars, not O(n^2).
     """
     n = dst_offsets.shape[0] - 1
     max_steps = max_steps or n
@@ -418,7 +517,8 @@ def _walk_loop(key, dst_offsets, in_src, in_cum, in_total, positions=None, *,
             kd = jnp.asarray(sub, jnp.uint32).reshape(-1)
             r = _u01(_mix32(_mix32(brow ^ kd[0]) ^ kd[1]))
         else:
-            r = jax.random.uniform(sub, (batch,))
+            r = _pin_replicated(jax.random.uniform(sub, (batch,)),
+                                placement)
         total = in_total[cur]
         go = jnp.logical_and(active, r < total)
         nxt = jax.vmap(pick_in_neighbor)(cur, r)
@@ -558,12 +658,19 @@ def _bind_sparse(model, graph: Graph, cfg, *, stable, placement):
         # positional sampler keeps the exact edge count (seed parity
         # with the historical IC-sparse stream)
         src, dst, prob = _pad_edges_pow2(src, dst, prob)
-        return lambda key, positions=None: _sparse_loop(
+        fn = lambda key, positions=None, emit_l=0: _sparse_loop(
             key, src, dst, prob, positions, n_nodes=graph.n,
-            batch=cfg.batch, stable=True, placement=placement)
-    return lambda key: _sparse_loop(
-        key, src, dst, prob, n_nodes=graph.n, batch=cfg.batch,
-        placement=placement)
+            batch=cfg.batch, stable=True, placement=placement,
+            emit_l=emit_l)
+    else:
+        fn = lambda key, emit_l=0: _sparse_loop(
+            key, src, dst, prob, n_nodes=graph.n, batch=cfg.batch,
+            placement=placement, emit_l=emit_l)
+    # the engine routes C4 per-backend through this tag: an IndexStore
+    # asks a tagged sampler for native index rows (`emit_l`) instead of
+    # densifying to bitmaps and converting at the arena write
+    fn.supports_index_emit = True
+    return fn
 
 
 def _bind_walk(model, graph: Graph, cfg, *, stable, placement):

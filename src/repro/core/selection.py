@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.graphs.partition import vertex_partition
 from repro.sparse.scatter import bincount_weighted
 
 
@@ -163,31 +164,69 @@ def select_sparse(R_idx, valid, n: int, k: int, method: str = "rebuild"):
 
 # -------------------------------------------------------------- sharded ----
 
+def _vertex_sharded_pick(counter, alive, n, vertex_axis, member_local):
+    """Greedy argmax over a *vertex-sharded* counter -> (v, covered).
+
+    Runs inside shard_map on every (theta, vertex) tile: mask padding
+    columns (global id >= ``n``) out of the race, take the local argmax,
+    resolve the global winner from ``Dv`` all-gathered (value, global id)
+    scalar pairs, then test membership of the winner tile-locally —
+    ``member_local(lv)`` returns the ``(rows_local,) bool`` membership of
+    in-range local id ``lv`` (its result is discarded for out-of-block
+    winners) — and psum-or the bits over the vertex axis.  Shared by the
+    dense and sharded-sparse strategies so their argmax/pad/tie-break
+    semantics can never diverge.
+    """
+    nloc = counter.shape[0]
+    shard = jax.lax.axis_index(vertex_axis)
+    if n is not None:
+        gids = shard * nloc + jnp.arange(nloc)
+        counter = jnp.where(gids < n, counter, -1.0)
+    vloc = jnp.argmax(counter)
+    val = counter[vloc]
+    gidx = shard * nloc + vloc
+    vals = jax.lax.all_gather(val, vertex_axis)
+    gidxs = jax.lax.all_gather(gidx, vertex_axis)
+    v = gidxs[jnp.argmax(vals)].astype(jnp.int32)
+    lv = v - shard * nloc
+    member = member_local(jnp.clip(lv, 0, nloc - 1))
+    member = jnp.where((lv >= 0) & (lv < nloc), member, False)
+    member = jax.lax.psum(member.astype(jnp.int32), vertex_axis) > 0
+    return v, member & alive
+
+
 def select_dense_sharded(mesh, R, valid, k: int, *,
                          theta_axes=("data",), vertex_axis=None,
-                         method: str = "rebuild"):
+                         method: str = "rebuild", n: int | None = None):
     """EfficientIMM selection with the theta axis sharded over ``theta_axes``
     (paper C1) and, optionally, the vertex axis over ``vertex_axis``.
 
-    ``R (theta, n) uint8`` and ``valid (theta,) bool`` enter with specs
-    ``P(theta_axes, vertex_axis)`` / ``P(theta_axes)`` — a `ShardedStore`
-    view already carries exactly this layout (with ``vertex_axis=None``),
-    so its arena shards are consumed in place; replicated arrays are
+    ``R (theta, n_pad) uint8`` and ``valid (theta,) bool`` enter with
+    specs ``P(theta_axes, vertex_axis)`` / ``P(theta_axes)`` — a
+    `ShardedStore` view already carries exactly this layout (1D stores
+    with ``vertex_axis=None``, 2D stores with the vertex axis resident),
+    so its arena tiles are consumed in place; replicated arrays are
     scattered on entry.  ``valid`` may be any mask, not just a prefix —
-    sharded stores fill each shard independently.
+    sharded stores fill each shard independently.  ``n`` is the real
+    vertex count: on 2D layouts the column dimension is padded to
+    ``Dv * ceil(n / Dv)`` and the pad columns must never win the argmax
+    (they are all-zero, but an all-zero round would otherwise pick one).
 
-    Inside shard_map each device owns a ``(theta_local, n[_local])`` block.
-    Per greedy round only reduced quantities cross devices: the ``(n,)``
-    counter ``psum`` (the paper's atomic global counter) and the scalar
-    gain — never arena rows.  The greedy argmax is computed redundantly on
-    every device (cheap, avoids a broadcast).
+    Inside shard_map each device owns a ``(theta_local, n_local)`` tile.
+    Per greedy round only reduced quantities cross devices: the counter
+    ``psum`` over the theta axis (the paper's atomic global counter,
+    staying vertex-sharded), the per-vertex-shard argmax candidates
+    (``all_gather`` of ``Dv`` scalars), the covered-rows bits psum-or over
+    the vertex axis, and the scalar gain — never arena rows or columns.
+    The greedy argmax is computed redundantly on every device (cheap,
+    avoids a broadcast).
 
     ``method="rebuild"`` re-reduces the surviving local rows every round
     (C5).  ``method="decrement"`` is the true decremental update executed
-    shard-locally: each device keeps a partial counter over its own rows
-    and subtracts the contribution of its newly-covered rows, so the
-    running global counter is ``psum`` of partials.  Both are exact over
-    integer-valued f32 counts and return identical selections.
+    tile-locally: each device keeps a partial counter over its own rows
+    and columns and subtracts the contribution of its newly-covered rows,
+    so the running global counter is ``psum`` of partials.  Both are
+    exact over integer-valued f32 counts and return identical selections.
 
     Returns replicated ``(seeds (k,) int32, covered_frac () f32,
     gains (k,) int32)``.
@@ -202,27 +241,11 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
         def pick(counter, alive):
             """Greedy argmax over the global counter -> (v, covered)."""
             if vertex_axis is not None:
-                # vertex-sharded counter: argmax over local block, then a
-                # global argmax over (value, global index) pairs.
-                nloc = counter.shape[0]
-                vloc = jnp.argmax(counter)
-                val = counter[vloc]
-                shard = jax.lax.axis_index(vertex_axis)
-                gidx = shard * nloc + vloc
-                vals = jax.lax.all_gather(val, vertex_axis)
-                gidxs = jax.lax.all_gather(gidx, vertex_axis)
-                v = gidxs[jnp.argmax(vals)].astype(jnp.int32)
-                member = (R_local[:, jnp.clip(v - shard * nloc, 0, nloc - 1)]
-                          > 0)
-                member = jnp.where(
-                    (v >= shard * nloc) & (v < (shard + 1) * nloc),
-                    member, False)
-                member = jax.lax.psum(
-                    member.astype(jnp.int32), vertex_axis) > 0
-            else:
-                v = jnp.argmax(counter).astype(jnp.int32)
-                member = R_local[:, v] > 0
-            return v, member & alive
+                return _vertex_sharded_pick(
+                    counter, alive, n, vertex_axis,
+                    lambda lv: R_local[:, lv] > 0)
+            v = jnp.argmax(counter).astype(jnp.int32)
+            return v, (R_local[:, v] > 0) & alive
 
         if method == "rebuild":
             def body(i, state):
@@ -265,6 +288,100 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
         local_select, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
     )
     return fn(R, valid)
+
+
+def select_sparse_sharded(mesh, R_idx, valid, n: int, k: int, *,
+                          theta_axes=("data",), vertex_axis=None,
+                          method: str = "rebuild"):
+    """Greedy max-coverage over *sharded index lists* — the C4 sparse
+    representation on a 1D or 2D mesh, lifting the old bitmap-only
+    restriction of the sharded pipeline.
+
+    ``R_idx (Dt * cap_local, Dv * l_pad) int32`` enters with spec
+    ``P(theta_axes, vertex_axis)``: tile ``(t, v)`` holds, for each of
+    its rows, the *local* ids (``0 .. n_local-1``, sentinel ``n_local``)
+    of the set members that fall inside vertex block ``v`` — exactly what
+    `ShardedStore.index_view` emits (each vertex shard applied the C4
+    width to its own columns).  ``valid (Dt * cap_local,) bool`` is
+    ``P(theta_axes)``.
+
+    Per greedy round each tile bincounts its own lists into an
+    ``(n_local,)`` partial; the psum over the theta axis keeps the
+    counter vertex-sharded, the argmax crosses the vertex axis as ``Dv``
+    (value, index) scalars, and membership of the winner is a tile-local
+    list scan psum-or'ed over the vertex axis — reduced quantities only,
+    as in the dense strategy.  Selections are identical to the dense
+    strategies over the same rows (exact integer counts).
+
+    Returns replicated ``(seeds (k,) int32, covered_frac () f32,
+    gains (k,) int32)``.
+    """
+    axes = tuple(theta_axes)
+    if method not in ("rebuild", "decrement"):
+        raise ValueError(f"unknown method {method}")
+    Dv = int(mesh.shape[vertex_axis]) if vertex_axis else 1
+    # the canonical vertex-block layout — must match the tiles
+    # ShardedStore.index_view emitted, or local ids mean the wrong vertex
+    n_local = vertex_partition(n, Dv).block
+
+    def local_select(R_local, valid_local):
+        def counter_of(alive):
+            partial = bincount_weighted(
+                R_local, alive.astype(jnp.float32)[:, None], n_local)
+            return jax.lax.psum(partial, axes)
+
+        def pick(counter, alive):
+            if vertex_axis is not None:
+                return _vertex_sharded_pick(
+                    counter, alive, n, vertex_axis,
+                    lambda lv: (R_local == lv).any(axis=1))
+            v = jnp.argmax(counter).astype(jnp.int32)
+            return v, ((R_local == v).any(axis=1)) & alive
+
+        def dec_of(covered):
+            return bincount_weighted(
+                R_local, covered.astype(jnp.float32)[:, None], n_local)
+
+        if method == "rebuild":
+            def body(i, state):
+                alive, seeds, gains = state
+                v, covered = pick(counter_of(alive), alive)
+                gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+                return (alive & ~covered,
+                        seeds.at[i].set(v), gains.at[i].set(gain))
+
+            alive, seeds, gains = jax.lax.fori_loop(
+                0, k, body,
+                (valid_local, jnp.zeros((k,), jnp.int32),
+                 jnp.zeros((k,), jnp.int32)),
+            )
+        else:
+            partial0 = bincount_weighted(
+                R_local, valid_local.astype(jnp.float32)[:, None], n_local)
+
+            def body(i, state):
+                alive, partial, seeds, gains = state
+                v, covered = pick(jax.lax.psum(partial, axes), alive)
+                gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+                partial = partial - dec_of(covered)
+                return (alive & ~covered, partial,
+                        seeds.at[i].set(v), gains.at[i].set(gain))
+
+            alive, _, seeds, gains = jax.lax.fori_loop(
+                0, k, body,
+                (valid_local, partial0, jnp.zeros((k,), jnp.int32),
+                 jnp.zeros((k,), jnp.int32)),
+            )
+        n_valid = jnp.maximum(
+            jax.lax.psum(valid_local.sum(dtype=jnp.float32), axes), 1.0)
+        return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
+
+    fn = shard_map(
+        local_select, mesh=mesh,
+        in_specs=(P(axes, vertex_axis), P(axes)),
+        out_specs=(P(), P(), P()),
+    )
+    return fn(R_idx, valid)
 
 
 def greedy_select(R_or_idx, valid, k: int, *, n: int | None = None,
@@ -328,6 +445,18 @@ def _sharded_strategy(method):
             raise ValueError("sharded selection needs a mesh")
         return select_dense_sharded(
             mesh, view.R, view.valid, k,
+            theta_axes=theta_axes, vertex_axis=vertex_axis, method=method,
+            n=view.n)
+    return run
+
+
+def _sharded_sparse_strategy(method):
+    def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
+            **_):
+        if mesh is None:
+            raise ValueError("sharded selection needs a mesh")
+        return select_sparse_sharded(
+            mesh, view.R, view.valid, view.n, k,
             theta_axes=theta_axes, vertex_axis=vertex_axis, method=method)
     return run
 
@@ -336,6 +465,7 @@ for _m in ("rebuild", "decrement"):
     register_selection(f"{_m}-dense", _dense_strategy(_m))
     register_selection(f"{_m}-sparse", _sparse_strategy(_m))
     register_selection(f"{_m}-sharded", _sharded_strategy(_m))
+    register_selection(f"{_m}-sharded-sparse", _sharded_sparse_strategy(_m))
 
 
 # ------------------------------------------- Ripples-faithful baseline ----

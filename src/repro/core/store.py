@@ -20,11 +20,14 @@ reshaping it.  This module makes that explicit:
     ``n``), for regimes where sets are sparse from the start (LT walks,
     huge graphs); widens ``L`` by power-of-two steps as larger sets arrive.
   * ``ShardedStore`` — the paper's C1 partitioning end-to-end: a bitmap
-    arena whose theta axis is sharded across a ``jax.sharding.Mesh``.
-    Every device owns a ``(cap_local, n)`` block; batch writes, fused
-    counting, and per-shard growth all happen device-locally inside a
-    donated ``shard_map`` kernel, so the full ``(theta, n)`` arena never
-    exists on any single device and theta scales with device count.
+    arena sharded across a ``jax.sharding.Mesh`` — the theta axis over
+    ``theta_axes`` and, on 2D meshes, the vertex axis over
+    ``vertex_axis``.  Every device owns a ``(cap_local, n_local)`` tile
+    (``n_local = ceil(n / Dv)``); batch writes, fused counting, the row
+    lifecycle and per-shard growth all happen device-locally inside
+    donated ``shard_map`` kernels, so the full ``(theta, n)`` arena
+    never exists on any single device — theta scales with the theta axis
+    and graph size with the vertex axis (docs/sharding.md).
 
 All backends preserve exact equivalence with the historical pad-to-pow2
 selection inputs: padding rows are all-zero (bitmap) / all-sentinel
@@ -68,6 +71,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.adaptive import bitmap_to_indices
+from repro.graphs.partition import vertex_partition
 
 MIN_CAPACITY = 16     # matches the historical pad floor (1 << 4)
 MIN_INDEX_PAD = 4     # matches the historical l_pad floor (1 << 2)
@@ -124,8 +128,10 @@ class StoreView:
     ``representation == "indices"``.  For single-device stores, rows at
     index >= ``count`` are padding and ``valid`` is the prefix mask
     ``arange(capacity) < count``.  For `ShardedStore` views, ``R`` is the
-    *sharded* global arena (``P(theta_axes, None)``), valid rows are a
-    per-shard prefix rather than a global one, and ``valid`` (sharded
+    *sharded* global arena (``P(theta_axes, vertex_axis)``; column count
+    ``n_pad >= n`` on 2D meshes — pad columns are all-zero, and index
+    views hold *local* vertex ids per tile), valid rows are a per-shard
+    prefix rather than a global one, and ``valid`` (sharded
     ``P(theta_axes)``) masks exactly the rows each shard has filled —
     consumers must always mask by ``valid`` instead of assuming
     contiguity.
@@ -596,6 +602,36 @@ class IndexStore(_ArenaBase):
         self._finish_add(batch_sizes, counter)
         return slots
 
+    def add_index_batch(self, rows, counter=None) -> np.ndarray:
+        """Append pre-converted index rows ``(B, L) int32`` (ascending,
+        sentinel >= n) — the native-emission write path (C4 routed
+        per-backend: a sparse-backend sampler emits lists directly via
+        ``emit_l`` and no ``(B, n)`` bitmap ever materializes between the
+        sampler and the arena).  ``counter`` is the sampler's fused
+        ``(n,) int32`` contribution (recomputed by scatter when absent);
+        the arena widens to ``L`` if needed and narrower rows backfill
+        with the sentinel.  Returns the landing slots, like `add_batch`.
+        """
+        rows = jnp.asarray(rows, jnp.int32)
+        B, L = int(rows.shape[0]), int(rows.shape[1])
+        batch_sizes = (rows < self.n).sum(axis=1, dtype=jnp.int32)
+        self._widen(L)
+        if L < self.l_pad:
+            rows = jnp.concatenate(
+                [rows, jnp.full((B, self.l_pad - L), self.n, jnp.int32)],
+                axis=1)
+        # normalize any emitter sentinel (>= n) to the store's (== n)
+        rows = jnp.where(rows < self.n, rows, self.n)
+        self._ensure_room(B)
+        self._grow_rows(self.count + B)
+        if counter is None:
+            counter = (jnp.zeros((self.n,), jnp.int32)
+                       .at[rows.reshape(-1)].add(1, mode="drop"))
+        slots = np.arange(self.count, self.count + B, dtype=np.int64)
+        self.R = _write_rows(self.R, rows, jnp.int32(self.count))
+        self._finish_add(batch_sizes, counter)
+        return slots
+
     def view(self) -> StoreView:
         return StoreView("indices", self.R, self._valid(), self.n, self.count)
 
@@ -636,28 +672,38 @@ def _sharded_ones(shape, dtype, sharding):
                    out_shardings=sharding)()
 
 
+def _psum_if(x, axis):
+    """``psum`` over a mesh axis when one is given (the vertex axis is
+    None on 1D meshes, where every per-row reduction is already whole)."""
+    return x if axis is None else jax.lax.psum(x, axis)
+
+
 @functools.lru_cache(maxsize=None)
-def _sharded_write_kernels(mesh, theta_axes):
+def _sharded_write_kernels(mesh, theta_axes, vertex_axis):
     """Compiled per-(mesh, axes) store kernels, shared across stores.
 
     Returns ``(write, valid)``:
-      * ``write(R, sizes, counter, counts, rows, incs)`` — every shard
-        writes its ``(b, n)`` block of the batch into its local arena at
-        its own row offset ``counts[shard]``, fuses the local size/counter
-        updates (C3 done shard-locally), and advances its count by
-        ``incs[shard]``.  ``R``/``sizes``/``counter``/``counts`` are
-        donated — the store's previous buffers are dead after the call.
+      * ``write(R, sizes, counter, counts, rows, incs)`` — every
+        (theta-shard, vertex-shard) tile writes its ``(b, n_local)`` block
+        of the batch into its local arena tile at its theta shard's row
+        offset ``counts[shard]``, fuses the local size/counter updates (C3
+        done tile-locally; on a 2D mesh the per-row sizes are the one
+        vertex-axis psum — a ``(b,)`` int vector, never arena columns),
+        and advances the theta shard's count by ``incs[shard]``.
+        ``R``/``sizes``/``counter``/``counts`` are donated — the store's
+        previous buffers are dead after the call.
       * ``valid(counts, sizes)`` — per-shard prefix mask
         ``local_iota < counts[shard]`` as a global ``P(theta_axes)`` bool
         array (``sizes`` is only a shape donor).
     """
-    sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
+    sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def write(R, sizes, counter, counts, rows, incs):
         start = counts[0]
         R = jax.lax.dynamic_update_slice(R, rows, (start, jnp.int32(0)))
         live = jnp.arange(rows.shape[0], dtype=jnp.int32) < incs[0]
-        row_sizes = jnp.where(live, rows.sum(axis=1, dtype=jnp.int32), 0)
+        row_sizes = _psum_if(rows.sum(axis=1, dtype=jnp.int32), vertex_axis)
+        row_sizes = jnp.where(live, row_sizes, 0)
         sizes = jax.lax.dynamic_update_slice(sizes, row_sizes, (start,))
         counter = counter + rows.sum(axis=0, dtype=jnp.int32)[None, :]
         return R, sizes, counter, counts + incs
@@ -678,13 +724,104 @@ def _sharded_write_kernels(mesh, theta_axes):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_grow_kernel(mesh, theta_axes, pad):
-    """Per-shard capacity doubling: every shard zero-pads its own
-    ``(cap_local, n)`` block to ``(cap_local + pad, n)`` locally (no
-    gather, no cross-device traffic; the copy itself is not donatable
-    because the output shape differs, but doubling amortizes it).  Live
-    bits pad with True (unfilled slots are live-by-default)."""
-    sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
+def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
+    """Membership queries with both arena axes resident: each tile tests
+    the queried vertices that fall inside its own column block against its
+    own rows; the vertex axis combines per-(row, query) hit bits with one
+    psum-or (a ``(cap_local, Q)`` bool — rows x queries, never columns),
+    and the theta axis reduces only the final ``(Q,)`` counts."""
+    sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
+
+    def hits(R, valid, S):
+        n_local = R.shape[1]
+        flat = S.reshape(-1)
+        if vertex_axis is None:
+            lidx, ok = flat, jnp.ones(flat.shape, jnp.bool_)
+        else:
+            shard = jax.lax.axis_index(vertex_axis)
+            lidx = flat - shard * n_local
+            ok = (lidx >= 0) & (lidx < n_local)
+        memb = jnp.take(R, jnp.clip(lidx, 0, n_local - 1), axis=1) > 0
+        memb = (memb & ok[None, :]).reshape((R.shape[0],) + S.shape)
+        hit = memb.any(axis=2)                       # (cap_local, Q)
+        hit = _psum_if(hit.astype(jnp.int32), vertex_axis) > 0
+        hit = hit & valid[:, None]
+        counts = jax.lax.psum(
+            hit.sum(axis=0).astype(jnp.float32), theta_axes)
+        n_valid = jnp.maximum(
+            jax.lax.psum(valid.sum(dtype=jnp.float32), theta_axes), 1.0)
+        return counts / n_valid
+
+    return jax.jit(shard_map(
+        hits, mesh=mesh, in_specs=(sp_rows, sp_vec, P()), out_specs=P()))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_touch_kernel(mesh, theta_axes, vertex_axis):
+    """Reverse-touch (streaming invalidation) with both axes local: each
+    tile checks the touched vertices inside its own column block against
+    its own rows; only the ``(cap_local,)`` per-row partial hit bits cross
+    the vertex axis (psum-or), and the result stays ``P(theta_axes)``."""
+    sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
+
+    def touch(R, verts, vmask):
+        n_local = R.shape[1]
+        if vertex_axis is None:
+            lidx, ok = verts, vmask
+        else:
+            shard = jax.lax.axis_index(vertex_axis)
+            lidx = verts - shard * n_local
+            ok = vmask & (lidx >= 0) & (lidx < n_local)
+        memb = jnp.take(R, jnp.clip(lidx, 0, n_local - 1), axis=1) > 0
+        local = (memb & ok[None, :]).any(axis=1)
+        return _psum_if(local.astype(jnp.int32), vertex_axis) > 0
+
+    return jax.jit(shard_map(
+        touch, mesh=mesh, in_specs=(sp_rows, P(), P()), out_specs=sp_vec))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_index_kernels(mesh, theta_axes, vertex_axis, l_pad):
+    """Per-tile C4 conversion: each (theta, vertex) tile rewrites its own
+    ``(cap_local, n_local)`` bitmap block as ``(cap_local, l_pad)``
+    *local-id* index lists (sentinel ``n_local``) — no cross-device
+    traffic at all; the index view is born with the arena's own 2D
+    layout.  ``l_pad`` is the per-vertex-shard C4 width (sized from the
+    max *local* set size, which shrinks as vertex shards are added)."""
+    sp_rows = P(theta_axes, vertex_axis)
+
+    def convert(R):
+        return bitmap_to_indices(R, l_pad)
+
+    return jax.jit(shard_map(
+        convert, mesh=mesh, in_specs=(sp_rows,), out_specs=sp_rows))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_localmax_kernel(mesh, theta_axes, vertex_axis):
+    """Max per-vertex-shard set size over valid rows — the statistic the
+    per-shard C4 threshold keys on.  Tile-local row popcounts, one scalar
+    psum-max; nothing row- or column-sized crosses devices."""
+    sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
+
+    def localmax(R, valid):
+        sz = R.sum(axis=1, dtype=jnp.int32) * valid.astype(jnp.int32)
+        m = jnp.max(sz, initial=0)
+        axes = theta_axes + ((vertex_axis,) if vertex_axis else ())
+        return jax.lax.pmax(m, axes)[None]
+
+    return jax.jit(shard_map(
+        localmax, mesh=mesh, in_specs=(sp_rows, sp_vec), out_specs=P()))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_grow_kernel(mesh, theta_axes, vertex_axis, pad):
+    """Per-shard capacity doubling: every tile zero-pads its own
+    ``(cap_local, n_local)`` block to ``(cap_local + pad, n_local)``
+    locally (no gather, no cross-device traffic; the copy itself is not
+    donatable because the output shape differs, but doubling amortizes
+    it).  Live bits pad with True (unfilled slots are live-by-default)."""
+    sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def grow(R, sizes, live):
         return (jnp.pad(R, ((0, pad), (0, 0))),
@@ -697,23 +834,30 @@ def _sharded_grow_kernel(mesh, theta_axes, pad):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_stream_kernels(mesh, theta_axes):
+def _sharded_stream_kernels(mesh, theta_axes, vertex_axis):
     """Compiled per-(mesh, axes) streaming row-lifecycle kernels.
 
-    Returns ``(kill, replace, compact)``, each shard-local:
+    Returns ``(kill, replace, compact)``, each tile-local in *both* axes
+    (the kill contribution, the replace scatter, and the compaction
+    permutation all act on a tile's own ``(cap_local, n_local)`` block;
+    on 2D meshes the only vertex-axis collective is the ``(K,)`` psum of
+    replacement row sizes — a reduced quantity, never arena columns):
       * ``kill(R, counter, sizes, live, dead)`` — subtract the dead local
-        rows' contribution from the shard's counter partial, zero their
+        rows' contribution from the tile's counter partial, zero their
         sizes, clear their live bits.  counter/sizes/live donated.
       * ``replace(R, counter, sizes, live, offs, idx, rows)`` — ``idx``
-        and ``rows`` arrive replicated; each shard scatters the subset of
-        rows whose global slot falls in its block (out-of-block targets
-        are dropped), revives their live bits, and adds its share of the
-        contribution to its counter partial.  All state donated.
+        arrives replicated and ``rows`` vertex-sharded ``P(None,
+        vertex_axis)``; each tile scatters its own column slice of the
+        rows whose global slot falls in its theta block (out-of-block
+        targets are dropped), revives their live bits, and adds its share
+        of the contribution to its counter partial.  All state donated.
       * ``compact(R, sizes, live, counts)`` — stable-partition the live
-        local rows to the shard's arena head and return the new per-shard
-        counts; dead slots zero out.  R/sizes donated.
+        local rows to the tile's arena head and return the new per-shard
+        counts; dead slots zero out.  The permutation depends only on
+        ``P(theta_axes)`` state, so every vertex tile of a theta shard
+        permutes its columns identically.  R/sizes donated.
     """
-    sp_rows, sp_vec = P(theta_axes, None), P(theta_axes)
+    sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def kill(R, counter, sizes, live, dead):
         contrib = dead.astype(jnp.float32) @ R.astype(jnp.float32)
@@ -734,15 +878,15 @@ def _sharded_stream_kernels(mesh, theta_axes):
         R = R.at[tgt].set(rows, mode="drop")
         contrib = (rows * ok[:, None]).sum(axis=0, dtype=jnp.int32)
         counter = counter + contrib[None, :]
-        sizes = sizes.at[tgt].set(rows.sum(axis=1, dtype=jnp.int32),
-                                  mode="drop")
+        row_sizes = _psum_if(rows.sum(axis=1, dtype=jnp.int32), vertex_axis)
+        sizes = sizes.at[tgt].set(row_sizes, mode="drop")
         live = live.at[tgt].set(True, mode="drop")
         return R, counter, sizes, live
 
     replace_fn = jax.jit(
         shard_map(replace, mesh=mesh,
                   in_specs=(sp_rows, sp_rows, sp_vec, sp_vec, sp_vec,
-                            P(None), P(None, None)),
+                            P(None), P(None, vertex_axis)),
                   out_specs=(sp_rows, sp_rows, sp_vec, sp_vec)),
         donate_argnums=(0, 1, 2, 3))
 
@@ -765,50 +909,74 @@ def _sharded_stream_kernels(mesh, theta_axes):
     return kill_fn, replace_fn, comp_fn
 
 
+def _pad_cols(rows, n_pad: int):
+    """Zero-pad ``(B, n)`` uint8 rows to the vertex-padded column count
+    (a no-op on 1D/single-vertex layouts where ``n_pad == n``)."""
+    pad = n_pad - rows.shape[1]
+    if pad == 0:
+        return rows
+    return jnp.concatenate(
+        [rows, jnp.zeros((rows.shape[0], pad), rows.dtype)], axis=1)
+
+
 class ShardedStore:
     """Mesh-sharded dense bitmap arena — the paper's C1 RRR-set
-    partitioning applied to the *store itself*, not just selection.
+    partitioning applied to the *store itself*, not just selection, on a
+    mesh that can be 1D (theta only) or genuinely 2D (theta x vertex).
 
-    State layout over ``D = prod(mesh.shape[a] for a in theta_axes)``
-    shards:
+    State layout over ``Dt = prod(mesh.shape[a] for a in theta_axes)``
+    theta shards and ``Dv = mesh.shape[vertex_axis]`` vertex shards
+    (``Dv = 1`` when ``vertex_axis`` is None — the historical 1D layout):
 
-      * ``R``       — ``(D * cap_local, n) uint8``, ``P(theta_axes, None)``:
-        shard ``d`` owns rows ``[d * cap_local, (d+1) * cap_local)``.  The
-        full arena never exists on one device; per-device memory is
-        ``cap_local * n`` bytes, so theta scales with device count.
-      * ``sizes``   — ``(D * cap_local,) int32``, ``P(theta_axes)``,
-        aligned with ``R`` rows.
-      * counter     — per-shard partials ``(D, n) int32``,
-        ``P(theta_axes, None)``; the ``counter`` property reduces them to
-        the replicated global fused counter for host consumers (selection
-        never needs it — it reduces shard-locally and psums).
-      * row counts  — ``(D,) int32``, ``P(theta_axes)``, plus a host
+      * ``R``       — ``(Dt * cap_local, n_pad) uint8``,
+        ``P(theta_axes, vertex_axis)``: tile ``(t, v)`` owns rows
+        ``[t * cap_local, (t+1) * cap_local)`` x columns
+        ``[v * n_local, (v+1) * n_local)``, where ``n_local =
+        ceil(n / Dv)`` and ``n_pad = Dv * n_local`` (pad columns carry no
+        vertex and stay all-zero).  The full ``(theta, n)`` arena never
+        exists on one device; per-device memory is ``cap_local * n_local``
+        bytes, so **theta scales with the theta axis and n with the
+        vertex axis** — graph size scales with the mesh, not with one
+        device (the vertex-block layout is
+        `repro.graphs.partition.vertex_partition`, shared with samplers
+        and selection).
+      * ``sizes``   — ``(Dt * cap_local,) int32``, ``P(theta_axes)``
+        (replicated over the vertex axis), aligned with ``R`` rows.
+      * counter     — per-tile partials ``(Dt, n_pad) int32``,
+        ``P(theta_axes, vertex_axis)`` — tile ``(t, v)`` counts its own
+        rows over its own columns (the ``(Dt, Dv, n/Dv)`` partial layout,
+        stored as a 2D array); the ``counter`` property reduces them to
+        the global fused counter for host consumers (selection never
+        needs it — it reduces tile-locally and psums).
+      * row counts  — ``(Dt,) int32``, ``P(theta_axes)``, plus a host
         mirror that drives growth logic without device syncs.
 
-    ``add_batch`` splits each sampled batch into D equal row blocks
-    (zero-padding the tail when ``B % D != 0``; pad rows are masked, not
-    counted) and runs the donated shard_map write kernel: each device
-    writes its block into its local arena slot and fuses its local size /
-    counter updates.  Capacity grows *per shard* by amortized doubling
+    ``add_batch`` splits each sampled batch into Dt equal row blocks
+    (zero-padding rows to ``ceil(B / Dt) * Dt`` and columns to ``n_pad``;
+    pad rows are masked, not counted) and runs the donated shard_map
+    write kernel: each tile writes its (row block, column block) of the
+    batch into its local arena slot and fuses its local size / counter
+    updates.  Capacity grows *per shard* by amortized doubling
     (``cap_local`` is a power of two), so jit retraces stay O(log theta)
     and growth copies are device-local.
 
-    Row placement across shards is a layout detail: selection, ``hits``
-    and the global counter are permutation-invariant over rows (exact
-    integer sums), so a `ShardedStore` fed the same sample stream as a
-    `BitmapStore` yields bit-identical selections on any mesh size.
+    Placement across tiles is a layout detail: selection, ``hits``
+    and the global counter are permutation-invariant over rows and exact
+    integer sums over columns, so a `ShardedStore` fed the same sample
+    stream as a `BitmapStore` yields bit-identical selections on any
+    mesh shape — 1 device, 1D, or 2D.
 
     ``snapshot``/``restore`` go through ``state()``/``from_state``: the
-    snapshot stores valid rows *compacted* on host (shard order), so a
-    snapshot taken on one mesh restores onto any other mesh — or into a
-    plain `BitmapStore` when no mesh is available (see
-    `store_from_state`).
+    snapshot stores valid rows *compacted* on host (shard order, vertex
+    padding stripped), so a snapshot taken on one layout restores onto
+    any other — none <-> 1D <-> 2D — or into a plain `BitmapStore` when
+    no mesh is available (see `store_from_state`).
     """
 
     representation = "bitmap"
 
     def __init__(self, n: int, *, mesh, theta_axes=("data",),
-                 capacity: int = MIN_CAPACITY,
+                 vertex_axis=None, capacity: int = MIN_CAPACITY,
                  policy: StorePressurePolicy | None = None):
         if mesh is None:
             raise ValueError("ShardedStore needs a jax.sharding.Mesh")
@@ -817,15 +985,21 @@ class ShardedStore:
         self.n = int(n)
         self.mesh = mesh
         self.theta_axes = tuple(theta_axes)
+        self.vertex_axis = vertex_axis
         self.D = int(np.prod([mesh.shape[a] for a in self.theta_axes]))
+        self.Dv = int(mesh.shape[vertex_axis]) if vertex_axis else 1
+        vp = vertex_partition(self.n, self.Dv)
+        self.n_local, self.n_pad = vp.block, vp.n_pad
         self.cap_local = next_pow2(-(-int(capacity) // self.D))
         self.version = 0
         self.policy = policy
         self.track_remaps = False
         self._remaps: list[np.ndarray] = []
-        self._sh_rows = NamedSharding(mesh, P(self.theta_axes, None))
+        self._sh_rows = NamedSharding(
+            mesh, P(self.theta_axes, vertex_axis))
         self._sh_vec = NamedSharding(mesh, P(self.theta_axes))
         self._sh_rep = NamedSharding(mesh, P())
+        self._sh_vrows = NamedSharding(mesh, P(None, vertex_axis))
         self._counts_host = np.zeros((self.D,), np.int64)
         if policy is not None:
             cap = policy.row_cap(self.n)
@@ -836,18 +1010,21 @@ class ShardedStore:
             self.cap_local = min(self.cap_local, cap // self.D)
         self._live_host = np.ones((self.D * self.cap_local,), bool)
         self.R = _sharded_zeros(
-            (self.D * self.cap_local, self.n), jnp.uint8, self._sh_rows)
+            (self.D * self.cap_local, self.n_pad), jnp.uint8, self._sh_rows)
         self.sizes = _sharded_zeros(
             (self.D * self.cap_local,), jnp.int32, self._sh_vec)
         self.live = _sharded_ones(
             (self.D * self.cap_local,), jnp.bool_, self._sh_vec)
         self._counter = _sharded_zeros(
-            (self.D, self.n), jnp.int32, self._sh_rows)
+            (self.D, self.n_pad), jnp.int32, self._sh_rows)
         self._counts = _sharded_zeros((self.D,), jnp.int32, self._sh_vec)
         self._write_fn, self._valid_fn = _sharded_write_kernels(
-            mesh, self.theta_axes)
+            mesh, self.theta_axes, vertex_axis)
         self._kill_fn, self._replace_fn, self._compact_fn = (
-            _sharded_stream_kernels(mesh, self.theta_axes))
+            _sharded_stream_kernels(mesh, self.theta_axes, vertex_axis))
+        self._hits_fn = _sharded_hits_kernel(
+            mesh, self.theta_axes, vertex_axis)
+        self._idx_cache = None      # (version, l_pad) -> sharded R_idx
 
     # ------------------------------------------------------------ shape ----
 
@@ -907,16 +1084,19 @@ class ShardedStore:
 
     @property
     def counter(self) -> jnp.ndarray:
-        """Global fused counter ``(n,) int32`` — reduces the per-shard
-        partials (an all-reduce; host/reporting use only, the selection
-        kernels consume the partials shard-locally)."""
-        return self._counter.sum(axis=0)
+        """Global fused counter ``(n,) int32`` — reduces the per-tile
+        partials over the theta axis and strips the vertex padding
+        columns (an all-reduce; host/reporting use only, the selection
+        kernels consume the partials tile-locally)."""
+        return self._counter.sum(axis=0)[:self.n]
 
     @property
     def batch_sharding(self) -> NamedSharding:
         """Sharding a sampler should place its ``(B, n)`` batch with so
         the store write is a pure device-local slice update (rows
-        block-partitioned over ``theta_axes``, vertices replicated)."""
+        block-partitioned over ``theta_axes``, vertex columns over
+        ``vertex_axis`` when the mesh is 2D) — each device samples
+        exactly the (row, column) tile its arena shard will store."""
         return self._sh_rows
 
     # ---------------------------------------------------------- writing ----
@@ -930,7 +1110,8 @@ class ShardedStore:
         if new_cap == self.cap_local:
             return
         grow = _sharded_grow_kernel(
-            self.mesh, self.theta_axes, new_cap - self.cap_local)
+            self.mesh, self.theta_axes, self.vertex_axis,
+            new_cap - self.cap_local)
         self.R, self.sizes, self.live = grow(self.R, self.sizes, self.live)
         # shard blocks moved apart: global slot d*cap_local+i is now
         # d*new_cap+i — record the renumbering for provenance trackers
@@ -991,10 +1172,12 @@ class ShardedStore:
         B = int(visited.shape[0])
         if B == 0:
             return np.zeros((0,), np.int64)
+        visited = _pad_cols(visited, self.n_pad)
         b = -(-B // self.D)
         if b * self.D != B:
             visited = jnp.concatenate(
-                [visited, jnp.zeros((b * self.D - B, self.n), jnp.uint8)])
+                [visited,
+                 jnp.zeros((b * self.D - B, self.n_pad), jnp.uint8)])
         # no-op when the sampler already placed the batch with
         # ``batch_sharding``; otherwise reshards the (small) batch only
         visited = jax.device_put(visited, self._sh_rows)
@@ -1036,10 +1219,12 @@ class ShardedStore:
 
     def replace_rows(self, idx, rows) -> None:
         """Overwrite dead slots with fresh rows (streaming refresh).
-        ``idx``/``rows`` are replicated into the kernel; each shard
-        scatters only the targets inside its own block.  Targets must be
-        filled, dead slots (enforced on host); ``idx`` entries of -1 are
-        padding (the batch pads to a power of two to bound retraces)."""
+        ``idx`` is replicated into the kernel and ``rows`` enters
+        vertex-sharded (``P(None, vertex_axis)``); each tile scatters
+        only its own column slice of the targets inside its theta block.
+        Targets must be filled, dead slots (enforced on host); ``idx``
+        entries of -1 are padding (the batch pads to a power of two to
+        bound retraces)."""
         idx = np.asarray(idx, np.int64)
         real = idx >= 0
         k = int(real.sum())
@@ -1052,13 +1237,14 @@ class ShardedStore:
             raise ValueError(
                 "replace_rows targets must be filled, dead slots "
                 "(kill_rows them first)")
-        rows = jnp.asarray(rows).astype(jnp.uint8)
+        rows = _pad_cols(jnp.asarray(rows).astype(jnp.uint8), self.n_pad)
         pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
         if pad:
             idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
             rows = jnp.concatenate(
                 [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
-        rows = jax.device_put(rows, self._sh_rep)
+            real = idx >= 0
+        rows = jax.device_put(rows, self._sh_vrows)
         idx_dev = jax.device_put(jnp.asarray(idx, jnp.int32), self._sh_rep)
         offs = jax.device_put(
             jnp.arange(self.D, dtype=jnp.int32) * self.cap_local,
@@ -1104,35 +1290,80 @@ class ShardedStore:
 
     def view(self) -> StoreView:
         """`StoreView` over the *sharded* arena: ``R`` keeps its
-        ``P(theta_axes, None)`` layout and ``valid`` its ``P(theta_axes)``
-        layout, so sharded selection strategies consume the shards
-        natively (zero resharding on entry).  Aliases live buffers —
-        consume before the next ``add_batch``."""
+        ``P(theta_axes, vertex_axis)`` layout and ``valid`` its
+        ``P(theta_axes)`` layout, so sharded selection strategies consume
+        the tiles natively (zero resharding on entry).  Aliases live
+        buffers — consume before the next ``add_batch``."""
         return StoreView("bitmap", self.R, self.valid_mask(), self.n,
                          self.count)
 
     def hits(self, S) -> jnp.ndarray:
         """Covered fraction per query: ``S (Q, L) int32`` -> ``(Q,) f32``.
-        Each shard tests membership against its local rows; only the
-        per-query hit counts cross devices (never arena rows)."""
-        return _bitmap_hits(self.R, self.valid_mask(),
-                            jnp.asarray(S, jnp.int32))
+        Each tile tests membership of the queried vertices inside its own
+        column block against its own rows; only per-(row, query) hit bits
+        cross the vertex axis and per-query counts the theta axis (never
+        arena rows or columns)."""
+        return self._hits_fn(self.R, self.valid_mask(),
+                             jnp.asarray(S, jnp.int32))
 
     def coverage_stats(self) -> tuple[float, int]:
         """(avg fractional set coverage, max set size) over live stored
         sets (killed rows have their sizes zeroed)."""
         return _coverage_stats(self.sizes, self.live_count, self.n)
 
+    def max_local_size(self) -> int:
+        """Max per-vertex-shard set size over valid rows — the statistic
+        the per-shard C4 representation threshold keys on (each vertex
+        shard sees only its ``n_local`` columns of every set, so local
+        sizes shrink as vertex shards are added).  Cached per store
+        version: one select calls this twice (representation choice,
+        then index-view width) and must not launch the collective kernel
+        and block on the host both times."""
+        cache = getattr(self, "_localmax_cache", None)
+        if cache is not None and cache[0] == self.version:
+            return cache[1]
+        fn = _sharded_localmax_kernel(
+            self.mesh, self.theta_axes, self.vertex_axis)
+        val = int(np.asarray(fn(self.R, self.valid_mask()))[0])
+        self._localmax_cache = (self.version, val)
+        return val
+
+    def index_view(self, l_pad: int) -> StoreView:
+        """Sharded C4 index view: each tile rewrites its own bitmap block
+        as ``(cap_local, l_pad)`` *local-id* index lists (sentinel
+        ``n_local``), entirely device-local — the view keeps the arena's
+        ``P(theta_axes, vertex_axis)`` layout, so the sharded-sparse
+        selection strategy consumes it with zero resharding.  Cached
+        until the arena next changes."""
+        key = (self.version, int(l_pad))
+        if self._idx_cache is None or self._idx_cache[0] != key:
+            fn = _sharded_index_kernels(
+                self.mesh, self.theta_axes, self.vertex_axis, int(l_pad))
+            self._idx_cache = (key, fn(self.R))
+        return StoreView("indices", self._idx_cache[1], self.valid_mask(),
+                         self.n, self.count)
+
+    def rows_touching_cols(self, verts, vmask) -> jnp.ndarray:
+        """``(capacity,) bool`` rows whose bitmap has a set bit in any
+        masked ``verts`` column — the streaming reverse-touch query,
+        tile-local in both axes (`repro.stream.invalidate` dispatches
+        here on sharded stores)."""
+        fn = _sharded_touch_kernel(
+            self.mesh, self.theta_axes, self.vertex_axis)
+        return fn(self.R, jnp.asarray(verts, jnp.int32),
+                  jnp.asarray(vmask, jnp.bool_))
+
     # ------------------------------------------------------ checkpointing ----
 
     def state(self) -> dict:
         """Host snapshot pytree (kind tag ``"sharded"``): the *live*
         valid rows of every shard compacted into a contiguous
-        ``(live_count, n)`` array (shard order) — stale/killed rows are
-        dropped at snapshot time — so restore redistributes onto any mesh
-        shape, the elastic layout `checkpoint.store` promises.  This is
-        the one deliberate host gather in the store's life cycle."""
-        R = np.asarray(self.R)
+        ``(live_count, n)`` array (shard order, vertex padding columns
+        stripped) — stale/killed rows are dropped at snapshot time — so
+        restore redistributes onto any mesh layout (none <-> 1D <-> 2D),
+        the elastic layout `checkpoint.store` promises.  This is the one
+        deliberate host gather in the store's life cycle."""
+        R = np.asarray(self.R)[:, :self.n]
         sizes = np.asarray(self.sizes)
         keep = self._filled_host() & self._live_host
         live_count = int(keep.sum())
@@ -1153,14 +1384,15 @@ class ShardedStore:
     RESTORE_CHUNK = 4096
 
     @classmethod
-    def from_state(cls, st, *, mesh, theta_axes=("data",)) -> "ShardedStore":
+    def from_state(cls, st, *, mesh, theta_axes=("data",),
+                   vertex_axis=None) -> "ShardedStore":
         """Rebuild on ``mesh`` from a ``"sharded"`` (compact rows) *or*
         ``"bitmap"`` (full-capacity arena) snapshot: the valid rows are
-        redistributed block-evenly across the new mesh's shards, and the
-        fused counter/sizes are recomputed shard-locally (exactly equal to
-        the saved ones).  Rows are fed in ``RESTORE_CHUNK``-row slices so
-        an arena that only fits *because* it is sharded never transits any
-        single device whole on restore."""
+        redistributed block-evenly across the new mesh's tiles (any
+        theta x vertex layout), and the fused counter/sizes are recomputed
+        tile-locally (exactly equal to the saved ones).  Rows are fed in
+        ``RESTORE_CHUNK``-row slices so an arena that only fits *because*
+        it is sharded never transits any single device whole on restore."""
         n, count = int(st["n"]), int(st["count"])
         rows = np.asarray(st["R"])[:count]
         if "live" in st:
@@ -1169,7 +1401,7 @@ class ShardedStore:
             rows = rows[np.asarray(st["live"])[:count].astype(bool)]
             count = rows.shape[0]
         store = cls(n, mesh=mesh, theta_axes=theta_axes,
-                    capacity=max(count, 1))
+                    vertex_axis=vertex_axis, capacity=max(count, 1))
         chunk = max(cls.RESTORE_CHUNK // max(store.D, 1), 1) * store.D
         slot_chunks = []
         for lo in range(0, count, chunk):
@@ -1199,14 +1431,17 @@ def make_store(kind: str, n: int, **kw) -> RRRStore:
     return ctor(n, **kw)
 
 
-def store_from_state(st, *, mesh=None, theta_axes=("data",)) -> RRRStore:
+def store_from_state(st, *, mesh=None, theta_axes=("data",),
+                     vertex_axis=None) -> RRRStore:
     """Rebuild a store from a `state()` tree (snapshot restore path).
 
     Snapshots are elastic across layouts: with ``mesh`` given, bitmap and
     sharded snapshots both restore into a `ShardedStore` on that mesh
-    (rows redistributed); without one, a sharded snapshot restores into a
-    compacted `BitmapStore`.  Index-list snapshots are single-device only
-    (the sharded store is dense-only, like sharded selection).
+    (rows redistributed over any theta x vertex layout); without one, a
+    sharded snapshot restores into a compacted `BitmapStore`.  Index-list
+    snapshots are single-device only (the sharded *resident* arena is a
+    bitmap; on meshes the C4 index representation is a derived
+    `ShardedStore.index_view`, not a store kind).
     """
     kind = str(np.asarray(st["kind"]))
     if kind not in STORE_KINDS:
@@ -1215,11 +1450,14 @@ def store_from_state(st, *, mesh=None, theta_axes=("data",)) -> RRRStore:
         if kind == "indices":
             raise ValueError(
                 "IndexStore snapshots are single-device only: the sharded "
-                "store is dense-only, so an index-list snapshot cannot "
-                "restore onto a mesh. Restore without a mesh, or re-run "
-                "with the bitmap representation (IMMConfig(store='bitmap' "
-                "or 'auto')), whose snapshots reshard elastically.")
-        return ShardedStore.from_state(st, mesh=mesh, theta_axes=theta_axes)
+                "resident arena is a bitmap, so an index-list snapshot "
+                "cannot restore onto a mesh. Restore without a mesh, or "
+                "re-run with the bitmap representation (IMMConfig("
+                "store='bitmap' or 'auto')), whose snapshots reshard "
+                "elastically (the mesh engine still serves the C4 index "
+                "representation through ShardedStore.index_view).")
+        return ShardedStore.from_state(st, mesh=mesh, theta_axes=theta_axes,
+                                       vertex_axis=vertex_axis)
     if kind == "sharded":
         return BitmapStore.from_rows(np.asarray(st["R"]), int(st["n"]))
     return STORE_KINDS[kind].from_state(st)

@@ -1,4 +1,5 @@
-"""Host-side edge partitioner — the NUMA-placement analogue (DESIGN §2 C2).
+"""Host-side vertex/edge partitioners — the NUMA-placement analogue
+(DESIGN §2 C2).
 
 Full-graph GNN training shards nodes into contiguous blocks across the mesh's
 data axis.  Edges are sorted so every shard's edge slab targets only its own
@@ -6,10 +7,47 @@ dst block; the per-slab ``segment_sum`` then needs no cross-device scatter
 (only the src-feature all-gather), mirroring EfficientIMM's "RRRsets local,
 counters reduced" layout.  Slabs are padded to equal length (SPMD shape
 stability); padding edges point at the dropped sentinel dst.
+
+`VertexPartition` is the one definition of the *vertex-axis* block layout
+the 2D influence pipeline shares: the `ShardedStore` arena columns, the
+samplers' column-sharded activation tables, sharded selection's
+local<->global vertex id mapping, and the streaming reverse-touch queries
+all agree on the same contiguous equal blocks (vertex ``u`` lives in block
+``u // block``), so no layer ever reindexes another's output.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexPartition:
+    """Contiguous equal-block partition of ``n`` vertices over ``shards``
+    vertex shards.  ``n_pad = shards * block`` is the SPMD-padded column
+    count (pad columns hold no vertex and stay all-zero everywhere);
+    vertex ``u`` lives in block ``u // block`` at local id ``u % block``.
+    """
+    n: int
+    shards: int
+    block: int      # vertices per shard (ceil(n / shards))
+    n_pad: int      # shards * block — the padded global column count
+
+    def local_id(self, u):
+        return u - (u // self.block) * self.block
+
+    def block_of(self, u):
+        return u // self.block
+
+
+def vertex_partition(n: int, shards: int) -> VertexPartition:
+    """The canonical vertex-axis block layout for ``n`` vertices over
+    ``shards`` shards (shards=1 degenerates to the unsharded layout:
+    block == n_pad == n)."""
+    shards = max(int(shards), 1)
+    block = -(-int(n) // shards)
+    return VertexPartition(int(n), shards, block, shards * block)
 
 
 def partition_edges_by_dst(src, dst, n_nodes: int, n_shards: int):

@@ -11,9 +11,12 @@ graphs/datasets.py).  Because the engine keeps its sampled RRR store,
 and ``--snapshot-dir`` persists the store for later resumption.
 
 ``--mesh N`` (or ``--mesh auto``) shards the RRR store's theta axis across
-N devices (paper C1 end-to-end: device-local sampling writes, sharded
-selection).  Results are seed-for-seed identical to the single-device
-default; on one device the flag degrades gracefully to a 1-shard mesh.
+N devices; ``--mesh RxC`` (e.g. ``--mesh 2x4``) makes the mesh genuinely
+2D — R theta shards x C vertex shards, so theta *and* the graph's vertex
+dimension scale with device count (paper C1 end-to-end: device-local
+sampling writes over both axes, sharded selection).  Results are
+seed-for-seed identical to the single-device default; on one device any
+flag degrades gracefully to a 1-tile mesh.
 """
 from __future__ import annotations
 
@@ -21,7 +24,9 @@ import argparse
 import json
 import time
 
-from repro.configs.imm_snap import IMM_EXPERIMENTS, make_theta_mesh
+from repro.configs.imm_snap import (
+    IMM_EXPERIMENTS, make_im_mesh, mesh_engine_kwargs,
+)
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.graphs.datasets import scaled_snap, synthetic_snap
 
@@ -43,8 +48,8 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         selection_method="decrement" if baseline else "rebuild",
         adaptive_representation=not baseline,
     )
-    mesh = make_theta_mesh(mesh)
-    engine = InfluenceEngine(g, cfg, mesh=mesh)
+    mesh = make_im_mesh(mesh)
+    engine = InfluenceEngine(g, cfg, **mesh_engine_kwargs(mesh))
     if snapshot_dir:
         engine.restore(snapshot_dir)       # resume if a snapshot exists
     t0 = time.time()
@@ -69,6 +74,8 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         "k": k, "mode": "ripples-style" if baseline else "efficientimm",
         "mesh_shards": None if mesh is None else int(
             engine.store.D if hasattr(engine.store, "D") else 1),
+        "vertex_shards": None if mesh is None else int(
+            getattr(engine.store, "Dv", 1)),
         "influence": res.influence, "covered_frac": res.covered_frac,
         "theta": res.theta, "representation": res.representation,
         "graph_s": round(t_graph, 3), "imm_s": round(t_imm, 3),
@@ -109,8 +116,9 @@ def main(argv=None):
     ap.add_argument("--snapshot-dir", default=None,
                     help="resume from / persist the engine store here")
     ap.add_argument("--mesh", default=None,
-                    help="theta shards for the RRR store: an int, 'auto' "
-                         "(all devices), or omit for single-device")
+                    help="RRR store mesh: an int or 'auto' (1D theta "
+                         "sharding), 'RxC' e.g. '2x4' (2D theta x vertex "
+                         "sharding), or omit for single-device")
     args = ap.parse_args(argv)
     run(args.graph, scale=args.scale, model=args.model, k=args.k,
         eps=args.eps, baseline=args.baseline, max_theta=args.max_theta,

@@ -18,7 +18,12 @@ Two workloads share this module:
     dynamic-graph regime: the server runs a `StreamEngine`, random edge
     deltas land between query bursts, and up to ``--refresh-budget`` rows
     of stale-RRR repair run between flushes while every flush stays
-    epoch-consistent (see docs/streaming.md).
+    epoch-consistent (see docs/streaming.md).  ``--async-refresh`` moves
+    the repair onto a background worker thread that drains the backlog
+    continuously between flushes instead of only inside them.
+    ``--mesh RxC`` (e.g. ``2x4``) serves from a 2D theta x vertex store:
+    per-device memory is ``theta/R x n/C``, so resident theta *and* graph
+    size scale with the mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --workload im \
         --graph com-Amazon --queries 64 --mesh auto --deltas 4
@@ -26,6 +31,7 @@ Two workloads share this module:
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -87,10 +93,23 @@ class IMServer:
     of repair between flushes (cooperative backgrounding: the refresh
     never interleaves with answering, so a flush can never mix rows from
     two epochs — no torn reads across ``apply_delta``).
+
+    **Async-refresh mode** (``async_refresh=True``) upgrades the
+    cooperative scheme to a real worker thread: the worker drains the
+    staleness backlog in ``refresh_budget``-row slices *continuously*,
+    not just once per flush — repair overlaps the server's host-side
+    work (request intake, batch assembly, idle gaps between bursts)
+    instead of waiting for it.  Engine access stays serialized by one
+    lock: stores donate their arena buffers on every repair write, so a
+    query racing a refresh would read a deleted buffer — the lock is the
+    epoch-consistency guarantee (every flush answers against exactly one
+    store state; tested in tests/test_stream.py).  ``close`` (or the
+    context manager) stops the worker.
     """
 
     def __init__(self, engine, *, max_batch: int = 256,
-                 refresh_budget: int | None = None):
+                 refresh_budget: int | None = None,
+                 async_refresh: bool = False):
         self.engine = engine
         self.max_batch = max_batch
         self.refresh_budget = refresh_budget
@@ -101,10 +120,71 @@ class IMServer:
         if refresh_budget is not None and refresh_budget < 1:
             raise ValueError(
                 f"refresh_budget must be >= 1 row (got {refresh_budget})")
+        if async_refresh and refresh_budget is None:
+            raise ValueError(
+                "async_refresh needs a refresh_budget (the worker "
+                "repairs in budget-row slices)")
         self._pending = []          # list[(ticket, seed_set)]
         self._next_ticket = 0
         self.queries_served = 0
         self.served_epoch = getattr(engine, "epoch", None)
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._worker: threading.Thread | None = None
+        self.refreshes_run = 0      # worker repair slices completed
+        if async_refresh:
+            self.start_refresh_worker()
+
+    # ------------------------------------------------- async refresh ----
+
+    def start_refresh_worker(self) -> None:
+        """Start the background repair worker (idempotent)."""
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._refresh_loop, name="im-refresh", daemon=True)
+        self._worker.start()
+
+    def stop_refresh_worker(self) -> None:
+        """Stop the worker and join it (idempotent)."""
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    close = stop_refresh_worker
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop_refresh_worker()
+
+    @property
+    def async_refreshing(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def _refresh_loop(self):
+        while not self._stop.is_set():
+            did = False
+            with self._lock:
+                if getattr(self.engine, "stale", 0) > 0:
+                    self.engine.refresh(self.refresh_budget)
+                    self.refreshes_run += 1
+                    did = True
+            if did:
+                # Python locks are not fair: without an explicit yield
+                # between slices the worker can win the lock re-acquire
+                # race repeatedly and starve a blocked flush()/submit()
+                # for the whole drain — give waiters a real window
+                time.sleep(1e-4)
+            else:
+                # backlog drained: sleep until the next delta (re-checked
+                # on a short tick; apply_delta wakes work implicitly)
+                self._stop.wait(0.002)
+
+    # ------------------------------------------------------- queries ----
 
     @property
     def pending(self) -> int:
@@ -112,39 +192,46 @@ class IMServer:
 
     def submit(self, seed_set) -> int:
         """Enqueue one sigma(S) query; returns its ticket id."""
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._pending.append((ticket, np.asarray(seed_set, np.int32)))
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append((ticket, np.asarray(seed_set, np.int32)))
         return ticket
 
     def apply_delta(self, delta) -> int:
         """Forward a `GraphDelta` to the underlying stream engine; the
-        next flush answers from the new epoch.  Returns the number of
-        resident rows that went stale."""
+        next flush answers from the new epoch (the async worker starts
+        repairing it immediately).  Returns the number of resident rows
+        that went stale."""
         if not hasattr(self.engine, "apply_delta"):
             raise ValueError("apply_delta needs a StreamEngine")
-        return self.engine.apply_delta(delta)
+        with self._lock:
+            return self.engine.apply_delta(delta)
 
     def flush(self) -> dict:
         """Answer all pending queries; returns {ticket: influence}.
 
         Every ticket in one flush is answered against the same store
-        state (the engine is not mutated between chunks), so the results
-        are epoch-consistent even when ``apply_delta`` landed between
-        submits.  In background-refresh mode, repair work runs *after*
-        the answers, bounded by ``refresh_budget`` rows.
+        state (the engine lock is held across the whole flush, so
+        neither ``apply_delta`` nor any refresh slice can interleave) —
+        the results are epoch-consistent even when deltas land between
+        submits.  In cooperative background-refresh mode (no worker),
+        repair work runs *after* the answers, bounded by
+        ``refresh_budget`` rows; in async mode the worker owns repair
+        and the flush does none.
         """
         results = {}
-        while self._pending:
-            chunk = self._pending[:self.max_batch]
-            self._pending = self._pending[self.max_batch:]
-            vals = self.engine.influences([s for _, s in chunk])
-            results.update(
-                {t: float(v) for (t, _), v in zip(chunk, vals)})
-        self.queries_served += len(results)
-        self.served_epoch = getattr(self.engine, "epoch", None)
-        if self.refresh_budget is not None:
-            self.engine.refresh(self.refresh_budget)
+        with self._lock:
+            while self._pending:
+                chunk = self._pending[:self.max_batch]
+                self._pending = self._pending[self.max_batch:]
+                vals = self.engine.influences([s for _, s in chunk])
+                results.update(
+                    {t: float(v) for (t, _), v in zip(chunk, vals)})
+            self.queries_served += len(results)
+            self.served_epoch = getattr(self.engine, "epoch", None)
+            if self.refresh_budget is not None and not self.async_refreshing:
+                self.engine.refresh(self.refresh_budget)
         return results
 
     def influence(self, seed_set) -> float:
@@ -154,7 +241,25 @@ class IMServer:
 
     def select(self, k: int):
         """Top-k seed-selection query (memoized by the engine)."""
-        return self.engine.select(k)
+        with self._lock:
+            return self.engine.select(k)
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Block until the async worker has repaired the whole backlog
+        (True) or ``timeout`` elapses (False).  Without a worker this
+        refreshes inline until consistent."""
+        if not self.async_refreshing:
+            with self._lock:
+                while getattr(self.engine, "stale", 0) > 0:
+                    self.engine.refresh(self.refresh_budget)
+            return True
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                if getattr(self.engine, "stale", 0) == 0:
+                    return True
+            time.sleep(0.002)
+        return False
 
 
 def _main_lm(args):
@@ -172,31 +277,37 @@ def _main_lm(args):
 
 
 def _main_im(args):
-    from repro.configs.imm_snap import IMM_EXPERIMENTS, make_theta_mesh
+    from repro.configs.imm_snap import (
+        IMM_EXPERIMENTS, make_im_mesh, mesh_engine_kwargs,
+    )
     from repro.core.engine import InfluenceEngine, IMMConfig
     from repro.graphs.datasets import scaled_snap
 
     exp = IMM_EXPERIMENTS[args.graph]
     scale = exp.bench_scale if args.scale is None else args.scale
     g = scaled_snap(args.graph, scale, seed=0)
-    mesh = make_theta_mesh(args.mesh)
+    mesh = make_im_mesh(args.mesh)
+    mesh_kw = mesh_engine_kwargs(mesh)
     cfg = IMMConfig(k=args.k, model=args.model, backend=args.backend,
                     sampler=args.sampler, max_theta=args.max_theta)
     if args.deltas:
         from repro.stream import StreamEngine
-        engine = StreamEngine(g, cfg, mesh=mesh)
+        engine = StreamEngine(g, cfg, **mesh_kw)
     else:
-        engine = InfluenceEngine(g, cfg, mesh=mesh)
+        engine = InfluenceEngine(g, cfg, **mesh_kw)
     t0 = time.time()
     engine.extend(args.max_theta)
     t_sample = time.time() - t0
     server = IMServer(
         engine,
-        refresh_budget=args.refresh_budget if args.deltas else None)
+        refresh_budget=args.refresh_budget if args.deltas else None,
+        async_refresh=bool(args.deltas and args.async_refresh))
     if mesh is not None:
         print(f"[serve-im] sharded store: theta axis over "
-              f"{engine.store.D} device shard(s), "
-              f"cap_local={engine.store.cap_local}")
+              f"{engine.store.D} shard(s) x vertex axis over "
+              f"{getattr(engine.store, 'Dv', 1)} shard(s), "
+              f"cap_local={engine.store.cap_local}, "
+              f"n_local={getattr(engine.store, 'n_local', g.n)}")
 
     # a realistic mixed workload: top-k selections of several sizes plus a
     # burst of random candidate-set influence queries, all from one store
@@ -232,8 +343,19 @@ def _main_im(args):
             print(f"  delta {i}: {len(d)} edge ops, {stale} rows stale, "
                   f"epoch {server.served_epoch}, sigma(probe)={sig:.1f}, "
                   f"backlog {engine.stale}")
-        while engine.stale:
-            engine.refresh(args.refresh_budget)
+        if server.async_refreshing:
+            if not server.drain(timeout=120.0):
+                print(f"  WARNING: async drain timed out with "
+                      f"{engine.stale} rows still stale; finishing "
+                      f"inline")
+                while engine.stale:
+                    engine.refresh(args.refresh_budget)
+            server.stop_refresh_worker()
+            print(f"  async worker ran {server.refreshes_run} repair "
+                  f"slice(s)")
+        else:
+            while engine.stale:
+                engine.refresh(args.refresh_budget)
         final = engine.select(args.k)
         print(f"  drained: epoch {engine.epoch} consistent, "
               f"select(k={args.k}) influence={final.influence:.1f}")
@@ -264,9 +386,13 @@ def main(argv=None):
     ap.add_argument("--refresh-budget", type=int, default=1024,
                     help="stale rows repaired between flushes in "
                          "--deltas mode")
+    ap.add_argument("--async-refresh", action="store_true",
+                    help="--deltas mode: repair on a background worker "
+                         "thread instead of cooperatively inside flush")
     ap.add_argument("--mesh", default=None,
-                    help="theta shards for the IM store: int, 'auto', or "
-                         "omit for single-device")
+                    help="IM store mesh: int or 'auto' (1D theta "
+                         "sharding), 'RxC' e.g. '2x4' (2D theta x "
+                         "vertex), or omit for single-device")
     args = ap.parse_args(argv)
     if args.workload == "im":
         _main_im(args)

@@ -119,7 +119,8 @@ class StreamEngine:
                     "streaming on a mesh requires the sharded bitmap "
                     "store (cfg.store='auto')")
             store = make_store("sharded", graph.n, mesh=mesh,
-                               theta_axes=theta_axes, policy=policy)
+                               theta_axes=theta_axes,
+                               vertex_axis=vertex_axis, policy=policy)
         else:
             kind = "bitmap" if cfg.store in ("auto", "sharded") else cfg.store
             store = make_store(kind, graph.n, policy=policy)

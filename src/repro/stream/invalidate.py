@@ -69,8 +69,15 @@ def _padded_vertices(vertices, n: int):
 def rows_touching(store, vertices) -> jnp.ndarray:
     """``(capacity,) bool`` mask of arena rows whose RRR traversal
     touched any of ``vertices`` (unfilled/padding rows are all-zero /
-    all-sentinel, so they never match)."""
+    all-sentinel, so they never match).  Sharded stores answer through
+    their own tile-local kernel (`ShardedStore.rows_touching_cols`): each
+    (theta, vertex) tile scans the touched vertices inside its own column
+    block against its own rows, and only per-row hit bits cross the
+    vertex axis — shard-local in both mesh axes."""
     verts, vmask = _padded_vertices(vertices, store.n)
+    sharded = getattr(store, "rows_touching_cols", None)
+    if sharded is not None:
+        return sharded(verts, vmask)
     if store.representation == "bitmap":
         return _touched_bitmap(store.R, verts, vmask)
     return _touched_indices(store.R, verts, vmask)

@@ -1,20 +1,25 @@
 """Subprocess body for the forced multi-device ShardedStore checks.
 
-Run by tests/test_sharded_store.py with
-``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the mesh code
+Run by tests/test_sharded_store.py (and scripts/ci.sh) with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the mesh code
 paths execute on real (host-platform) multi-device buffers even on
-CPU-only runners.  Asserts the C1 acceptance criteria:
+CPU-only runners.  ``--mesh RxC`` selects the layout (default ``4`` —
+the historical 1D cell; ci.sh also runs ``--mesh 2x4`` under 8 forced
+devices).  Asserts the C1 acceptance criteria:
 
-  * ``ShardedStore.extend`` never materializes the full arena on one
-    device (per-shard buffer shapes are ``(cap_local, n)``);
-  * sharded ``select(k)`` is seed-for-seed identical to ``BitmapStore`` +
-    dense selection for a fixed ``cfg.seed``, including the true
-    decremental sharded strategy;
-  * snapshot/restore round-trips across mesh shapes (4 -> 1 -> none)
-    without changing answers.
+  * the full ``(theta, n)`` arena never materializes on one device —
+    per-device buffer shapes are ``(cap_local, n_local)`` with
+    ``n_local = ceil(n / Dv)`` vertex columns (``n_local == n`` only on
+    1D meshes);
+  * sharded ``select(k)`` and ``influence(S)`` are seed-for-seed
+    identical to ``BitmapStore`` + dense selection for a fixed
+    ``cfg.seed``, including the true decremental sharded strategy;
+  * snapshot/restore round-trips across layouts (this mesh -> 1D -> 1
+    shard -> none) without changing answers.
 
 Prints one JSON line on success (consumed by the pytest wrapper).
 """
+import argparse
 import json
 import sys
 import tempfile
@@ -22,21 +27,30 @@ import tempfile
 import numpy as np
 import jax
 
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.core.store import BitmapStore, ShardedStore
 from repro.graphs import rmat_graph
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="4",
+                    help="layout to check: an int (1D) or 'RxC' (2D)")
+    args = ap.parse_args(argv)
+
+    mesh = make_im_mesh(args.mesh)
     n_dev = jax.device_count()
-    assert n_dev == 4, f"expected 4 forced host devices, got {n_dev}"
+    want = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    assert n_dev == want, \
+        f"mesh {args.mesh} wants {want} forced host devices, got {n_dev}"
+    kw = mesh_engine_kwargs(mesh)
 
     g = rmat_graph(128, 1024, seed=4)
     cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3)
-    mesh = jax.make_mesh((4,), ("data",))
 
     dense = InfluenceEngine(g, cfg)
-    sharded = InfluenceEngine(g, cfg, mesh=mesh)
+    sharded = InfluenceEngine(g, cfg, **kw)
     assert isinstance(dense.store, BitmapStore)
     assert isinstance(sharded.store, ShardedStore)
 
@@ -51,14 +65,18 @@ def main():
     # --- the full arena never exists on one device ----------------------
     st = sharded.store
     shards = st.R.addressable_shards
-    assert len(shards) == 4
-    assert all(s.data.shape == (st.cap_local, g.n) for s in shards), \
+    assert len(shards) == n_dev
+    assert all(s.data.shape == (st.cap_local, st.n_local) for s in shards), \
         [s.data.shape for s in shards]
-    assert st.capacity == 4 * st.cap_local
+    assert st.capacity == st.D * st.cap_local
+    assert st.n_pad == st.Dv * st.n_local
+    if st.Dv > 1:
+        # 2D: every device holds only its n/Dv vertex columns
+        assert st.n_local < g.n, (st.n_local, g.n)
     assert {tuple(s.data.shape) for s in st.sizes.addressable_shards} == \
         {(st.cap_local,)}
-    # counter partials are sharded too (one (1, n) block per device)
-    assert all(s.data.shape == (1, g.n)
+    # counter partials are tiled too (one (1, n_local) block per device)
+    assert all(s.data.shape == (1, st.n_local)
                for s in st._counter.addressable_shards)
 
     # --- true decremental sharded strategy == rebuild == dense ----------
@@ -74,9 +92,13 @@ def main():
     np.testing.assert_allclose(
         dense.influences(queries), sharded.influences(queries), rtol=1e-6)
 
-    # --- snapshot/restore across mesh shapes ---------------------------
+    # --- snapshot/restore across mesh layouts ---------------------------
     with tempfile.TemporaryDirectory() as d:
         sharded.snapshot(d)
+        on1d = InfluenceEngine(
+            g, cfg, **mesh_engine_kwargs(make_im_mesh(n_dev)))
+        assert on1d.restore(d)
+        np.testing.assert_array_equal(on1d.select(5).seeds, r_dense.seeds)
         on1 = InfluenceEngine(g, cfg, mesh=jax.make_mesh((1,), ("data",)))
         assert on1.restore(d)
         np.testing.assert_array_equal(on1.select(5).seeds, r_dense.seeds)
@@ -87,18 +109,19 @@ def main():
         # restored engines keep sampling from the snapshotted key stream,
         # identically to the dense engine
         flat.extend(flat.theta + 64)
-        on4 = InfluenceEngine(g, cfg, mesh=mesh)
-        assert on4.restore(d)
-        on4.extend(on4.theta + 64)
+        back = InfluenceEngine(g, cfg, **kw)
+        assert back.restore(d)
+        back.extend(back.theta + 64)
         dense.extend(dense.theta + 64)
         np.testing.assert_array_equal(
-            np.asarray(dense.store.counter), np.asarray(on4.store.counter))
+            np.asarray(dense.store.counter), np.asarray(back.store.counter))
         np.testing.assert_array_equal(
             np.asarray(dense.store.counter), np.asarray(flat.store.counter))
 
     print(json.dumps({
-        "ok": True, "devices": n_dev, "theta": int(r_sharded.theta),
-        "cap_local": int(st.cap_local),
+        "ok": True, "devices": n_dev, "mesh": args.mesh,
+        "theta": int(r_sharded.theta),
+        "cap_local": int(st.cap_local), "n_local": int(st.n_local),
         "counts": [int(c) for c in st.counts],
     }))
 

@@ -203,6 +203,45 @@ def test_engine_index_store_backend_end_to_end():
     assert engine.influence(res.seeds) == pytest.approx(res.influence, rel=1e-6)
 
 
+def test_native_index_emission_matches_bitmap_and_caps_width():
+    """IndexStore + sparse backend emits lists natively (C4 routed
+    per-backend): same seed -> identical counters/selections as the
+    bitmap arena, with the emission width capped at exactly n (not the
+    next power of two — top_k cannot exceed the bitmap minor dim) even
+    when dense reachability fills every row on a non-pow2 n."""
+    g = rmat_graph(100, 3000, seed=0)          # dense sets, n not pow2
+    kw = dict(k=4, batch=16, max_theta=128, seed=1, backend="sparse")
+    ei = InfluenceEngine(g, IMMConfig(store="indices", **kw))
+    eb = InfluenceEngine(g, IMMConfig(store="bitmap", **kw))
+    assert ei._emit_l > 0                      # native emission engaged
+    ei.extend(64)
+    eb.extend(64)
+    assert ei._emit_l <= g.n
+    np.testing.assert_array_equal(np.asarray(ei.store.counter),
+                                  np.asarray(eb.store.counter))
+    np.testing.assert_array_equal(ei.select(4).seeds, eb.select(4).seeds)
+
+
+def test_restore_across_store_kinds_resets_index_emission():
+    """Snapshots are elastic across store kinds: an indices-configured
+    engine restoring a bitmap snapshot must drop native index emission,
+    or its next extend would call add_index_batch on a BitmapStore."""
+    g = rmat_graph(100, 3000, seed=0)
+    kw = dict(k=4, batch=16, max_theta=128, seed=1, backend="sparse")
+    src = InfluenceEngine(g, IMMConfig(store="bitmap", **kw))
+    src.extend(32)
+    with tempfile.TemporaryDirectory() as d:
+        src.snapshot(d)
+        idx = InfluenceEngine(g, IMMConfig(store="indices", **kw))
+        assert idx._emit_l > 0
+        assert idx.restore(d)
+        assert isinstance(idx.store, BitmapStore) and idx._emit_l == 0
+        idx.extend(64)                         # bitmap write path, no crash
+        src.extend(64)
+        np.testing.assert_array_equal(np.asarray(idx.store.counter),
+                                      np.asarray(src.store.counter))
+
+
 # ------------------------------------------------------------- registries ----
 
 def test_sampler_registry_resolves_and_rejects():

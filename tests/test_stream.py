@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.core.store import (
     BitmapStore, IndexStore, ShardedStore, StorePressurePolicy, make_store,
@@ -465,22 +466,37 @@ def test_bounded_stream_keeps_cap_and_quality():
 
 # ---------------------------------------------- snapshot provenance ----
 
+def _layout_kwargs(side):
+    """Engine keyword arguments for a snapshot-layout side: single
+    device, a 1D theta mesh, or a 2D theta x vertex mesh."""
+    if side == "flat":
+        return {}
+    if side == "mesh":
+        return {"mesh": theta_mesh()}
+    d = jax.device_count()
+    return mesh_engine_kwargs(
+        make_im_mesh((d // 2, 2) if d % 2 == 0 else (d, 1)))
+
+
 @pytest.mark.parametrize("layouts", ["flat->flat", "mesh->mesh",
-                                     "flat->mesh", "mesh->flat"])
+                                     "flat->mesh", "mesh->flat",
+                                     "flat->2d", "2d->flat",
+                                     "mesh->2d", "2d->2d"])
 def test_stream_snapshot_restores_batch_key_provenance(layouts):
     """A restored stream same-key repairs instead of topping up: after
-    snapshot/restore (across any store-layout pair), a delta + refresh
-    leaves the store seed-for-seed equal to the original stream's — and
-    to a fresh engine on the post-delta graph."""
-    src_mesh, dst_mesh = [theta_mesh() if side == "mesh" else None
-                          for side in layouts.split("->")]
+    snapshot/restore (across any store-layout pair, including onto and
+    off a 2D theta x vertex mesh), a delta + refresh leaves the store
+    seed-for-seed equal to the original stream's — and to a fresh engine
+    on the post-delta graph."""
+    src_kw, dst_kw = [_layout_kwargs(side)
+                      for side in layouts.split("->")]
     g = small_graph()
     cfg = IMMConfig(k=4, batch=64, max_theta=512, seed=7)
-    original = StreamEngine(g, cfg, mesh=src_mesh)
+    original = StreamEngine(g, cfg, **src_kw)
     original.extend(256)
     with tempfile.TemporaryDirectory() as d:
         original.snapshot(d)
-        restored = StreamEngine(g, cfg, mesh=dst_mesh)
+        restored = StreamEngine(g, cfg, **dst_kw)
         assert restored.restore(d)
     assert restored.theta == 256 and restored.target_theta == 256
     filled = np.flatnonzero(restored._slot_batch >= 0)
@@ -599,6 +615,51 @@ def test_imserver_background_refresh_epoch_consistency():
     fresh.extend(stream.theta)
     assert server.influence(probe) == pytest.approx(
         fresh.influence(probe), rel=1e-6)
+
+
+def test_imserver_async_refresh_worker_epoch_consistency():
+    """The threaded refresh worker (ROADMAP: a true async IMServer
+    queue): repair runs on a background thread *between* flushes, every
+    flush stays epoch-consistent (identical sets in one flush ->
+    identical sigma, no torn reads against the concurrent worker), the
+    backlog drains with NO refresh calls from the serving path, and the
+    drained store equals a fresh engine on the post-delta graph."""
+    g = small_graph()
+    cfg = IMMConfig(k=4, batch=64, max_theta=512, seed=3)
+    stream = StreamEngine(g, cfg)
+    stream.extend(256)
+    with IMServer(stream, max_batch=4, refresh_budget=64,
+                  async_refresh=True) as server:
+        assert server.async_refreshing
+        probe = np.asarray(server.select(4).seeds)
+        rng = np.random.default_rng(20)
+        for _ in range(3):            # several epochs under live repair
+            t0 = server.submit(probe)
+            server.apply_delta(random_delta(stream.graph, rng, deletes=3,
+                                            inserts=3, reweights=2))
+            t1 = server.submit(probe)
+            t2 = server.submit(probe)
+            got = server.flush()
+            # one flush == one epoch: the worker cannot interleave a
+            # repair slice (which would change sigma) mid-flush
+            assert got[t0] == got[t1] == got[t2]
+        # the worker alone drains the backlog — no refresh() from here
+        assert server.drain(timeout=60.0)
+        assert stream.stale == 0 and server.refreshes_run > 0
+        fresh = InfluenceEngine(stream.graph, stream.cfg)
+        fresh.extend(stream.theta)
+        np.testing.assert_array_equal(np.asarray(stream.store.counter),
+                                      np.asarray(fresh.store.counter))
+        assert server.influence(probe) == pytest.approx(
+            fresh.influence(probe), rel=1e-6)
+    assert not server.async_refreshing        # context exit stopped it
+
+
+def test_imserver_async_refresh_requires_budget():
+    g = small_graph()
+    stream = StreamEngine(g, IMMConfig(batch=32))
+    with pytest.raises(ValueError, match="refresh_budget"):
+        IMServer(stream, async_refresh=True)
 
 
 def test_imserver_rejects_refresh_budget_on_static_engine():
