@@ -5,12 +5,20 @@ five core keys —
 
     {"name": ..., "mesh": ..., "n": ..., "theta": ..., "wall_s": ...}
 
+— plus two provenance keys stamped automatically at write time —
+
+    {"git_sha": ..., "device_kind": ...}
+
 — plus bench-specific extras (``model``/``backend`` for the sampler
-matrix, ``bytes_per_device`` for the sharding scaling bench, ...), so the
-benchmark-trajectory tooling can diff any two BENCH files without
+matrix, ``bytes_per_device`` for the sharding scaling bench,
+``p50_ms``/``p99_ms``/``cache_hit_rate`` for the serving tier, ...), so
+the benchmark-trajectory tooling can diff any two BENCH files without
 per-bench parsers.  ``mesh`` is the layout tag: ``"1"`` for
 single-device, ``"R"`` for a 1D theta mesh, ``"RxC"`` for a 2D
 theta x vertex mesh (`mesh_tag` derives it from a ``jax.sharding.Mesh``).
+``git_sha`` is the commit the numbers were measured at and
+``device_kind`` the platform they were measured on (``cpu``/``tpu``/
+``gpu``) — committed BENCH files are only comparable when both match.
 
 Use `bench_row` to build rows and `write_bench` to emit the file — both
 validate the schema, so a bench cannot silently drop a core key.
@@ -18,8 +26,32 @@ validate the schema, so a bench cannot silently drop a core key.
 from __future__ import annotations
 
 import json
+import subprocess
 
 SCHEMA_KEYS = ("name", "mesh", "n", "theta", "wall_s")
+STAMP_KEYS = ("git_sha", "device_kind")
+
+
+def git_sha() -> str:
+    """Short commit sha of the working tree, with a ``-dirty`` suffix
+    when it carries uncommitted changes ("unknown" outside git)."""
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.TimeoutExpired):
+        return "unknown"
+
+
+def device_kind() -> str:
+    """Accelerator platform of device 0 (``cpu``/``gpu``/``tpu``)."""
+    try:
+        import jax
+        return jax.devices()[0].platform
+    except Exception:
+        return "unknown"
 
 
 def mesh_tag(mesh) -> str:
@@ -36,7 +68,8 @@ def bench_row(name: str, *, n: int, theta: int, wall_s: float,
               mesh=None, **extra) -> dict:
     """One schema-conformant benchmark row.  ``mesh`` may be None, a
     ``jax.sharding.Mesh``, or a pre-built tag string; ``extra`` keys ride
-    along after the core five."""
+    along after the core five.  Provenance (`STAMP_KEYS`) is stamped by
+    `write_bench`."""
     tag = mesh if isinstance(mesh, str) else mesh_tag(mesh)
     row = {"name": str(name), "mesh": tag, "n": int(n),
            "theta": int(theta), "wall_s": round(float(wall_s), 4)}
@@ -48,11 +81,16 @@ def bench_row(name: str, *, n: int, theta: int, wall_s: float,
 
 
 def write_bench(path: str, rows: list[dict]) -> str:
-    """Validate and write BENCH rows; returns ``path``."""
+    """Validate, stamp provenance (``git_sha``, ``device_kind`` — once
+    per file, identical on every row), and write BENCH rows; returns
+    ``path``."""
+    stamp = {"git_sha": git_sha(), "device_kind": device_kind()}
     for i, row in enumerate(rows):
         missing = [k for k in SCHEMA_KEYS if k not in row]
         if missing:
             raise ValueError(f"bench row {i} is missing {missing}: {row}")
+        for k in STAMP_KEYS:
+            row.setdefault(k, stamp[k])
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {path} ({len(rows)} rows)")

@@ -1,0 +1,211 @@
+"""Serving-tier benchmark: multi-tenant latency, throughput, and cache
+behaviour under a trace-driven load (BENCH_6).
+
+Drives an `IMServe` tier with >= 4 tenants — alternating static and
+streaming campaigns, one relaxed-SLO tenant reading from replicas, one
+tenant sharing another's engine — through a Zipf-skewed Poisson query
+trace with `GraphDelta` batches interleaved mid-stream, while the
+SLO-aware refresh worker repairs staleness in the background.
+
+The full (non ``--tiny``) run models a million-user-scale universe:
+``--users`` is each tenant's campaign population (default 262144, so 4
+tenants span a 2^20-user universe) and — following the repo's Table III
+convention for the paper's SNAP graphs — each campaign executes as a
+density-preserving scaled RMAT replica of that population
+(``n = users * scale``; absolute times are CPU-container numbers, the
+latency/throughput/hit-rate *structure* is the reproduction target).
+``--scale 1`` runs the universe at full size if you have the hardware.
+
+Reported per run and per tenant:
+
+  * ``p50_ms`` / ``p99_ms`` — end-to-end query latency (submit ->
+    answered, queueing under DRR included);
+  * ``qps`` — answered throughput over the serving wall-clock;
+  * ``cache_hit_rate`` — fraction of queries answered from the
+    epoch-keyed sigma cache (the trace's hot pools make this non-zero);
+  * ``refreshes`` — engine refresh slices run by the scheduler.
+
+Emits machine-readable ``BENCH_6.json`` rows
+``{name, mesh, n, theta, wall_s}`` + the extras above (shared
+`benchmarks._emit` schema) next to a human table.
+
+    PYTHONPATH=src python -m benchmarks.serve_tier [--tiny] [--mesh M]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks._emit import bench_row, mesh_tag, write_bench
+from benchmarks._util import print_table
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
+from repro.core.engine import IMMConfig
+from repro.graphs import rmat_graph
+from repro.serve import (
+    IMServe, TenantSpec, make_trace, replay, trace_summary, zipf_rates,
+)
+
+
+def _percentiles_ms(latencies: list[float]) -> tuple[float, float]:
+    if not latencies:
+        return 0.0, 0.0
+    arr = np.asarray(latencies)
+    return (float(np.percentile(arr, 50)) * 1e3,
+            float(np.percentile(arr, 99)) * 1e3)
+
+
+def _specs(names, n, m, theta, replicas, max_pending, seed):
+    """The tenant mix the tier exists for: alternating static/streaming,
+    one relaxed-SLO replicated reader, one shared-engine slot (the last
+    tenant plans against the first's network)."""
+    specs = []
+    for i, name in enumerate(names):
+        g = rmat_graph(n, m, seed=seed + 10 + i, weighted_ic="wc")
+        cfg = IMMConfig(k=10, batch=max(theta // 4, 64),
+                        max_theta=max(theta, 1 << 20), seed=seed + i)
+        streaming = i % 2 == 1
+        relaxed = i == 2 and replicas > 0
+        share = (names[0] if i == len(names) - 1 and len(names) >= 5
+                 else None)
+        if share is not None:
+            specs.append(TenantSpec(name, share_engine_with=share,
+                                    weight=0.5, max_pending=max_pending))
+        else:
+            specs.append(TenantSpec(
+                name, graph=g, cfg=cfg, theta=theta, streaming=streaming,
+                slo="relaxed" if relaxed else "strict",
+                replicas=replicas if relaxed else 0,
+                weight=2.0 if i == 0 else 1.0, max_pending=max_pending))
+    return specs
+
+
+def run(tenants=4, users=16384, scale=1.0, theta=1024, duration=1.0,
+        qps=256.0, skew=1.0, quantum=8, refresh_budget=512, replicas=1,
+        max_pending=4096, mesh=None, seed=0, log=print):
+    n = max(int(users * scale), 256)
+    names = [f"campaign-{i}" for i in range(tenants)]
+    specs = _specs(names, n, n * 8, theta, replicas, max_pending, seed)
+
+    tier = IMServe(quantum=quantum, refresh_budget=refresh_budget,
+                   mesh_kwargs=mesh_engine_kwargs(mesh))
+    t0 = time.perf_counter()
+    for spec in specs:
+        tier.register(spec)
+    t_register = time.perf_counter() - t0
+
+    graphs = {t.name: t.graph for t in tier.tenants.values()}
+    streaming = {t.name: t.streaming and t.owns_engine
+                 for t in tier.tenants.values()}
+    trace = make_trace(
+        graphs, duration=duration,
+        qps=zipf_rates(names, qps * tenants, skew,
+                       np.random.default_rng(seed)),
+        streaming=streaming, delta_period=duration / 4, delta_ops=4,
+        seed=seed + 1)
+    summary = trace_summary(trace)
+
+    with tier:
+        tier.start_refresh_worker()
+        t0 = time.perf_counter()
+        answered, rejected = replay(tier, trace)
+        drained = tier.drain(timeout=60.0)
+    wall = time.perf_counter() - t0
+
+    stats = tier.stats()
+    rows, bench = [], []
+
+    def record(name, graph_n, lat_ms, served_qps, hit_rate, refreshes,
+               wall_s, extra=""):
+        p50, p99 = lat_ms
+        bench.append(bench_row(
+            name, n=graph_n, theta=theta, wall_s=wall_s, mesh=mesh,
+            tenants=tenants, users=users, scale=scale,
+            qps=round(served_qps, 2),
+            p50_ms=round(p50, 3), p99_ms=round(p99, 3),
+            refreshes=refreshes, cache_hit_rate=round(hit_rate, 4)))
+        rows.append([name, graph_n, f"{served_qps:.1f}", f"{p50:.2f}",
+                     f"{p99:.2f}", f"{hit_rate:.3f}", refreshes, extra])
+
+    per_tenant_lat = {name: [] for name in names}
+    for tid in answered:
+        r = tier.result(tid)
+        per_tenant_lat[r.tenant].append(r.latency_s)
+    all_lat = [v for ls in per_tenant_lat.values() for v in ls]
+
+    total_refreshes = sum(
+        ts.get("refreshes", 0) for ts in stats["tenants"].values()
+        if not ts["shared_engine"])
+    record("serve-tier", n * tenants, _percentiles_ms(all_lat),
+           len(answered) / max(wall, 1e-9),
+           stats["cache"]["hit_rate"], total_refreshes, wall,
+           f"rejected={rejected} drained={drained}")
+    for name in names:
+        ts = stats["tenants"][name]
+        hits = ts["cache_hits"] / max(ts["served"], 1)
+        record(f"tenant:{name}", n, _percentiles_ms(per_tenant_lat[name]),
+               len(per_tenant_lat[name]) / max(wall, 1e-9), hits,
+               0 if ts["shared_engine"] else ts.get("refreshes", 0), wall,
+               f"{summary[name]['queries']}q/"
+               f"{summary[name]['deltas']}d"
+               + (" shared" if ts["shared_engine"] else "")
+               + (" relaxed" if ts["slo"] == "relaxed" else ""))
+
+    print_table(
+        f"IMServe tier ({tenants} tenants x {users} users @ scale "
+        f"{scale:g} -> n={n}, theta={theta}, {len(trace)} events, "
+        f"mesh={mesh_tag(mesh)})",
+        ["name", "n", "qps", "p50_ms", "p99_ms", "hit_rate", "refreshes",
+         "notes"], rows)
+    log(f"register {t_register:.2f}s; serve {wall:.2f}s; "
+        f"{len(answered)} answered, {rejected} rejected, "
+        f"cache hit rate {stats['cache']['hit_rate']:.3f}, "
+        f"{total_refreshes} refresh slices "
+        f"({stats.get('refresh', {}).get('rows_granted', 0)} rows); "
+        f"drained={drained}")
+    assert drained, "refresh scheduler failed to drain the backlog"
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny graphs, short trace")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--users", type=int, default=262144,
+                    help="campaign population per tenant (4 x 262144 = "
+                         "a 2^20-user universe)")
+    ap.add_argument("--scale", type=float, default=1.0 / 16,
+                    help="density-preserving replica factor the campaign "
+                         "executes at (Table III convention)")
+    ap.add_argument("--theta", type=int, default=1024)
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--qps", type=float, default=96.0,
+                    help="mean per-tenant query rate (Zipf-skewed)")
+    ap.add_argument("--skew", type=float, default=1.0)
+    ap.add_argument("--refresh-budget", type=int, default=512)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="engine mesh for every tenant: N, 'auto', "
+                         "or 'RxC' (see configs.imm_snap.make_im_mesh)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_6.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+    mesh = make_im_mesh(args.mesh)
+    if args.tiny:
+        bench = run(tenants=4, users=192, scale=1.0, theta=256,
+                    duration=0.25, qps=64.0, refresh_budget=256,
+                    replicas=args.replicas, mesh=mesh, seed=args.seed)
+    else:
+        bench = run(tenants=args.tenants, users=args.users,
+                    scale=args.scale, theta=args.theta,
+                    duration=args.duration, qps=args.qps, skew=args.skew,
+                    refresh_budget=args.refresh_budget,
+                    replicas=args.replicas, mesh=mesh, seed=args.seed)
+    write_bench(args.out, bench)
+
+
+if __name__ == "__main__":
+    main()

@@ -60,5 +60,29 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.sampler_matrix --tiny \
         --out "${TMPDIR:-/tmp}/BENCH_4.json"
 
+# serve-tier smoke (IMServe): a tiny multi-tenant trace — static +
+# streaming tenants, interleaved deltas, a relaxed-SLO replica tenant,
+# background SLO-aware refresh — through the launch CLI and the BENCH_6
+# emitter, first on the default single-device engines...
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --workload tier \
+        --tenants 3 --tier-n 128 --max-theta 256 --duration 0.25 \
+        --qps 64 --refresh-budget 128 --replicas 1
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.serve_tier --tiny \
+        --out "${TMPDIR:-/tmp}/BENCH_6.json"
+
+# ...then with every tenant engine (and its replica fan-out) on a forced
+# 4-device 2x2 theta x vertex mesh — the serving tier is layout-agnostic
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m repro.launch.serve --workload tier \
+        --tenants 3 --tier-n 128 --max-theta 256 --duration 0.25 \
+        --qps 64 --refresh-budget 128 --replicas 1 --mesh 2x2
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m benchmarks.serve_tier --tiny --mesh 2x2 \
+        --out "${TMPDIR:-/tmp}/BENCH_6.json"
+
 # docs health: files referenced from README/docs must exist
 python scripts/check_docs.py

@@ -70,6 +70,26 @@ def _unflatten(spec, leaves):
     return children if kind == "list" else tuple(children)
 
 
+def clone_tree(tree):
+    """An independent host copy of a snapshot pytree.
+
+    Replica fan-out hands one ``snapshot_tree`` to many engines; each
+    restore must own its leaves — the primary keeps mutating (and its
+    stores donate device buffers on every write), so replicas may not
+    hold references into its state.  Flattening already converts every
+    leaf to host numpy; the per-leaf ``np.array`` copy makes the clone
+    independent of the source tree as well."""
+    spec, leaves = _flatten(tree)
+    return _unflatten(spec, {k: np.array(v) for k, v in leaves.items()})
+
+
+def tree_bytes(tree) -> int:
+    """Total host bytes of a snapshot pytree's leaves — what one replica
+    fan-out ships (serve-tier accounting)."""
+    _, leaves = _flatten(tree)
+    return sum(int(v.nbytes) for v in leaves.values())
+
+
 def _is_writer() -> bool:
     try:
         return jax.process_index() == 0

@@ -439,6 +439,27 @@ class InfluenceEngine:
         self.restore_tree(tree)
         return True
 
+    def replicate(self, tree: dict = None) -> "InfluenceEngine":
+        """A read replica of this engine: a new engine over the same
+        graph/config/mesh whose store and PRNG state are restored from
+        ``tree`` (default: a fresh ``snapshot_tree`` of this engine).
+
+        The tree is deep-copied host-side first (`checkpoint.store.
+        clone_tree`), so one snapshot fans out to any number of replicas
+        none of which alias the primary's buffers — the primary keeps
+        serving (and donating its arena on writes) while replicas answer
+        ``select``/``influence`` queries bitwise-identically to the
+        primary at the snapshot's store state.  Replicas restore through
+        the same elastic path as `restore`, so a mesh-sharded primary
+        fans out to mesh-sharded replicas."""
+        if tree is None:
+            tree = self.snapshot_tree()
+        replica = InfluenceEngine(
+            self.graph, self.cfg, mesh=self.mesh,
+            theta_axes=self.theta_axes, vertex_axis=self.vertex_axis)
+        replica.restore_tree(ckpt.clone_tree(tree))
+        return replica
+
     # -------------------------------------------------- Algorithm 1 driver
 
     def run(self) -> IMMResult:

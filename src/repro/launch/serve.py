@@ -27,6 +27,18 @@ Two workloads share this module:
 
     PYTHONPATH=src python -m repro.launch.serve --workload im \
         --graph com-Amazon --queries 64 --mesh auto --deltas 4
+
+A third workload, ``--workload tier``, is a thin CLI over the
+**multi-tenant serving tier** (`repro.serve.IMServe` — engine pools,
+admission control + DRR fairness, the epoch-keyed sigma(S) cache,
+replica read scaling, SLO-aware refresh scheduling; docs/serving.md):
+it registers ``--tenants`` campaigns (static and streaming, one
+relaxed-SLO tenant with ``--replicas``), generates a Zipf-skewed
+arrival-process trace interleaved with GraphDeltas
+(`repro.serve.trace`), and replays it with the refresh worker running:
+
+    PYTHONPATH=src python -m repro.launch.serve --workload tier \
+        --tenants 4 --qps 256 --duration 1.0 --mesh auto
 """
 from __future__ import annotations
 
@@ -138,7 +150,14 @@ class IMServer:
     # ------------------------------------------------- async refresh ----
 
     def start_refresh_worker(self) -> None:
-        """Start the background repair worker (idempotent)."""
+        """Start the background repair worker.  Idempotent: a second
+        call while the worker is alive is a no-op, and a stopped server
+        (``stop_refresh_worker``/``close``/``__exit__``) can be
+        restarted by calling this again."""
+        if self.refresh_budget is None:
+            raise ValueError(
+                "the refresh worker needs a refresh_budget (it repairs "
+                "in budget-row slices)")
         if self._worker is not None and self._worker.is_alive():
             return
         self._stop.clear()
@@ -147,11 +166,14 @@ class IMServer:
         self._worker.start()
 
     def stop_refresh_worker(self) -> None:
-        """Stop the worker and join it (idempotent)."""
+        """Stop the worker and join it.  Safe to call any number of
+        times, in any state — twice, after ``close``, after the context
+        manager has already exited, or with no worker ever started —
+        and safe from the worker thread itself (no self-join)."""
         self._stop.set()
-        if self._worker is not None:
-            self._worker.join()
-            self._worker = None
+        worker, self._worker = self._worker, None
+        if worker is not None and worker is not threading.current_thread():
+            worker.join()
 
     close = stop_refresh_worker
 
@@ -244,22 +266,32 @@ class IMServer:
         with self._lock:
             return self.engine.select(k)
 
-    def drain(self, timeout: float = 30.0) -> bool:
-        """Block until the async worker has repaired the whole backlog
-        (True) or ``timeout`` elapses (False).  Without a worker this
-        refreshes inline until consistent."""
-        if not self.async_refreshing:
-            with self._lock:
-                while getattr(self.engine, "stale", 0) > 0:
-                    self.engine.refresh(self.refresh_budget)
-            return True
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
+    def drain(self, timeout: float | None = 30.0) -> bool:
+        """Block until the staleness backlog is fully repaired (True) or
+        ``timeout`` seconds elapse (False); ``timeout=None`` waits
+        forever.  With a live async worker this waits on it; otherwise
+        it refreshes inline in budget-row slices, re-checking the
+        deadline between slices so a finite timeout is honored on the
+        inline path too (a backlog bigger than the time allows returns
+        False with partial progress kept)."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
+        while True:
             with self._lock:
                 if getattr(self.engine, "stale", 0) == 0:
                     return True
-            time.sleep(0.002)
-        return False
+                if not self.async_refreshing:
+                    self.engine.refresh(self.refresh_budget)
+                    continue_inline = True
+                else:
+                    continue_inline = False
+            if deadline is not None and time.monotonic() > deadline:
+                with self._lock:
+                    if getattr(self.engine, "stale", 0) == 0:
+                        return True
+                return False
+            if not continue_inline:
+                time.sleep(0.002)
 
 
 def _main_lm(args):
@@ -361,9 +393,73 @@ def _main_im(args):
               f"select(k={args.k}) influence={final.influence:.1f}")
 
 
+def _main_tier(args):
+    """Thin CLI over the `repro.serve.IMServe` tier: N tenants (static
+    and streaming alternating, one relaxed-SLO tenant with replicas when
+    ``--replicas`` > 0), a Zipf-skewed Poisson query trace interleaved
+    with GraphDeltas, replayed in arrival order with the SLO-aware
+    refresh worker running in the background."""
+    import numpy as np
+    from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
+    from repro.core.engine import IMMConfig
+    from repro.graphs import rmat_graph
+    from repro.serve import (
+        IMServe, TenantSpec, make_trace, replay, trace_summary, zipf_rates,
+    )
+
+    mesh_kw = mesh_engine_kwargs(make_im_mesh(args.mesh))
+    cfg = IMMConfig(k=args.k, batch=min(args.max_theta, 256),
+                    max_theta=max(args.max_theta, 1 << 20), seed=0)
+    tier = IMServe(quantum=args.quantum, refresh_budget=args.refresh_budget,
+                   mesh_kwargs=mesh_kw)
+    graphs, stream_map = {}, {}
+    for i in range(args.tenants):
+        name = f"tenant{i}"
+        streaming = i % 2 == 1
+        relaxed = args.replicas > 0 and i == 2 % max(args.tenants, 1)
+        g = rmat_graph(args.tier_n, args.tier_n * 8, seed=10 + i,
+                       weighted_ic="wc")
+        tier.register(TenantSpec(
+            name, graph=g, cfg=cfg, theta=args.max_theta,
+            streaming=streaming,
+            slo="relaxed" if relaxed else "strict",
+            replicas=args.replicas if relaxed else 0,
+            max_pending=args.max_pending))
+        graphs[name], stream_map[name] = g, streaming
+    print(f"[serve-tier] {args.tenants} tenants x n={args.tier_n} "
+          f"(theta={args.max_theta}, mesh={args.mesh or 1}) registered")
+
+    events = make_trace(
+        graphs, duration=args.duration,
+        qps=zipf_rates(sorted(graphs), args.qps, args.skew,
+                       np.random.default_rng(1)),
+        streaming=stream_map, delta_period=args.duration / 4,
+        seed=2)
+    print(f"[serve-tier] trace: {len(events)} events "
+          f"{trace_summary(events)}")
+    tier.start_refresh_worker()
+    t0 = time.time()
+    answered, rejected = replay(tier, events, pump_every=args.quantum * 2)
+    wall = time.time() - t0
+    drained = tier.drain(timeout=60.0)
+    tier.close()
+    lat = sorted(tier.result(t).latency_s for t in answered)
+    stats = tier.stats()
+    print(f"[serve-tier] {len(answered)} answered / {rejected} rejected "
+          f"in {wall:.2f}s ({len(answered) / max(wall, 1e-9):.1f} q/s), "
+          f"p50={lat[len(lat) // 2] * 1e3:.1f}ms "
+          f"p99={lat[int(len(lat) * 0.99)] * 1e3:.1f}ms")
+    print(f"[serve-tier] cache {stats['cache']}, "
+          f"refresh {stats.get('refresh')}, drained={drained}")
+    for name, ts in sorted(stats["tenants"].items()):
+        print(f"  {name}: served={ts['served']} rejected={ts['rejected']} "
+              f"cache_hits={ts['cache_hits']} epoch={ts['epoch']} "
+              f"refreshes={ts['refreshes']}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="lm", choices=("lm", "im"))
+    ap.add_argument("--workload", default="lm", choices=("lm", "im", "tier"))
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -393,8 +489,28 @@ def main(argv=None):
                     help="IM store mesh: int or 'auto' (1D theta "
                          "sharding), 'RxC' e.g. '2x4' (2D theta x "
                          "vertex), or omit for single-device")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="tier workload: campaigns to register")
+    ap.add_argument("--tier-n", type=int, default=512,
+                    help="tier workload: vertices per tenant graph")
+    ap.add_argument("--duration", type=float, default=1.0,
+                    help="tier workload: trace length (virtual seconds)")
+    ap.add_argument("--qps", type=float, default=256.0,
+                    help="tier workload: total query arrival rate")
+    ap.add_argument("--skew", type=float, default=1.0,
+                    help="tier workload: Zipf exponent of per-tenant "
+                         "traffic shares")
+    ap.add_argument("--quantum", type=int, default=8,
+                    help="tier workload: DRR quantum per round")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="tier workload: read replicas for the "
+                         "relaxed-SLO tenant (0 disables)")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="tier workload: per-tenant admission queue cap")
     args = ap.parse_args(argv)
-    if args.workload == "im":
+    if args.workload == "tier":
+        _main_tier(args)
+    elif args.workload == "im":
         _main_im(args)
     else:
         _main_lm(args)

@@ -1,0 +1,36 @@
+"""IMServe — multi-tenant influence serving (the tier above the engines).
+
+Public surface:
+
+  * `IMServe` / `ServedQuery` — the tier: tenant registry, admission +
+    DRR fairness, epoch-keyed result cache, replica routing, SLO-aware
+    refresh scheduling (`repro.serve.tier`);
+  * `TenantSpec` / `Tenant` — campaign declaration + runtime object
+    (`repro.serve.tenant`);
+  * `ResultCache` — the ``(tenant, epoch, frozenset(S))`` sigma cache
+    (`repro.serve.cache`);
+  * `DeficitRoundRobin` / `QueryTicket` / `AdmissionError` — the
+    admission-controlled fair queue (`repro.serve.admission`);
+  * `RefreshScheduler` / `RefreshAllocation` — backlog-proportional
+    budget splitting (`repro.serve.scheduler`);
+  * `ReplicaGroup` — epoch-consistent snapshot fan-out for read scaling
+    (`repro.serve.replica`);
+  * `make_trace` / `TraceEvent` / `zipf_rates` / `trace_summary` — the
+    trace-driven load generator (`repro.serve.trace`).
+
+See docs/serving.md for the architecture.
+"""
+from repro.serve.admission import (       # noqa: F401
+    AdmissionError, DeficitRoundRobin, QueryTicket,
+)
+from repro.serve.cache import ResultCache               # noqa: F401
+from repro.serve.replica import ReplicaGroup            # noqa: F401
+from repro.serve.scheduler import (                     # noqa: F401
+    RefreshAllocation, RefreshScheduler,
+)
+from repro.serve.tenant import Tenant, TenantSpec       # noqa: F401
+from repro.serve.tier import IMServe, ServedQuery       # noqa: F401
+from repro.serve.trace import (                         # noqa: F401
+    KIND_DELTA, KIND_QUERY, TraceEvent, make_trace, replay,
+    trace_summary, zipf_rates,
+)

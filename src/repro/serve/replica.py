@@ -1,0 +1,106 @@
+"""Read replicas with epoch-consistent snapshot fan-out.
+
+One engine serializes every query on one lock; past a point, read
+throughput scales only by *copying* the resident store.  A
+`ReplicaGroup` keeps ``n`` read-only engine replicas of a primary: a
+``sync`` takes **one** snapshot tree of the primary (under the caller's
+tenant lock, so the snapshot is a single consistent store state — one
+epoch, never a torn mix) and fans it out to every replica through
+`repro.core.engine.InfluenceEngine.replicate` /
+``restore_tree(clone_tree(...))``.  All replicas therefore hold bitwise
+the same store, tagged with the epoch it was taken at: a query answered
+by *any* replica is identical to any other replica's answer, and
+identical to the primary's answer at that epoch.
+
+Replicas are deliberately allowed to lag the primary (that is what makes
+them cheap): the tier routes only relaxed-SLO queries here and tags the
+answers with ``synced_epoch``.  Strict-SLO queries keep hitting the
+primary.  Because the fan-out path is the elastic snapshot restore, a
+mesh-sharded primary fans out to mesh-sharded replicas unchanged.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.checkpoint import store as ckpt
+
+
+def _base_engine(primary):
+    """The `InfluenceEngine` under a primary (unwraps `StreamEngine`)."""
+    return primary.engine if hasattr(primary, "engine") else primary
+
+
+class ReplicaGroup:
+    """``n`` epoch-consistent read replicas of one primary engine."""
+
+    def __init__(self, primary, n_replicas: int):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.primary = primary
+        self.n_replicas = int(n_replicas)
+        self.replicas: list = []
+        self.synced_epoch = -1          # no sync yet: group not servable
+        self.syncs = 0
+        self.bytes_shipped = 0
+        self.reads = 0
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    @property
+    def servable(self) -> bool:
+        return self.synced_epoch >= 0
+
+    def sync(self, epoch: int = None) -> int:
+        """Fan the primary's current store out to every replica.
+
+        Call under the tenant lock: the snapshot tree is read once from
+        a quiescent primary, deep-copied per replica (`clone_tree` — the
+        primary donates its arena buffers on its next write, replicas
+        must own theirs), and restored everywhere, so the whole group
+        lands on one store state.  ``epoch`` tags the group (default:
+        the primary's current epoch).  Returns the synced epoch."""
+        base = _base_engine(self.primary)
+        tree = base.snapshot_tree()
+        per_replica = ckpt.tree_bytes(tree)
+        with self._lock:
+            if not self.replicas:
+                self.replicas = [base.replicate(tree)
+                                 for _ in range(self.n_replicas)]
+            else:
+                for r in self.replicas:
+                    r.restore_tree(ckpt.clone_tree(tree))
+            for r in self.replicas:
+                if r.graph is not base.graph:
+                    r.rebind_graph(base.graph)   # deltas moved the graph
+            self.synced_epoch = (int(epoch) if epoch is not None
+                                 else getattr(self.primary, "epoch", 0))
+            self.syncs += 1
+            self.bytes_shipped += per_replica * self.n_replicas
+            return self.synced_epoch
+
+    def _next(self):
+        with self._lock:
+            if not self.replicas:
+                raise RuntimeError("ReplicaGroup serves only after sync()")
+            r = self.replicas[self._rr % len(self.replicas)]
+            self._rr += 1
+            self.reads += 1
+            return r
+
+    # ----------------------------------------------------------- queries
+
+    def influences(self, seed_sets) -> np.ndarray:
+        """Batched sigma(S) from the next replica (round-robin)."""
+        return self._next().influences(seed_sets)
+
+    def select(self, k: int):
+        """Top-k from the next replica (round-robin; each replica keeps
+        its own memoization, warmed independently)."""
+        return self._next().select(k)
+
+    def stats(self) -> dict:
+        return {"replicas": self.n_replicas, "synced_epoch": self.synced_epoch,
+                "syncs": self.syncs, "bytes_shipped": self.bytes_shipped,
+                "reads": self.reads}

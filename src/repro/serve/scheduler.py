@@ -1,0 +1,91 @@
+"""SLO-aware refresh scheduling: spend the repair budget where the graph
+actually changed.
+
+The tier has one global ``refresh_budget`` (rows repaired per scheduling
+step — the knob that bounds repair's interference with serving).  A
+single-tenant server just calls ``engine.refresh(budget)``; a tier must
+*split* the budget, and splitting it evenly is exactly the mistake the
+source paper's dynamic load balancing exists to avoid: tenants whose
+graphs barely changed would burn budget on empty refresh passes while a
+tenant hit by a hub mutation sits on a huge stale backlog.
+
+`RefreshScheduler.allocate` therefore distributes the budget
+proportionally to each streaming tenant's *weighted staleness backlog*
+(``weight * engine.stale`` — the reverse-touch invalidation counts from
+``repro.stream.invalidate``, surfaced by `StreamEngine.backlog`), with
+largest-remainder rounding so the integer budgets sum exactly to the
+global one, and a floor of one row per backlogged tenant whenever the
+budget covers them (refresh progress is batch-granular, so even a
+1-row allocation repairs that tenant's smallest stale batch — no tenant's
+backlog is starved indefinitely).  Tenants with zero backlog get zero
+budget: allocation — and hence repair work — tracks where deltas landed,
+not tenant count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshAllocation:
+    """One tenant's slice of a scheduling step's global budget."""
+    tenant: str
+    budget: int          # rows of repair granted this step
+    backlog: int         # staleness backlog observed at allocation time
+
+
+class RefreshScheduler:
+    """Splits a global per-step repair budget across tenant backlogs."""
+
+    def __init__(self, budget: int):
+        if budget < 1:
+            raise ValueError(f"refresh budget must be >= 1, got {budget}")
+        self.budget = int(budget)
+        self.steps = 0
+        self.rows_granted = 0
+
+    def allocate(self, backlogs: dict[str, int],
+                 weights: dict[str, float] = None) -> list[RefreshAllocation]:
+        """Budget split for one step.
+
+        ``backlogs`` maps tenant -> staleness backlog (zero-backlog
+        tenants may be included; they get nothing).  ``weights`` maps
+        tenant -> SLO priority multiplier (default 1.0).  Returns
+        allocations for backlogged tenants, largest share first; the
+        granted budgets sum to ``min(self.budget, sum(backlogs))``.
+        """
+        weights = weights or {}
+        live = {t: int(b) for t, b in backlogs.items() if b > 0}
+        if not live:
+            return []
+        shares = {t: b * float(weights.get(t, 1.0)) for t, b in live.items()}
+        total_share = sum(shares.values())
+        budget = min(self.budget, sum(live.values()))
+        # floor of 1 for every backlogged tenant the budget can cover
+        # (deterministically prefer the largest shares when it cannot),
+        # then largest-remainder proportional split of the rest
+        order = sorted(live, key=lambda t: (-shares[t], t))
+        covered = order[:budget]
+        grant = {t: 1 for t in covered}
+        rest = budget - len(covered)
+        if rest > 0:
+            quota = {t: rest * shares[t] / total_share for t in covered}
+            for t in covered:
+                extra = min(int(quota[t]), live[t] - grant[t])
+                grant[t] += extra
+                rest -= extra
+            # remainders: largest fractional part first, capped at backlog
+            frac = sorted(covered,
+                          key=lambda t: (-(quota[t] - int(quota[t])), t))
+            i = 0
+            while rest > 0 and any(grant[t] < live[t] for t in covered):
+                t = frac[i % len(frac)]
+                if grant[t] < live[t]:
+                    grant[t] += 1
+                    rest -= 1
+                i += 1
+        self.steps += 1
+        out = [RefreshAllocation(t, grant[t], live[t])
+               for t in order if t in grant and grant[t] > 0]
+        self.rows_granted += sum(a.budget for a in out)
+        return out

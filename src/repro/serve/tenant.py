@@ -1,0 +1,174 @@
+"""Tenant registry — one campaign, one (or one slot on a) serving engine.
+
+A *tenant* is a campaign being served by the tier: its graph, its IMM
+config, its resident-store target theta, and its serving contract (SLO
+class, fairness weight, admission queue depth, replica count).  The
+`TenantSpec` is the declarative half; `Tenant` is the runtime object the
+tier schedules — it owns the engine (a `StreamEngine` for evolving
+graphs, a plain `InfluenceEngine` for static ones), the per-tenant
+admission queue state, the engine lock every query and refresh slice
+serializes on, and the serving statistics.
+
+**Engine pools.**  Tenants normally get their own engine, but several
+campaigns planning against the *same* network (the competitive-IM
+scenario: two brands seeding one social graph) can share one engine
+slot: ``TenantSpec(share_engine_with="other")`` points the new tenant at
+an already-registered tenant's engine and lock.  The shared store is
+sampled once and amortizes across every tenant on the slot; admission,
+fairness, and the result cache stay per-tenant (cache keys include the
+tenant name, so two campaigns' sigma(S) streams never collide).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+from repro.core.engine import IMMConfig, InfluenceEngine
+from repro.core.store import StorePressurePolicy
+from repro.graphs.csr import Graph
+from repro.stream.engine import StreamEngine
+
+#: SLO classes the tier routes on: "strict" answers always come from the
+#: tenant's primary engine at its current epoch; "relaxed" answers may be
+#: served by a read replica at the last epoch-consistent sync (bounded
+#: staleness in exchange for read scaling off the primary).
+SLO_CLASSES = ("strict", "relaxed")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """Declarative tenant description the tier registers.
+
+    Parameters
+    ----------
+    name : unique tenant id (cache keys and stats key off it).
+    graph : the campaign's network (ignored with ``share_engine_with``).
+    cfg : engine config; None = `IMMConfig()` defaults.
+    theta : resident-store target the engine samples at registration.
+    streaming : serve through a `StreamEngine` (graph deltas allowed).
+    slo : "strict" | "relaxed" (see `SLO_CLASSES`).
+    weight : deficit-round-robin fairness weight *and* refresh-budget
+        priority multiplier (2.0 = twice the service per round and twice
+        the repair budget per unit backlog).
+    max_pending : admission-control queue depth; submits past it are
+        rejected, not enqueued.
+    replicas : read replicas kept epoch-consistent by snapshot fan-out
+        (relaxed-SLO queries route to them).
+    policy : optional bounded-memory store policy (streaming tenants).
+    share_engine_with : name of an already-registered tenant whose
+        engine (and lock) this tenant shares — a slot on the shared
+        engine pool instead of a private engine.
+    """
+    name: str
+    graph: Optional[Graph] = None
+    cfg: Optional[IMMConfig] = None
+    theta: int = 1024
+    streaming: bool = False
+    slo: str = "strict"
+    weight: float = 1.0
+    max_pending: int = 1024
+    replicas: int = 0
+    policy: Optional[StorePressurePolicy] = None
+    share_engine_with: Optional[str] = None
+
+    def __post_init__(self):
+        if self.slo not in SLO_CLASSES:
+            raise ValueError(
+                f"tenant {self.name!r}: slo must be one of {SLO_CLASSES}, "
+                f"got {self.slo!r}")
+        if self.weight <= 0:
+            raise ValueError(
+                f"tenant {self.name!r}: weight must be > 0, got "
+                f"{self.weight}")
+        if self.max_pending < 1:
+            raise ValueError(
+                f"tenant {self.name!r}: max_pending must be >= 1, got "
+                f"{self.max_pending}")
+        if self.graph is None and self.share_engine_with is None:
+            raise ValueError(
+                f"tenant {self.name!r} needs a graph (or an engine slot "
+                f"via share_engine_with)")
+
+
+class Tenant:
+    """Runtime tenant: engine + lock + serving counters.
+
+    ``lock`` serializes every engine access — query batches, delta
+    application, refresh slices, and replica snapshots all hold it, so a
+    batch answered under the lock reads exactly one store state (the
+    epoch-consistency guarantee; stores donate their arena buffers on
+    repair writes, so an unlocked reader could observe a deleted
+    buffer).  With ``share_engine_with`` the lock object *is* the host
+    tenant's, so co-located campaigns serialize on their shared store.
+    """
+
+    def __init__(self, spec: TenantSpec, *, engine=None, lock=None,
+                 mesh_kwargs: dict = None):
+        self.spec = spec
+        self.name = spec.name
+        if engine is not None:
+            self.engine = engine
+            self.lock = lock if lock is not None else threading.RLock()
+            self.owns_engine = False
+        else:
+            kw = dict(mesh_kwargs or {})
+            cfg = spec.cfg if spec.cfg is not None else IMMConfig()
+            if spec.streaming:
+                self.engine = StreamEngine(spec.graph, cfg,
+                                           policy=spec.policy, **kw)
+            else:
+                if spec.policy is not None:
+                    raise ValueError(
+                        f"tenant {spec.name!r}: StorePressurePolicy needs "
+                        f"streaming=True (static stores never evict)")
+                self.engine = InfluenceEngine(spec.graph, cfg, **kw)
+            self.engine.extend(spec.theta)
+            self.lock = threading.RLock()
+            self.owns_engine = True
+        # serving counters (tier-maintained; reads are monitoring-only)
+        self.submitted = 0
+        self.rejected = 0
+        self.served = 0
+        self.cache_hits = 0
+        self.replica_reads = 0
+        self.deltas_applied = 0
+        self.served_epoch = self.epoch
+
+    # ------------------------------------------------------------- state
+
+    @property
+    def streaming(self) -> bool:
+        return hasattr(self.engine, "apply_delta")
+
+    @property
+    def epoch(self) -> int:
+        """The engine's current epoch (0 forever for static tenants)."""
+        return getattr(self.engine, "epoch", 0)
+
+    @property
+    def backlog(self) -> int:
+        """Staleness backlog the refresh scheduler allocates against."""
+        return getattr(self.engine, "stale", 0)
+
+    @property
+    def graph(self) -> Graph:
+        return self.engine.graph
+
+    def stats(self) -> dict:
+        return {
+            "slo": self.spec.slo,
+            "weight": self.spec.weight,
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "served": self.served,
+            "cache_hits": self.cache_hits,
+            "replica_reads": self.replica_reads,
+            "epoch": self.epoch,
+            "served_epoch": self.served_epoch,
+            "backlog": self.backlog,
+            "deltas_applied": self.deltas_applied,
+            "refreshes": getattr(self.engine, "refreshes", 0),
+            "rows_repaired": getattr(self.engine, "rows_repaired", 0),
+            "shared_engine": not self.owns_engine,
+        }

@@ -1,0 +1,404 @@
+"""IMServe — the multi-tenant influence-serving tier.
+
+The layer *above* the engines: `launch/serve.py`'s `IMServer` is one
+engine, one lock, one refresh thread; this module multiplexes many
+campaigns over engines with the policies production serving actually
+needs:
+
+  * **tenant registry** (`repro.serve.tenant`): each campaign gets its
+    own `StreamEngine`/`InfluenceEngine` — or a slot on a shared engine
+    for campaigns planning against the same network;
+  * **admission control + fairness** (`repro.serve.admission`):
+    per-tenant bounded queues (floods are rejected at the door) drained
+    in deficit-round-robin order, so a heavy tenant can neither starve
+    nor be starved;
+  * **epoch-keyed result cache** (`repro.serve.cache`): sigma(S) keyed
+    on ``(tenant, epoch, frozenset(S))``, invalidated exactly when the
+    tenant's served epoch advances — a hit is bitwise identical to
+    recomputing;
+  * **replica read scaling** (`repro.serve.replica`): relaxed-SLO
+    queries route to read replicas kept epoch-consistent by snapshot
+    fan-out, strict-SLO queries always hit the primary;
+  * **SLO-aware refresh** (`repro.serve.scheduler`): one global repair
+    budget split across tenants proportional to weighted staleness
+    backlog, spent either cooperatively (`refresh_step`) or continuously
+    on a background worker.
+
+Concurrency model: every engine access — a tenant's query batch, a
+delta, a refresh slice, a replica snapshot — holds that tenant's lock,
+so each batch is answered against exactly one store state and tagged
+with its epoch (no torn reads; tested under racing threads in
+tests/test_serve_tier.py).  Different tenants' engines proceed in
+parallel — except on a device mesh, where every tenant's collectives
+target the same devices and all engine dispatch serializes on one lock
+(see ``__init__``).  The tier's own lock covers only host-side
+queue/result bookkeeping and is never held across engine work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serve.admission import (
+    AdmissionError, DeficitRoundRobin, QueryTicket,
+)
+from repro.serve.cache import ResultCache
+from repro.serve.replica import ReplicaGroup
+from repro.serve.scheduler import RefreshAllocation, RefreshScheduler
+from repro.serve.tenant import Tenant, TenantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedQuery:
+    """One answered query: the value, the epoch it was computed at, and
+    how it was served (cache / replica / primary) plus latency."""
+    ticket: int
+    tenant: str
+    value: float
+    epoch: int
+    cached: bool
+    replica: bool
+    latency_s: float
+
+
+class IMServe:
+    """Multi-tenant influence-serving tier over pooled engines.
+
+    Parameters
+    ----------
+    quantum : DRR quantum — queries a weight-1.0 tenant may serve per
+        scheduling round.
+    cache_entries : global LRU capacity of the sigma(S) result cache.
+    refresh_budget : rows of stale-RRR repair per `refresh_step`, split
+        across tenants by the SLO-aware scheduler; None disables tier
+        refresh (call tenant engines directly).
+    mesh_kwargs : `InfluenceEngine` mesh keywords applied to every
+        tenant engine this tier constructs (build with
+        ``configs.imm_snap.mesh_engine_kwargs``).
+    """
+
+    def __init__(self, *, quantum: int = 8, cache_entries: int = 65536,
+                 refresh_budget: Optional[int] = None,
+                 mesh_kwargs: dict = None):
+        self.tenants: dict[str, Tenant] = {}
+        self.replica_groups: dict[str, ReplicaGroup] = {}
+        self.cache = ResultCache(cache_entries)
+        self.queue = DeficitRoundRobin(quantum)
+        self.scheduler = (RefreshScheduler(refresh_budget)
+                          if refresh_budget is not None else None)
+        self.mesh_kwargs = dict(mesh_kwargs or {})
+        self.queries_served = 0
+        self._results: dict[int, ServedQuery] = {}
+        self._next_ticket = 0
+        # On a device mesh every tenant's engine dispatches collectives
+        # over the SAME devices; two tenants launching sharded
+        # computations from different threads can interleave their
+        # collectives' device-level rendezvous and deadlock the client
+        # (observed on forced multi-device CPU).  Meshed tenants
+        # therefore all share this one dispatch lock — cross-tenant
+        # engine parallelism only exists off-mesh.
+        self._mesh_lock = threading.RLock()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ tenants
+
+    def register(self, spec: TenantSpec) -> Tenant:
+        """Register a tenant: build (or share) its engine, sample its
+        resident store to ``spec.theta``, arm its admission queue, and
+        fan out its initial replica set."""
+        if spec.name in self.tenants:
+            raise ValueError(f"tenant {spec.name!r} already registered")
+        if spec.share_engine_with is not None:
+            host = self.tenants.get(spec.share_engine_with)
+            if host is None:
+                raise ValueError(
+                    f"tenant {spec.name!r}: share_engine_with names "
+                    f"unknown tenant {spec.share_engine_with!r}")
+            tenant = Tenant(spec, engine=host.engine, lock=host.lock)
+        else:
+            tenant = Tenant(spec, mesh_kwargs=self.mesh_kwargs)
+            if self.mesh_kwargs.get("mesh") is not None:
+                tenant.lock = self._mesh_lock   # see __init__
+
+        self.tenants[spec.name] = tenant
+        self.queue.register(spec.name, weight=spec.weight,
+                            max_pending=spec.max_pending)
+        if spec.replicas > 0:
+            group = ReplicaGroup(tenant.engine, spec.replicas)
+            with tenant.lock:
+                group.sync(tenant.epoch)
+            self.replica_groups[spec.name] = group
+        return tenant
+
+    def _tenant(self, name: str) -> Tenant:
+        t = self.tenants.get(name)
+        if t is None:
+            raise KeyError(f"unknown tenant {name!r}")
+        return t
+
+    # ------------------------------------------------------------ queries
+
+    def try_submit(self, tenant: str, seed_set) -> Optional[int]:
+        """Admission-controlled submit: ticket id, or None when the
+        tenant's queue is at its cap (the rejection is counted)."""
+        t = self._tenant(tenant)
+        seeds = np.asarray(seed_set, np.int32).reshape(-1)
+        with self._lock:
+            ticket = QueryTicket(self._next_ticket, tenant, seeds,
+                                 t_submit=time.monotonic())
+            self._next_ticket += 1
+            t.submitted += 1
+            if not self.queue.try_submit(ticket):
+                t.rejected += 1
+                return None
+        return ticket.id
+
+    def submit(self, tenant: str, seed_set) -> int:
+        """Like `try_submit` but raises `AdmissionError` on rejection."""
+        tid = self.try_submit(tenant, seed_set)
+        if tid is None:
+            t = self._tenant(tenant)
+            raise AdmissionError(
+                f"tenant {tenant!r}: queue full "
+                f"({self.queue.pending(tenant)}/{t.spec.max_pending} "
+                f"pending)")
+        return tid
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self.queue.pending()
+
+    def _serve_batch(self, tenant: Tenant,
+                     tickets: list[QueryTicket]) -> dict[int, float]:
+        """Answer one tenant's DRR share against one store state."""
+        name = tenant.name
+        group = self.replica_groups.get(name)
+        use_replica = (tenant.spec.slo == "relaxed" and group is not None
+                       and group.servable)
+        with tenant.lock:
+            epoch = group.synced_epoch if use_replica else tenant.epoch
+            if epoch != tenant.served_epoch:
+                # the moment served_epoch advances is the moment older
+                # entries become unreachable — drop them now, exactly once
+                self.cache.advance(name, epoch)
+                tenant.served_epoch = epoch
+            # sigma(S) is a pure function of (tenant, epoch, S) only at a
+            # CONSISTENT store: mid-repair (stale > 0) the store keeps
+            # changing within the epoch, so those degraded-fidelity
+            # answers bypass the cache entirely.  Replica stores only
+            # change at sync, which always bumps synced_epoch.
+            consistent = (use_replica
+                          or getattr(tenant.engine, "stale", 0) == 0)
+            keys = [self.cache.key(name, epoch, t.seeds) for t in tickets]
+            vals: dict[int, tuple[float, bool]] = {}
+            misses = []
+            for tk, key in zip(tickets, keys):
+                hit = self.cache.get(key) if consistent else None
+                if hit is not None:
+                    vals[tk.id] = (hit, True)
+                else:
+                    misses.append((tk, key))
+            if misses:
+                backend = group if use_replica else tenant.engine
+                fresh = backend.influences([tk.seeds for tk, _ in misses])
+                for (tk, key), v in zip(misses, np.asarray(fresh)):
+                    if consistent:
+                        self.cache.put(key, float(v))
+                    vals[tk.id] = (float(v), False)
+        now = time.monotonic()
+        out = {}
+        with self._lock:
+            for tk in tickets:
+                v, cached = vals[tk.id]
+                self._results[tk.id] = ServedQuery(
+                    tk.id, name, v, epoch, cached, use_replica,
+                    now - tk.t_submit)
+                out[tk.id] = v
+            tenant.served += len(tickets)
+            tenant.cache_hits += sum(1 for v in vals.values() if v[1])
+            if use_replica:
+                tenant.replica_reads += len(tickets)
+            self.queries_served += len(tickets)
+        return out
+
+    def pump(self) -> dict[int, float]:
+        """One DRR scheduling round: every backlogged tenant serves its
+        weighted share, each share answered as one fused batch against
+        one epoch.  Returns ``{ticket: value}`` for the round."""
+        with self._lock:
+            round_ = self.queue.take_round()
+        results = {}
+        for name, tickets in round_:
+            results.update(self._serve_batch(self._tenant(name), tickets))
+        return results
+
+    def flush(self) -> dict[int, float]:
+        """Pump until every queue is empty (still round-by-round fair)."""
+        results = {}
+        while self.pending:
+            results.update(self.pump())
+        return results
+
+    def result(self, ticket: int) -> Optional[ServedQuery]:
+        """The `ServedQuery` record for an answered ticket (None while
+        pending / unknown)."""
+        with self._lock:
+            return self._results.get(ticket)
+
+    def select(self, tenant: str, k: int):
+        """Top-k selection for one tenant (strict SLO hits the primary's
+        memoized selection; relaxed routes to a replica)."""
+        t = self._tenant(tenant)
+        group = self.replica_groups.get(tenant)
+        if t.spec.slo == "relaxed" and group is not None and group.servable:
+            return group.select(k)
+        with t.lock:
+            return t.engine.select(k)
+
+    # ------------------------------------------------------------- deltas
+
+    def apply_delta(self, tenant: str, delta) -> int:
+        """Forward a `GraphDelta` to a streaming tenant: its epoch
+        advances, touched resident rows go stale (reverse-touch
+        invalidation), and the refresh scheduler starts allocating
+        budget to the new backlog.  Returns newly stale rows."""
+        t = self._tenant(tenant)
+        if not t.streaming:
+            raise ValueError(
+                f"tenant {tenant!r} is static (streaming=False); deltas "
+                f"need a StreamEngine tenant")
+        with t.lock:
+            stale = t.engine.apply_delta(delta)
+        t.deltas_applied += 1
+        return stale
+
+    # ------------------------------------------------------------ refresh
+
+    def refresh_step(self) -> list[RefreshAllocation]:
+        """One SLO-aware scheduling step: split the global budget across
+        streaming tenants by weighted backlog, run each slice under its
+        tenant lock, then re-sync replica groups whose primary reached a
+        consistent newer epoch.  Returns the allocations granted."""
+        if self.scheduler is None:
+            raise ValueError("tier was built without a refresh_budget")
+        backlogs, weights = {}, {}
+        for name, t in self.tenants.items():
+            if t.streaming and t.owns_engine:
+                backlogs[name] = t.backlog
+                weights[name] = t.spec.weight
+        allocations = self.scheduler.allocate(backlogs, weights)
+        for a in allocations:
+            t = self.tenants[a.tenant]
+            with t.lock:
+                t.engine.refresh(a.budget)
+        self.sync_replicas()
+        return allocations
+
+    def sync_replicas(self) -> int:
+        """Fan out fresh snapshots to every replica group whose primary
+        has advanced past the group's synced epoch and is consistent
+        (zero backlog — syncing mid-repair would replicate a store no
+        epoch ever served).  Returns groups synced."""
+        synced = 0
+        for name, group in self.replica_groups.items():
+            t = self.tenants[name]
+            with t.lock:
+                if (t.epoch != group.synced_epoch
+                        and getattr(t.engine, "stale", 0) == 0):
+                    group.sync(t.epoch)
+                    synced += 1
+        return synced
+
+    @property
+    def backlog(self) -> int:
+        """Total staleness backlog across streaming tenants."""
+        return sum(t.backlog for t in self.tenants.values()
+                   if t.owns_engine)
+
+    # ----------------------------------------------- background refresh
+
+    def start_refresh_worker(self) -> None:
+        """Run `refresh_step` continuously on a daemon thread
+        (idempotent; needs a ``refresh_budget``)."""
+        if self.scheduler is None:
+            raise ValueError("refresh worker needs a refresh_budget")
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._refresh_loop, name="imserve-refresh", daemon=True)
+        self._worker.start()
+
+    def stop_refresh_worker(self) -> None:
+        """Stop and join the worker (idempotent, safe after close)."""
+        self._stop.set()
+        worker, self._worker = self._worker, None
+        if worker is not None and worker is not threading.current_thread():
+            worker.join()
+
+    close = stop_refresh_worker
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop_refresh_worker()
+
+    @property
+    def refreshing(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def _refresh_loop(self):
+        while not self._stop.is_set():
+            if self.refresh_step():
+                # yield between slices: python locks are unfair, a hot
+                # loop could starve query threads blocked on tenant locks
+                time.sleep(1e-4)
+            else:
+                self._stop.wait(0.002)
+
+    def drain(self, timeout: Optional[float] = 30.0) -> bool:
+        """Block until every streaming tenant's backlog is repaired
+        (True) or ``timeout`` elapses (False; None = wait forever).
+        Without a running worker, refresh steps run inline."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
+        while self.backlog > 0:
+            if self.refreshing:
+                time.sleep(0.002)
+            else:
+                self.refresh_step()
+            # deadline checked *after* each step, so a finite timeout
+            # still makes forward progress on the inline path (same
+            # contract as IMServer.drain)
+            if (self.backlog > 0 and deadline is not None
+                    and time.monotonic() > deadline):
+                return False
+        return True
+
+    # -------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        """Monitoring snapshot: per-tenant counters, cache, scheduler,
+        and replica-group stats."""
+        out = {
+            "tenants": {n: t.stats() for n, t in self.tenants.items()},
+            "cache": self.cache.stats(),
+            "queries_served": self.queries_served,
+            "pending": self.pending,
+        }
+        if self.scheduler is not None:
+            out["refresh"] = {"budget": self.scheduler.budget,
+                              "steps": self.scheduler.steps,
+                              "rows_granted": self.scheduler.rows_granted}
+        if self.replica_groups:
+            out["replicas"] = {n: g.stats()
+                               for n, g in self.replica_groups.items()}
+        return out

@@ -1,0 +1,164 @@
+"""Trace-driven load generation: arrival-process query streams
+interleaved with graph deltas.
+
+The serving tier is only honest if it is measured under the traffic
+shape it claims to handle: many tenants with *unequal* demand, queries
+arriving as a point process (not back-to-back batches), popular seed
+sets recurring (the cache's reason to exist), and — for streaming
+tenants — `GraphDelta` batches landing mid-stream.  `make_trace` builds
+exactly that, deterministically from one rng seed:
+
+  * per-tenant Poisson arrivals (exponential inter-arrival gaps) with
+    per-tenant rates — pass a ``skew`` to draw Zipf-like rates, the
+    heavy-tenant-vs-long-tail mix the fairness machinery exists for;
+  * each query is a random seed set, except a ``hot_fraction`` drawn
+    from a small per-tenant pool of recurring "dashboard" sets (cache
+    hits come from these; the pool is re-drawn per epoch-advance only by
+    the graph, not the trace — the cache decides what an epoch means);
+  * streaming tenants get delta events on a fixed period, each generated
+    against that tenant's *evolving* graph (deltas validate strictly, so
+    the generator applies them as it goes) with the long-tail
+    ``max_dst_indeg`` churn shape from `repro.stream.delta.random_delta`.
+
+Events come back merged and time-sorted; replaying them in order (as
+`benchmarks/serve_tier.py` and the tier CLI do) reproduces the same
+workload bit-for-bit for any seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.stream.delta import GraphDelta, random_delta
+
+KIND_QUERY = "query"
+KIND_DELTA = "delta"
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One timestamped workload event."""
+    t: float                      # arrival time, seconds from trace start
+    tenant: str
+    kind: str                     # KIND_QUERY | KIND_DELTA
+    seeds: Optional[np.ndarray] = None      # KIND_QUERY
+    delta: Optional[GraphDelta] = None      # KIND_DELTA
+
+
+def zipf_rates(names, total_qps: float, skew: float, rng) -> dict:
+    """Per-tenant arrival rates summing to ``total_qps`` with a Zipf
+    profile of exponent ``skew`` over a random tenant order (skew=0 is
+    uniform; 1.0+ concentrates most traffic on one tenant)."""
+    order = list(names)
+    rng.shuffle(order)
+    raw = np.array([1.0 / (i + 1) ** skew for i in range(len(order))])
+    raw = raw / raw.sum() * total_qps
+    return {t: float(r) for t, r in zip(order, raw)}
+
+
+def _poisson_times(rate: float, duration: float, rng) -> np.ndarray:
+    if rate <= 0:
+        return np.zeros((0,))
+    gaps = rng.exponential(1.0 / rate, size=max(int(rate * duration * 2), 16))
+    times = np.cumsum(gaps)
+    while times.size and times[-1] < duration:
+        more = np.cumsum(rng.exponential(1.0 / rate, size=16)) + times[-1]
+        times = np.concatenate([times, more])
+    return times[times < duration]
+
+
+def make_trace(graphs: dict, *, duration: float = 1.0,
+               qps: dict | float = 100.0,
+               streaming: dict = None,
+               delta_period: float = 0.25, delta_ops: int = 4,
+               max_dst_indeg: int = 8,
+               set_sizes: tuple[int, int] = (1, 8),
+               hot_fraction: float = 0.5, hot_pool: int = 8,
+               seed: int = 0) -> list[TraceEvent]:
+    """Build a merged, time-sorted multi-tenant event trace.
+
+    Parameters
+    ----------
+    graphs : tenant name -> `Graph` the tenant's queries draw vertices
+        from (streaming tenants: the graph the delta stream evolves).
+    duration : trace length in virtual seconds.
+    qps : scalar rate applied to every tenant, or tenant -> rate
+        (build skewed maps with `zipf_rates`).
+    streaming : tenant -> bool; True adds a delta stream for that tenant
+        (default: no deltas).
+    delta_period : virtual seconds between a streaming tenant's deltas.
+    delta_ops : inserts = deletes = reweights per delta.
+    set_sizes : inclusive (min, max) query seed-set size.
+    hot_fraction : probability a query re-asks one of ``hot_pool``
+        recurring per-tenant seed sets instead of a fresh random one.
+    seed : one seed determines the entire trace.
+    """
+    rng = np.random.default_rng(seed)
+    streaming = streaming or {}
+    lo, hi = set_sizes
+    events: list[TraceEvent] = []
+    for name in sorted(graphs):
+        g = graphs[name]
+        rate = qps[name] if isinstance(qps, dict) else float(qps)
+        hot = [rng.choice(g.n, size=int(rng.integers(lo, hi + 1)),
+                          replace=False).astype(np.int32)
+               for _ in range(hot_pool)]
+        for t in _poisson_times(rate, duration, rng):
+            if rng.random() < hot_fraction:
+                seeds = hot[int(rng.integers(len(hot)))]
+            else:
+                seeds = rng.choice(
+                    g.n, size=int(rng.integers(lo, hi + 1)),
+                    replace=False).astype(np.int32)
+            events.append(TraceEvent(float(t), name, KIND_QUERY,
+                                     seeds=seeds))
+        if streaming.get(name):
+            gg, tick = g, delta_period
+            while tick < duration:
+                d = random_delta(gg, rng, inserts=delta_ops,
+                                 deletes=delta_ops, reweights=delta_ops,
+                                 max_dst_indeg=max_dst_indeg)
+                events.append(TraceEvent(float(tick), name, KIND_DELTA,
+                                         delta=d))
+                gg = d.apply(gg)
+                tick += delta_period
+    # stable tiebreak (tenant, kind) keeps replay deterministic when two
+    # events share a timestamp
+    events.sort(key=lambda e: (e.t, e.tenant, e.kind))
+    return events
+
+
+def replay(tier, events: list[TraceEvent], *,
+           pump_every: int = 16) -> tuple[dict, int]:
+    """Replay a trace through an `IMServe` tier in event order.
+
+    Queries go through admission (`try_submit` — rejections are counted,
+    not retried), deltas through `apply_delta`; the tier is pumped
+    whenever ``pump_every`` queries are pending and flushed at the end,
+    so service stays batched *and* DRR-fair under the trace's arrival
+    order.  Returns ``({ticket: value}, rejected_count)``; per-query
+    latency/epoch records live in ``tier.result(ticket)``.
+    """
+    answered: dict[int, float] = {}
+    rejected = 0
+    for e in events:
+        if e.kind == KIND_DELTA:
+            tier.apply_delta(e.tenant, e.delta)
+        else:
+            if tier.try_submit(e.tenant, e.seeds) is None:
+                rejected += 1
+        if tier.pending >= pump_every:
+            answered.update(tier.pump())
+    answered.update(tier.flush())
+    return answered, rejected
+
+
+def trace_summary(events: list[TraceEvent]) -> dict:
+    """Per-tenant event counts (queries, deltas) for logging."""
+    out: dict[str, dict] = {}
+    for e in events:
+        d = out.setdefault(e.tenant, {"queries": 0, "deltas": 0})
+        d["queries" if e.kind == KIND_QUERY else "deltas"] += 1
+    return out

@@ -132,6 +132,12 @@ class StreamEngine:
         self.epoch = 0
         self.deltas_applied = 0
         self.target_theta = 0
+        # per-slice repair accounting (read by the serving tier's
+        # SLO-aware refresh scheduler): how many refresh slices ran, how
+        # many rows they repaired in total, and the last slice's yield
+        self.refreshes = 0
+        self.rows_repaired = 0
+        self.last_repair = 0
         self._batch_keys: list[np.ndarray] = []
         # slot provenance: which (batch id, in-batch position) produced
         # the row living in each arena slot (-1 = unknown/empty)
@@ -174,6 +180,14 @@ class StreamEngine:
         """True when serving state equals a fresh engine on the current
         graph (no staleness backlog) — an epoch-consistent snapshot."""
         return self.stale == 0
+
+    @property
+    def backlog(self) -> int:
+        """Staleness-backlog size: dead-in-place rows awaiting same-key
+        repair plus the live deficit below the target theta.  The
+        quantity the serving tier's refresh scheduler allocates the
+        global budget against (``stale`` spelled for schedulers)."""
+        return self.stale
 
     def _sync_layout(self):
         """Chase store-side slot moves (compaction, per-shard growth)
@@ -259,6 +273,7 @@ class StreamEngine:
             return 0     # steady state: skip the live-mask gather entirely
         self._sync_layout()
         left = math.inf if budget is None else int(budget)
+        repaired = 0
 
         dead_slots = np.flatnonzero(~np.asarray(store.live_mask()))
         by_bid: dict[int, list[int]] = {}
@@ -290,13 +305,19 @@ class StreamEngine:
                                 axis=0)
             store.replace_rows(idx, rows)
             left -= k
+            repaired += k
 
         if orphans and left > 0:
             store.compact()
             self._sync_layout()
 
         while self.store.live_count < self._effective_target and left > 0:
-            left -= self._add_recorded_batch()
+            got = self._add_recorded_batch()
+            left -= got
+            repaired += got
+        self.refreshes += 1
+        self.rows_repaired += repaired
+        self.last_repair = repaired
         return self.stale
 
     # ------------------------------------------------------- checkpointing

@@ -1,0 +1,604 @@
+"""IMServe serving-tier tests: admission + DRR fairness, the epoch-keyed
+result cache (entries never survive an epoch advance; a hit is bitwise
+identical to recomputing), replica snapshot fan-out, SLO-aware refresh
+scheduling, epoch consistency under racing refresh threads, and the
+hardened IMServer/IMServe lifecycle (idempotent start, multi-stop,
+bounded drain)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store as ckpt
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.graphs import rmat_graph
+from repro.launch.serve import IMServer
+from repro.serve import (
+    AdmissionError, DeficitRoundRobin, IMServe, QueryTicket, ReplicaGroup,
+    ResultCache, RefreshScheduler, TenantSpec, make_trace, replay,
+    trace_summary, zipf_rates,
+)
+from repro.stream import StreamEngine, random_delta
+
+
+def small_graph(seed=2):
+    return rmat_graph(96, 768, seed=seed)
+
+
+def small_cfg(seed=0, theta=256):
+    return IMMConfig(k=4, batch=64, max_theta=max(theta, 512), seed=seed)
+
+
+def _tier(**kw):
+    kw.setdefault("quantum", 4)
+    return IMServe(**kw)
+
+
+def _spec(name, seed=2, **kw):
+    kw.setdefault("graph", small_graph(seed))
+    kw.setdefault("cfg", small_cfg(seed))
+    kw.setdefault("theta", 256)
+    return TenantSpec(name, **kw)
+
+
+# ------------------------------------------------- admission + fairness ----
+
+def test_drr_weighted_rounds_and_no_hoarding():
+    q = DeficitRoundRobin(quantum=4)
+    q.register("heavy", weight=2.0, max_pending=100)
+    q.register("light", weight=1.0, max_pending=100)
+    tid = iter(range(1000))
+    for _ in range(20):
+        q.submit(QueryTicket(next(tid), "heavy", np.array([1])))
+    for _ in range(6):
+        q.submit(QueryTicket(next(tid), "light", np.array([2])))
+    r1 = dict(q.take_round())
+    # one round = quantum * weight queries for a backlogged tenant
+    assert len(r1["heavy"]) == 8 and len(r1["light"]) == 4
+    r2 = dict(q.take_round())
+    assert len(r2["heavy"]) == 8
+    # light emptied this round; its leftover credit must not hoard
+    assert len(r2["light"]) == 2
+    q.submit(QueryTicket(next(tid), "light", np.array([2])))
+    r3 = dict(q.take_round())
+    assert len(r3["light"]) == 1      # fresh credit only, no carry-over
+    assert len(r3["heavy"]) == 4      # heavy drains its last 4 this round
+    assert q.pending() == 0
+
+
+def test_admission_rejects_at_cap_not_unbounded():
+    q = DeficitRoundRobin(quantum=4)
+    q.register("t", weight=1.0, max_pending=3)
+    admitted = [q.try_submit(QueryTicket(i, "t", np.array([i])))
+                for i in range(10)]
+    assert admitted == [True] * 3 + [False] * 7
+    assert q.pending("t") == 3
+    with pytest.raises(AdmissionError, match="queue full"):
+        q.submit(QueryTicket(99, "t", np.array([0])))
+    q.take_round()
+    assert q.try_submit(QueryTicket(100, "t", np.array([0])))
+
+
+def test_fairness_starvation_free_under_flood():
+    """A light tenant behind a flooding heavy tenant is fully served
+    within its DRR bound (ceil(pending / (quantum * weight)) rounds) —
+    the starvation-freedom guarantee."""
+    q = DeficitRoundRobin(quantum=4)
+    q.register("flood", weight=1.0, max_pending=10_000)
+    q.register("light", weight=1.0, max_pending=10_000)
+    tid = iter(range(10_000))
+    for _ in range(400):
+        q.submit(QueryTicket(next(tid), "flood", np.array([1])))
+    for _ in range(10):
+        q.submit(QueryTicket(next(tid), "light", np.array([2])))
+    served_light = 0
+    rounds = 0
+    while q.pending("light"):
+        rounds += 1
+        for name, batch in q.take_round():
+            if name == "light":
+                served_light += len(batch)
+    assert served_light == 10
+    assert rounds <= -(-10 // 4)              # ceil(10/quantum) == 3
+    assert q.pending("flood") > 0             # flood still backlogged
+
+
+# ------------------------------------------------------------ result cache --
+
+def test_cache_key_erases_seed_order_and_duplicates():
+    k1 = ResultCache.key("t", 3, [3, 1, 3])
+    k2 = ResultCache.key("t", 3, np.array([1, 3], np.int32))
+    assert k1 == k2
+    assert ResultCache.key("t", 4, [1, 3]) != k1
+    assert ResultCache.key("u", 3, [1, 3]) != k1
+
+
+def test_cache_advance_drops_exactly_the_old_epochs():
+    c = ResultCache(max_entries=64)
+    for e in (0, 1):
+        for s in range(4):
+            c.put(ResultCache.key("a", e, [s]), float(10 * e + s))
+    c.put(ResultCache.key("b", 0, [7]), 7.0)
+    dropped = c.advance("a", 1)
+    assert dropped == 4 and c.invalidations == 4
+    assert c.epochs("a") == {1}               # at most a singleton
+    assert c.entries("a") == 4 and c.entries("b") == 1
+    assert c.get(ResultCache.key("a", 0, [2])) is None
+    assert c.get(ResultCache.key("a", 1, [2])) == 12.0
+    assert c.get(ResultCache.key("b", 0, [7])) == 7.0  # other tenant kept
+    assert c.advance("a", 1) == 0             # idempotent
+
+
+def test_cache_lru_bound_and_hit_rate():
+    c = ResultCache(max_entries=3)
+    for s in range(5):
+        c.put(ResultCache.key("t", 0, [s]), float(s))
+    assert len(c) == 3 and c.evictions == 2
+    assert c.get(ResultCache.key("t", 0, [0])) is None   # evicted first
+    assert c.get(ResultCache.key("t", 0, [4])) == 4.0
+    assert 0 < c.hit_rate < 1
+    # a hit refreshes recency: [2] touched, then two inserts evict 3, 4
+    c.get(ResultCache.key("t", 0, [2]))
+    c.put(ResultCache.key("t", 0, [5]), 5.0)
+    c.put(ResultCache.key("t", 0, [6]), 6.0)
+    assert c.get(ResultCache.key("t", 0, [2])) == 2.0
+
+
+# ------------------------------------------------------- refresh scheduler --
+
+def test_scheduler_allocates_proportional_to_weighted_backlog():
+    s = RefreshScheduler(budget=100)
+    out = s.allocate({"a": 300, "b": 100, "idle": 0})
+    grants = {a.tenant: a.budget for a in out}
+    assert "idle" not in grants
+    assert sum(grants.values()) == 100
+    assert grants["a"] == 75 and grants["b"] == 25
+    # weights multiply backlog into priority
+    out = s.allocate({"a": 100, "b": 100}, {"a": 3.0, "b": 1.0})
+    grants = {a.tenant: a.budget for a in out}
+    assert grants["a"] == 75 and grants["b"] == 25
+    assert s.steps == 2 and s.rows_granted == 200
+
+
+def test_scheduler_floor_caps_and_small_budget():
+    s = RefreshScheduler(budget=10)
+    # grants never exceed a tenant's backlog; surplus flows to others
+    grants = {a.tenant: a.budget for a in s.allocate({"a": 3, "b": 100})}
+    assert grants["a"] <= 3 and sum(grants.values()) == 10
+    # every covered tenant gets >= 1 even with a tiny share
+    grants = {a.tenant: a.budget for a in s.allocate({"a": 1, "b": 1000})}
+    assert grants["a"] >= 1 and sum(grants.values()) == 10
+    # budget larger than total backlog: grant exactly the backlog
+    grants = {a.tenant: a.budget for a in s.allocate({"a": 2, "b": 3})}
+    assert sum(grants.values()) == 5
+    assert s.allocate({"a": 0}) == []
+    with pytest.raises(ValueError, match=">= 1"):
+        RefreshScheduler(0)
+
+
+# ------------------------------------------------------ stream accounting --
+
+def test_stream_engine_repair_accounting():
+    stream = StreamEngine(small_graph(), small_cfg())
+    stream.extend(256)
+    assert stream.refreshes == 0 and stream.rows_repaired == 0
+    assert stream.backlog == 0
+    stream.apply_delta(random_delta(stream.graph,
+                                    np.random.default_rng(5), deletes=4))
+    backlog = stream.backlog
+    assert backlog == stream.stale > 0
+    stream.refresh()
+    assert stream.backlog == 0
+    assert stream.refreshes == 1
+    assert stream.rows_repaired == stream.last_repair == backlog
+
+
+# -------------------------------------------------- snapshot fan-out bits --
+
+def test_clone_tree_deep_copies_and_tree_bytes():
+    eng = InfluenceEngine(small_graph(), small_cfg())
+    eng.extend(256)
+    tree = eng.snapshot_tree()
+    clone = ckpt.clone_tree(tree)
+    assert ckpt.tree_bytes(clone) == ckpt.tree_bytes(tree) > 0
+    _, leaves = ckpt._flatten(clone)
+    _, orig = ckpt._flatten(tree)
+    k = next(iter(leaves))
+    before = np.array(orig[k])
+    np.asarray(leaves[k])[...] = 0            # mutate the clone...
+    np.testing.assert_array_equal(np.asarray(orig[k]), before)  # ...only
+
+
+def test_engine_replicate_is_bitwise_and_independent():
+    eng = InfluenceEngine(small_graph(), small_cfg())
+    eng.extend(256)
+    rep = eng.replicate()
+    assert rep is not eng
+    np.testing.assert_array_equal(np.asarray(rep.store.counter),
+                                  np.asarray(eng.store.counter))
+    sets = [np.array([1, 5], np.int32), np.array([7], np.int32)]
+    np.testing.assert_array_equal(np.asarray(rep.influences(sets)),
+                                  np.asarray(eng.influences(sets)))
+
+
+def test_replica_group_serves_only_after_sync_and_tracks_epochs():
+    stream = StreamEngine(small_graph(), small_cfg())
+    stream.extend(256)
+    group = ReplicaGroup(stream, 2)
+    assert not group.servable
+    with pytest.raises(RuntimeError, match="sync"):
+        group.influences([np.array([1], np.int32)])
+    group.sync(stream.epoch)
+    assert group.servable and group.synced_epoch == 0
+    probe = [np.array([3, 9], np.int32)]
+    want = np.asarray(stream.influences(probe))
+    for _ in range(2):                        # both round-robin replicas
+        np.testing.assert_array_equal(np.asarray(group.influences(probe)),
+                                      want)
+    # primary advances; the group lags at its synced epoch until resync
+    stream.apply_delta(random_delta(stream.graph,
+                                    np.random.default_rng(6), deletes=3))
+    stream.refresh()
+    assert group.synced_epoch == 0 and stream.epoch == 1
+    group.sync(stream.epoch)
+    assert group.synced_epoch == 1 and group.syncs == 2
+    assert group.bytes_shipped > 0
+    np.testing.assert_array_equal(np.asarray(group.influences(probe)),
+                                  np.asarray(stream.influences(probe)))
+
+
+# ------------------------------------------------------------- tier: cache --
+
+def test_tier_cached_sigma_is_bitwise_identical():
+    tier = _tier()
+    tier.register(_spec("a"))
+    seeds = np.array([3, 11, 40], np.int32)
+    t1 = tier.submit("a", seeds)
+    tier.flush()
+    t2 = tier.submit("a", seeds[::-1])        # same set, different order
+    tier.flush()
+    r1, r2 = tier.result(t1), tier.result(t2)
+    assert not r1.cached and r2.cached
+    assert r2.value == r1.value               # bitwise, not approx
+    with tier.tenants["a"].lock:
+        direct = float(np.asarray(
+            tier.tenants["a"].engine.influences([seeds]))[0])
+    assert r1.value == direct
+
+
+def test_tier_cache_entries_never_survive_epoch_advance():
+    tier = _tier(refresh_budget=512)
+    tier.register(_spec("s", streaming=True))
+    rng = np.random.default_rng(7)
+    probe = np.array([2, 17], np.int32)
+    for _ in range(3):
+        tier.submit("s", probe)
+        tier.submit("s", rng.choice(96, size=4, replace=False))
+        tier.flush()
+        assert tier.cache.epochs("s") == {tier.tenants["s"].served_epoch}
+        tier.apply_delta("s", random_delta(tier.tenants["s"].graph, rng,
+                                           inserts=2, deletes=2))
+        assert tier.drain(timeout=60.0)
+    # entries still keyed at the pre-delta epoch die on the next serve
+    t = tier.submit("s", probe)
+    tier.flush()
+    assert tier.cache.epochs("s") == {3}
+    assert tier.result(t).epoch == 3 and not tier.result(t).cached
+    assert tier.cache.invalidations > 0
+
+
+def test_tier_mid_repair_answers_bypass_cache():
+    """While a tenant's backlog is unrepaired, the store keeps changing
+    within the epoch — those answers are neither written to nor read
+    from the cache; caching resumes at the next consistent state."""
+    tier = _tier(refresh_budget=512)
+    tier.register(_spec("s", streaming=True))
+    probe = np.array([4, 21, 50], np.int32)
+    tier.submit("s", probe)
+    tier.flush()
+    assert tier.cache.entries("s") == 1       # consistent: cached
+    tier.apply_delta("s", random_delta(tier.tenants["s"].graph,
+                                       np.random.default_rng(17),
+                                       deletes=4, inserts=4))
+    assert tier.tenants["s"].backlog > 0
+    t1 = tier.submit("s", probe)
+    tier.flush()
+    t2 = tier.submit("s", probe)
+    tier.flush()
+    # epoch advanced (old entries dropped) but mid-repair wrote nothing
+    assert tier.cache.entries("s") == 0
+    assert not tier.result(t1).cached and not tier.result(t2).cached
+    assert tier.drain(timeout=60.0)
+    t3 = tier.submit("s", probe)
+    tier.flush()
+    t4 = tier.submit("s", probe)
+    tier.flush()
+    assert not tier.result(t3).cached and tier.result(t4).cached
+    assert tier.result(t4).value == tier.result(t3).value
+
+
+def test_tier_shared_engine_slot():
+    tier = _tier()
+    tier.register(_spec("host"))
+    tier.register(TenantSpec("guest", share_engine_with="host"))
+    guest = tier.tenants["guest"]
+    assert not guest.owns_engine
+    assert guest.engine is tier.tenants["host"].engine
+    assert guest.lock is tier.tenants["host"].lock
+    seeds = np.array([5, 23], np.int32)
+    t1 = tier.submit("host", seeds)
+    t2 = tier.submit("guest", seeds)
+    tier.flush()
+    # same engine -> same sigma; per-tenant cache keys -> both missed
+    assert tier.result(t1).value == tier.result(t2).value
+    assert not tier.result(t1).cached and not tier.result(t2).cached
+    assert guest.stats()["shared_engine"]
+    with pytest.raises(ValueError, match="unknown tenant"):
+        tier.register(TenantSpec("x", share_engine_with="nobody"))
+
+
+def test_tier_admission_and_error_paths():
+    tier = _tier()
+    tier.register(_spec("a", max_pending=2))
+    assert tier.try_submit("a", [1]) is not None
+    assert tier.try_submit("a", [2]) is not None
+    assert tier.try_submit("a", [3]) is None
+    with pytest.raises(AdmissionError, match="queue full"):
+        tier.submit("a", [4])
+    assert tier.tenants["a"].rejected == 2
+    tier.flush()
+    with pytest.raises(ValueError, match="streaming"):
+        tier.apply_delta("a", None)           # static tenant
+    with pytest.raises(KeyError, match="unknown tenant"):
+        tier.submit("ghost", [1])
+    with pytest.raises(ValueError, match="already registered"):
+        tier.register(_spec("a"))
+    with pytest.raises(ValueError, match="slo"):
+        TenantSpec("bad", graph=small_graph(), slo="gold")
+    with pytest.raises(ValueError, match="needs a graph"):
+        TenantSpec("bad2")
+
+
+# ---------------------------------------------------------- tier: replicas --
+
+def test_tier_relaxed_slo_routes_to_replicas():
+    tier = _tier()
+    tier.register(_spec("strict"))
+    tier.register(_spec("relax", seed=3, slo="relaxed", replicas=2))
+    t1 = tier.submit("strict", [4, 9])
+    t2 = tier.submit("relax", [4, 9])
+    tier.flush()
+    assert not tier.result(t1).replica
+    assert tier.result(t2).replica
+    assert tier.tenants["relax"].replica_reads == 1
+    # replica answer == primary answer at the same (static) epoch
+    with tier.tenants["relax"].lock:
+        want = float(np.asarray(tier.tenants["relax"].engine.influences(
+            [np.array([4, 9], np.int32)]))[0])
+    assert tier.result(t2).value == want
+
+
+def test_tier_replicas_resync_only_at_consistent_epochs():
+    tier = _tier(refresh_budget=512)
+    tier.register(_spec("r", streaming=True, slo="relaxed", replicas=1))
+    group = tier.replica_groups["r"]
+    assert group.synced_epoch == 0
+    rng = np.random.default_rng(9)
+    tier.apply_delta("r", random_delta(tier.tenants["r"].graph, rng,
+                                       deletes=3, inserts=3))
+    # primary is mid-repair (stale > 0): sync_replicas must hold back
+    if tier.tenants["r"].backlog > 0:
+        assert tier.sync_replicas() == 0
+        assert group.synced_epoch == 0
+    assert tier.drain(timeout=60.0)
+    assert group.synced_epoch == tier.tenants["r"].epoch == 1
+    t = tier.submit("r", [1, 2])
+    tier.flush()
+    assert tier.result(t).replica and tier.result(t).epoch == 1
+
+
+# ----------------------------------------------- tier: refresh scheduling --
+
+def test_tier_refresh_step_spends_budget_where_deltas_landed():
+    tier = _tier(refresh_budget=16)
+    tier.register(_spec("hot", streaming=True))
+    tier.register(_spec("cold", seed=4, streaming=True))
+    tier.register(_spec("static", seed=5))
+    rng = np.random.default_rng(11)
+    tier.apply_delta("hot", random_delta(tier.tenants["hot"].graph, rng,
+                                         deletes=4, inserts=4))
+    allocs = tier.refresh_step()
+    assert {a.tenant for a in allocs} == {"hot"}   # cold/static: no budget
+    assert sum(a.budget for a in allocs) <= 16
+    assert tier.drain(timeout=60.0)
+    assert tier.backlog == 0
+    # drained engine == fresh engine on the post-delta graph
+    hot = tier.tenants["hot"]
+    fresh = InfluenceEngine(hot.graph, hot.engine.cfg)
+    fresh.extend(hot.engine.theta)
+    np.testing.assert_array_equal(
+        np.asarray(hot.engine.store.counter),
+        np.asarray(fresh.store.counter))
+
+
+def test_tier_refresh_requires_budget():
+    tier = _tier()
+    with pytest.raises(ValueError, match="refresh_budget"):
+        tier.refresh_step()
+    with pytest.raises(ValueError, match="refresh_budget"):
+        tier.start_refresh_worker()
+
+
+# ------------------------------------------------- epoch consistency race --
+
+def test_tier_queries_stay_epoch_consistent_under_racing_refresh():
+    """Queries racing the background refresh worker and a delta stream:
+    each DRR batch is answered under the tenant lock against exactly one
+    store state, so identical seed sets in one batch get identical
+    values and one epoch tag — no torn reads against concurrent repair
+    slices.  Cached answers only ever come from consistent states, so
+    after the drain a cache hit equals a fresh engine bitwise."""
+    tier = _tier(refresh_budget=32)
+    tier.register(_spec("s", streaming=True))
+    probe = np.array([8, 33, 60], np.int32)
+    batches = []
+    stop = threading.Event()
+    errors = []
+
+    def mutate():
+        rng = np.random.default_rng(13)
+        try:
+            while not stop.is_set():
+                tier.apply_delta("s", random_delta(
+                    tier.tenants["s"].graph, rng, inserts=2, deletes=2))
+                time.sleep(0.002)
+        except Exception as e:                # pragma: no cover
+            errors.append(e)
+
+    with tier:
+        tier.start_refresh_worker()
+        mut = threading.Thread(target=mutate)
+        mut.start()
+        try:
+            for _ in range(10):
+                # three identical submits served in ONE DRR batch (one
+                # lock hold, one store state, one epoch)
+                batch = [tier.submit("s", probe) for _ in range(3)]
+                tier.flush()
+                batches.append(batch)
+        finally:
+            stop.set()
+            mut.join()
+        assert tier.drain(timeout=60.0)
+    assert not errors
+    for batch in batches:
+        recs = [tier.result(t) for t in batch]
+        assert all(r is not None and r.tenant == "s" for r in recs)
+        assert len({r.value for r in recs}) == 1, "torn read in one batch"
+        assert len({r.epoch for r in recs}) == 1
+    # post-drain: the consistent-state answer equals a fresh engine's —
+    # and a repeat is a cache hit with the bitwise-identical value
+    s = tier.tenants["s"]
+    fresh = InfluenceEngine(s.graph, s.engine.cfg)
+    fresh.extend(s.engine.theta)
+    t1 = tier.submit("s", probe)
+    tier.flush()
+    t2 = tier.submit("s", probe)
+    tier.flush()
+    assert tier.result(t1).value == pytest.approx(
+        float(np.asarray(fresh.influences([probe]))[0]), rel=1e-6)
+    assert tier.result(t2).cached
+    assert tier.result(t2).value == tier.result(t1).value
+
+
+# -------------------------------------------------------- trace generator --
+
+def test_trace_is_deterministic_and_skewed():
+    graphs = {"a": small_graph(2), "b": small_graph(3)}
+    kw = dict(duration=0.5, qps=80.0, streaming={"b": True},
+              delta_period=0.2, seed=4)
+    t1, t2 = make_trace(graphs, **kw), make_trace(graphs, **kw)
+    assert len(t1) == len(t2) > 0
+    for e1, e2 in zip(t1, t2):
+        assert (e1.t, e1.tenant, e1.kind) == (e2.t, e2.tenant, e2.kind)
+        if e1.seeds is not None:
+            np.testing.assert_array_equal(e1.seeds, e2.seeds)
+    assert [e.t for e in t1] == sorted(e.t for e in t1)
+    s = trace_summary(t1)
+    assert s["b"]["deltas"] == 2 and s["a"]["deltas"] == 0
+    assert s["a"]["queries"] > 0
+    rates = zipf_rates(["a", "b", "c"], 90.0, 1.0,
+                       np.random.default_rng(0))
+    assert sum(rates.values()) == pytest.approx(90.0)
+    assert max(rates.values()) > min(rates.values())
+
+
+def test_replay_answers_admitted_queries_and_counts_rejections():
+    tier = _tier()
+    tier.register(_spec("a", max_pending=2))
+    events = make_trace({"a": tier.tenants["a"].graph}, duration=0.5,
+                        qps=40.0, seed=5)
+    answered, rejected = replay(tier, events, pump_every=2)
+    n_queries = trace_summary(events)["a"]["queries"]
+    assert len(answered) + rejected == n_queries
+    assert len(answered) > 0
+    for tid, val in answered.items():
+        assert tier.result(tid).value == val
+
+
+# ------------------------------------------------------ lifecycle: IMServe --
+
+def test_imserve_lifecycle_idempotent_and_restartable():
+    tier = _tier(refresh_budget=64)
+    tier.register(_spec("s", streaming=True))
+    tier.start_refresh_worker()
+    tier.start_refresh_worker()               # idempotent
+    assert tier.refreshing
+    tier.stop_refresh_worker()
+    tier.stop_refresh_worker()                # safe twice
+    assert not tier.refreshing
+    tier.start_refresh_worker()               # restartable after stop
+    assert tier.refreshing
+    tier.close()
+    with tier:
+        tier.start_refresh_worker()
+    assert not tier.refreshing                # __exit__ stopped it
+    tier.close()                              # and close after exit is fine
+    stats = tier.stats()
+    assert stats["refresh"]["budget"] == 64
+
+
+def test_imserve_drain_inline_without_worker_and_timeout():
+    tier = _tier(refresh_budget=8)
+    tier.register(_spec("s", streaming=True))
+    rng = np.random.default_rng(15)
+    tier.apply_delta("s", random_delta(tier.tenants["s"].graph, rng,
+                                       deletes=4, inserts=4))
+    assert tier.backlog > 0
+    before = tier.backlog
+    assert not tier.drain(timeout=0.0)        # deadline honored inline...
+    assert tier.backlog < before              # ...with partial progress
+    assert tier.drain(timeout=None)           # None waits it out
+    assert tier.backlog == 0
+
+
+# ----------------------------------------------------- lifecycle: IMServer --
+
+def test_imserver_start_idempotent_and_restartable():
+    stream = StreamEngine(small_graph(), small_cfg())
+    stream.extend(256)
+    server = IMServer(stream, refresh_budget=64)
+    server.start_refresh_worker()
+    first = server._worker
+    server.start_refresh_worker()             # idempotent: same worker
+    assert server._worker is first and server.async_refreshing
+    server.stop_refresh_worker()
+    server.stop_refresh_worker()              # safe twice
+    assert not server.async_refreshing
+    server.start_refresh_worker()             # restartable
+    assert server.async_refreshing
+    server.close()
+    with server:
+        server.start_refresh_worker()
+    assert not server.async_refreshing        # __exit__ stopped it
+    server.close()                            # close after __exit__
+    engine = InfluenceEngine(small_graph(), small_cfg())
+    with pytest.raises(ValueError, match="refresh_budget"):
+        IMServer(engine).start_refresh_worker()
+
+
+def test_imserver_drain_timeout_inline_and_forever():
+    stream = StreamEngine(small_graph(), small_cfg())
+    stream.extend(256)
+    server = IMServer(stream, refresh_budget=4)
+    server.apply_delta(random_delta(stream.graph,
+                                    np.random.default_rng(16),
+                                    deletes=4, inserts=4))
+    assert stream.stale > 0
+    before = stream.stale
+    assert not server.drain(timeout=0.0)      # finite timeout honored
+    assert stream.stale < before              # partial progress kept
+    assert server.drain(timeout=None)
+    assert stream.stale == 0
+    assert server.drain(timeout=0.0)          # already drained: True
