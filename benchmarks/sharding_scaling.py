@@ -3,38 +3,55 @@
 Runs the same IMM workload — ``extend(theta)`` + ``select(k)`` through
 the `InfluenceEngine` — on every store layout the available devices
 support: single-device, the 1D theta mesh, and every 2D ``Dt x Dv``
-factorization of the device count (``make_im_mesh``).  For each layout it
-reports wall time and **bytes_per_device** — the resident arena bytes on
-one device, the quantity the 2D refactor exists to shrink: a ``Dt x Dv``
-mesh holds ``ceil(theta / Dt)`` rows x ``ceil(n / Dv)`` vertex columns
-per device, so theta scales with the theta axis and graph size with the
-vertex axis *simultaneously*.  Answers are asserted seed-for-seed
-identical across every layout before anything is emitted — the bench
-doubles as the equivalence gate on real multi-device buffers.
+factorization of the device count (``make_im_mesh``), each vertex-sharded
+layout in both its **equal** (canonical contiguous blocks) and
+**edge-balanced** (``IMMConfig.partition="balanced"``, tagged ``+bal``)
+column layouts.  For each layout it reports:
 
-Emits ``BENCH_5.json`` rows
-``{name, mesh, n, theta, wall_s, bytes_per_device}`` (the shared
+  * ``wall_s`` and ``bytes_per_device`` — the resident arena bytes on one
+    device, the quantity the 2D refactor exists to shrink: a ``Dt x Dv``
+    mesh holds ``ceil(theta / Dt)`` rows x one vertex block of columns
+    per device, so theta scales with the theta axis and graph size with
+    the vertex axis *simultaneously*.
+  * ``imbalance`` — per-tile dst-edge imbalance (max/mean edges per
+    vertex block; 1.0 is perfect).  On rmat graphs the balanced layout
+    must come out no worse than equal blocks — asserted below, strictly
+    better whenever equal blocks are meaningfully skewed.
+  * ``collective_s`` / ``compute_s`` — per-step frontier cost split: the
+    vertex-axis all-gather the traversal double-buffers vs the local
+    logq matmul it hides behind (``0.0`` collective when the layout has
+    no vertex axis).
+
+Answers are asserted seed-for-seed identical across every layout *and*
+both column layouts before anything is emitted — the bench doubles as
+the equivalence gate on real multi-device buffers.
+
+Emits ``BENCH_5.json`` rows ``{name, mesh, n, theta, wall_s,
+bytes_per_device, imbalance, collective_s, compute_s}`` (the shared
 `benchmarks._emit` schema) next to a human table.
 
     PYTHONPATH=src python -m benchmarks.sharding_scaling [--tiny] [--out F]
 
 CI runs the ``--tiny`` smoke under a forced 8-device host platform so
-the 2x4 / 4x2 / 8x1 / 1x8 layouts all execute with real device buffers
-(see scripts/ci.sh).
+the 2x4 / 4x2 / 8x1 / 1x8 layouts all execute with real device buffers,
+then asserts the breakdown keys are present in every row (scripts/ci.sh).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from benchmarks._emit import bench_row, mesh_tag, write_bench
-from benchmarks._util import block, print_table
+from benchmarks._util import block, print_table, timeit
 from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
 from repro.core.engine import InfluenceEngine, IMMConfig
-from repro.graphs import rmat_graph
+from repro.graphs import balance_report, resolve_partition, rmat_graph
 
 
 def _layouts():
@@ -48,6 +65,17 @@ def _layouts():
             yield make_im_mesh((d // dv, dv))
 
 
+def _variants(mesh):
+    """Vertex-column layout variants of one mesh: the canonical equal
+    blocks always, plus edge-balanced blocks whenever the mesh actually
+    shards the vertex axis (on ``Dv == 1`` the two layouts coincide)."""
+    yield "equal", ""
+    kw = mesh_engine_kwargs(mesh) if mesh is not None else {}
+    vx = kw.get("vertex_axis")
+    if vx is not None and int(mesh.shape[vx]) > 1:
+        yield "balanced", "+bal"
+
+
 def _arena_bytes_per_device(store) -> int:
     """Resident arena bytes on one device (max over devices: uneven
     theta fills are possible mid-growth)."""
@@ -58,44 +86,121 @@ def _arena_bytes_per_device(store) -> int:
     return max(int(s.data.nbytes) for s in shards)
 
 
+def _imbalance(g, mesh, kw, partition) -> float:
+    """Per-tile dst-edge imbalance (max edges per vertex block over the
+    mean) of this layout — 1.0 is perfect balance; equal blocks on a
+    power-law rmat graph typically land well above it."""
+    vx = kw.get("vertex_axis")
+    if mesh is None or vx is None:
+        return 1.0
+    dv = int(mesh.shape[vx])
+    if dv == 1:
+        return 1.0
+    part = resolve_partition(partition, g.n, dv, dst=g.edge_dst)
+    rep = balance_report(g.edge_dst, g.n, dv, partition=part)
+    return float(rep["imbalance"])
+
+
+def _step_breakdown(g, mesh, kw, batch):
+    """Median per-step frontier cost split ``(collective_s, compute_s)``.
+
+    ``collective_s`` times the vertex-axis frontier collective the
+    traversal loop double-buffers: resharding a ``(B, n)`` frontier from
+    ``P(theta, vertex)`` tiles to vertex-replicated (the all-gather that
+    overlap issues for step t+1 while step t computes).  ``compute_s``
+    times the work it hides behind — the full-width local logq matmul
+    producing the next tiled frontier.  Layouts with no vertex axis
+    (single device, 1D theta meshes, ``Dv == 1``) have no frontier
+    collective: ``collective_s == 0.0``.
+    """
+    n = g.n
+    rng = np.random.default_rng(7)
+    frontier = jnp.asarray(rng.random((batch, n)), jnp.float32)
+    logq = jnp.asarray(-rng.random((n, n)), jnp.float32)
+    matmul = jax.jit(lambda f, w: f @ w)
+    vx = kw.get("vertex_axis")
+    if mesh is None or vx is None or int(mesh.shape[vx]) == 1:
+        return 0.0, timeit(matmul, frontier, logq)
+    axes = tuple(kw["theta_axes"])
+    tiled = NamedSharding(mesh, PartitionSpec(axes, vx))
+    gathered = NamedSharding(mesh, PartitionSpec(axes, None))
+    f_tiled = jax.device_put(frontier, tiled)
+    gather = jax.jit(lambda x: x, out_shardings=gathered)
+    f_gathered = block(gather(f_tiled))
+    # logq column-sharded over the vertex axis: each device's matmul is
+    # (B/Dt, n) @ (n, block) -> its own tile of the next frontier
+    w_cols = jax.device_put(logq, NamedSharding(mesh, PartitionSpec(None, vx)))
+    return timeit(gather, f_tiled), timeit(matmul, f_gathered, w_cols)
+
+
 def run(n=1024, m=8192, theta=4096, k=10, batch=256, seed=0, log=print):
     g = rmat_graph(n, m, seed=seed)
-    cfg = IMMConfig(k=k, batch=batch, max_theta=max(theta, 1 << 20),
-                    seed=seed)
+    base = IMMConfig(k=k, batch=batch, max_theta=max(theta, 1 << 20),
+                     seed=seed)
     rows, bench, seeds_ref = [], [], None
+    imb_by_tag = {}
     for mesh in _layouts():
-        tag = mesh_tag(mesh)
         kw = mesh_engine_kwargs(mesh)
-        # compile warmup on a throwaway engine (module-level jit caches
-        # are shared), so the timed run samples all theta rows from zero
-        warm = InfluenceEngine(g, cfg, **kw)
-        warm.extend(batch)
-        block(warm.select(k).seeds)
-        engine = InfluenceEngine(g, cfg, **kw)
-        t0 = time.perf_counter()
-        engine.extend(theta)
-        sel = engine.select(k)
-        block(engine.store.counter)
-        wall = time.perf_counter() - t0
-        if seeds_ref is None:
-            seeds_ref = np.asarray(sel.seeds)
-        else:
-            # the equivalence gate: every layout must answer identically
-            np.testing.assert_array_equal(seeds_ref, np.asarray(sel.seeds))
-        per_dev = _arena_bytes_per_device(engine.store)
-        bench.append(bench_row(
-            "sharding-scaling", mesh=tag, n=n, theta=theta, wall_s=wall,
-            bytes_per_device=per_dev))
-        shape = ("replicated" if mesh is None else
-                 f"{getattr(engine.store, 'cap_local', theta)} rows x "
-                 f"{getattr(engine.store, 'n_local', n)} cols/dev")
-        rows.append([tag, n, theta, f"{wall:.3f}", f"{per_dev:,}", shape])
-        log(f"[sharding-scaling] mesh={tag}: {wall:.3f}s, "
-            f"{per_dev:,} arena B/device")
+        # the breakdown depends on the mesh, not the column layout (the
+        # traversal frontier keeps equal GSPMD tiling either way)
+        collective_s, compute_s = _step_breakdown(g, mesh, kw, batch)
+        for partition, suffix in _variants(mesh):
+            tag = mesh_tag(mesh) + suffix
+            cfg = dataclasses.replace(base, partition=partition)
+            # compile warmup on a throwaway engine (module-level jit
+            # caches are shared), so the timed run samples all theta
+            # rows from zero
+            warm = InfluenceEngine(g, cfg, **kw)
+            warm.extend(batch)
+            block(warm.select(k).seeds)
+            engine = InfluenceEngine(g, cfg, **kw)
+            t0 = time.perf_counter()
+            engine.extend(theta)
+            sel = engine.select(k)
+            block(engine.store.counter)
+            wall = time.perf_counter() - t0
+            if seeds_ref is None:
+                seeds_ref = np.asarray(sel.seeds)
+            else:
+                # the equivalence gate: every layout — mesh shape,
+                # column partition, all of them — must answer identically
+                np.testing.assert_array_equal(seeds_ref,
+                                              np.asarray(sel.seeds))
+            per_dev = _arena_bytes_per_device(engine.store)
+            imb = _imbalance(g, mesh, kw, partition)
+            imb_by_tag[tag] = imb
+            bench.append(bench_row(
+                "sharding-scaling", mesh=tag, n=n, theta=theta,
+                wall_s=wall, bytes_per_device=per_dev, imbalance=imb,
+                collective_s=collective_s, compute_s=compute_s))
+            shape = ("replicated" if mesh is None else
+                     f"{getattr(engine.store, 'cap_local', theta)} rows x "
+                     f"{getattr(engine.store, 'n_local', n)} cols/dev")
+            rows.append([tag, n, theta, f"{wall:.3f}", f"{per_dev:,}",
+                         f"{imb:.3f}", f"{collective_s * 1e3:.2f}",
+                         f"{compute_s * 1e3:.2f}", shape])
+            log(f"[sharding-scaling] mesh={tag}: {wall:.3f}s, "
+                f"{per_dev:,} arena B/device, imbalance {imb:.3f}, "
+                f"step {collective_s * 1e3:.2f}ms coll / "
+                f"{compute_s * 1e3:.2f}ms comp")
+    # balanced blocks must never be worse than equal blocks, and must be
+    # strictly better whenever equal blocks are meaningfully skewed (an
+    # rmat degree distribution always is once Dv >= 2)
+    for tag, bal in imb_by_tag.items():
+        if not tag.endswith("+bal"):
+            continue
+        eq = imb_by_tag[tag[: -len("+bal")]]
+        assert bal <= eq + 1e-9, \
+            f"balanced layout {tag} is MORE imbalanced: {bal} > {eq}"
+        if eq > 1.1:
+            assert bal < eq, \
+                f"balanced layout {tag} did not improve on equal: " \
+                f"{bal} vs {eq}"
     print_table(
         f"2D sharding scaling (n={n}, m={m}, theta={theta}, k={k}, "
         f"{jax.device_count()} device(s); identical seeds asserted)",
-        ["mesh", "n", "theta", "wall_s", "arena B/dev", "per-device tile"],
+        ["mesh", "n", "theta", "wall_s", "arena B/dev", "imbal",
+         "coll ms", "comp ms", "per-device tile"],
         rows)
     return bench
 

@@ -39,12 +39,30 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     python tests/force_mesh_check.py --mesh 2x4
 
 # sharding-scaling benchmark smoke (BENCH_5): every mesh factorization of
-# 8 forced devices (1, 8, 8x1, 4x2, 2x4, 1x8) runs the same workload with
-# identical seeds asserted, reporting wall time + arena bytes per device
+# 8 forced devices (1, 8, 8x1, 4x2, 2x4, 1x8) runs the same workload —
+# vertex-sharded layouts in both equal and edge-balanced (+bal) column
+# layouts — with identical seeds asserted, reporting wall time, arena
+# bytes per device, per-tile edge imbalance, and the per-step
+# collective/compute breakdown; the run itself asserts balanced <= equal
+# imbalance on the rmat graph
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     python -m benchmarks.sharding_scaling --tiny \
         --out "${TMPDIR:-/tmp}/BENCH_5.json"
+
+# step-time-breakdown schema gate: every BENCH_5 row must carry the
+# imbalance + collective_s/compute_s fields the overlap work reports
+python - "${TMPDIR:-/tmp}/BENCH_5.json" <<'PY'
+import json, sys
+rows = json.load(open(sys.argv[1]))
+assert rows, "BENCH_5.json has no rows"
+for row in rows:
+    missing = [k for k in ("imbalance", "collective_s", "compute_s")
+               if k not in row]
+    assert not missing, f"row {row.get('mesh')} missing {missing}"
+print(f"BENCH_5 schema OK: {len(rows)} rows carry "
+      f"imbalance/collective_s/compute_s")
+PY
 
 # streaming benchmark smoke (tiny evolving graph; the non-slow analogue of
 # the full benchmarks/stream_runtime.py run) — exercises delta apply,

@@ -51,6 +51,7 @@ from repro.core.store import (
     RRRStore, ShardedStore, make_store, next_pow2, store_from_state,
 )
 from repro.checkpoint import store as ckpt
+from repro.graphs.partition import resolve_partition
 
 
 @dataclasses.dataclass
@@ -87,6 +88,16 @@ class IMMConfig:
     # "auto" resolves to "sharded" when the engine has a mesh, "bitmap"
     # otherwise; "sharded" demands a mesh
     store: str = "auto"   # "auto" | "bitmap" | "indices" | "sharded"
+    # vertex-axis column layout of a meshed store: "equal" keeps the
+    # canonical contiguous equal blocks; "balanced" places the block
+    # boundaries at the graph's dst-degree quantiles so per-shard edge
+    # counts stay near-equal on power-law graphs (layout-only: seeds are
+    # bitwise identical either way)
+    partition: str = "equal"
+    # double-buffer the 2D frontier all-gather behind the local logq
+    # matmul (dense/pallas backends; ignored off-mesh).  Pure scheduling:
+    # overlap on/off never changes a sampled set
+    overlap: bool = True
     # full sampler-name override ("WC/pallas+stable", a legacy alias, or a
     # user registration); None = compose from (model, backend, stable)
     sampler: Optional[str] = None
@@ -154,9 +165,10 @@ class InfluenceEngine:
         if store is not None:
             self.store = store
         elif mesh is not None and self.cfg.store in ("auto", "sharded"):
-            self.store = make_store("sharded", graph.n, mesh=mesh,
-                                    theta_axes=self.theta_axes,
-                                    vertex_axis=vertex_axis)
+            self.store = make_store(
+                "sharded", graph.n, mesh=mesh, theta_axes=self.theta_axes,
+                vertex_axis=vertex_axis,
+                partition=self._resolve_partition(mesh, vertex_axis))
         elif mesh is not None and self.cfg.store == "indices":
             # fail fast: the sharded pipeline (store, selection, snapshot
             # restore) is dense-only, and the late failure used to surface
@@ -181,6 +193,18 @@ class InfluenceEngine:
         # bitmap densification and no bitmap_to_indices pass at the write
         self._reset_index_emission()
         self._select_cache: dict = {}
+
+    def _resolve_partition(self, mesh, vertex_axis):
+        """The configured vertex-axis `VertexPartition` for a meshed
+        store (None off-mesh/1D, where there is no vertex axis to lay
+        out).  ``cfg.partition="balanced"`` derives the boundaries from
+        the graph's dst degrees — deterministic per (graph, Dv), so
+        replicas and restores rebuild the identical layout."""
+        if mesh is None or vertex_axis is None:
+            return None
+        return resolve_partition(
+            getattr(self.cfg, "partition", "equal"), self.graph.n,
+            int(mesh.shape[vertex_axis]), dst=self.graph.edge_dst)
 
     def _reset_index_emission(self) -> None:
         """Recompute the native-emission width for the *current* store —
@@ -346,7 +370,8 @@ class InfluenceEngine:
         strategy = get_selection(method, layout)
         seeds, frac, gains = strategy(
             view, k, mesh=self.mesh, theta_axes=self.theta_axes,
-            vertex_axis=self.vertex_axis)
+            vertex_axis=self.vertex_axis,
+            partition=getattr(self.store, "partition", None))
         sel = Selection(
             seeds=np.asarray(seeds), covered_frac=float(frac),
             influence=float(frac) * self.graph.n, gains=np.asarray(gains),
@@ -424,9 +449,10 @@ class InfluenceEngine:
         # engines reshard, engines that deliberately keep a replicated /
         # single-device store (cfg.store="bitmap" etc.) keep their kind
         mesh = self.mesh if isinstance(self.store, ShardedStore) else None
+        vx = self.vertex_axis if mesh is not None else None
         self.store = store_from_state(
             tree["store"], mesh=mesh, theta_axes=self.theta_axes,
-            vertex_axis=self.vertex_axis if mesh is not None else None)
+            vertex_axis=vx, partition=self._resolve_partition(mesh, vx))
         self.key = jnp.asarray(tree["key"])
         self._reset_index_emission()
         self._select_cache.clear()

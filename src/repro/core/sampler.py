@@ -341,13 +341,25 @@ def _setup(key, batch, n_nodes, positions, placement, stable):
 # stable path reproduces the historical ``-stable`` twins bitwise.
 
 @partial(jax.jit, static_argnames=("batch", "max_steps", "stable", "kernel",
-                                   "interpret", "placement"))
+                                   "interpret", "placement", "overlap"))
 def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
                 stable: bool = False, kernel: bool = False,
-                interpret: bool = False, placement=None):
+                interpret: bool = False, placement=None,
+                overlap: bool = False):
     """Dense log-semiring frontier expansion (the ``dense`` and
     ``pallas`` backends; ``kernel=True`` routes the step through
     ``kernels.ops.ic_frontier_step`` — same math, fused on the MXU).
+
+    ``overlap=True`` (2D placements only; a no-op otherwise) double-
+    buffers the loop's one collective: the while-loop state carries the
+    *vertex-axis-gathered* frontier, so the all-gather that step ``t+1``
+    needs is issued at the end of step ``t``'s body — as soon as ``new``
+    exists and *decoupled from the step-t matmul*, letting XLA's
+    latency-hiding scheduler run the collective behind the local logq
+    compute instead of serializing gather -> matmul inside one dot
+    lowering.  A pure scheduling change: the gathered operand feeds the
+    same full-width local matmul GSPMD lowers for the annotation-free
+    path, so sampled sets are bitwise identical with overlap on or off.
 
     Returns ``(visited (K, n) uint8, counter (n,) int32, roots (K,))``
     where ``K = len(positions)`` (the full batch when ``positions`` is
@@ -363,6 +375,16 @@ def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
     kstep, roots, visited0, bb = _setup(
         key, batch, n, positions, placement, stable)
     uids = jnp.arange(n, dtype=jnp.uint32)[None, :] if stable else None
+    overlap = overlap and _vertex_axis_of(placement) is not None
+    if overlap:
+        spec = tuple(placement.spec)
+        gathered_sh = NamedSharding(placement.mesh,
+                                    PartitionSpec(spec[0], None))
+
+    def gather(x):
+        """Issue the vertex-axis frontier all-gather (overlap mode)."""
+        return (jax.lax.with_sharding_constraint(x, gathered_sh)
+                if overlap else x)
 
     def cond(state):
         step, frontier, visited, _ = state
@@ -385,10 +407,12 @@ def _dense_loop(key, logq, positions=None, *, batch: int, max_steps: int = 0,
             acc = frontier.astype(jnp.float32) @ logq   # (K, n) log-survival
             p_act = -jnp.expm1(acc)                     # 1 - exp(acc)
             new = jnp.logical_and(coin < p_act, ~visited)
-        return step + 1, new, jnp.logical_or(visited, new), k
+        # overlap: kick off step-(t+1)'s frontier collective here, while
+        # nothing downstream in this body depends on the gathered copy
+        return step + 1, gather(new), jnp.logical_or(visited, new), k
 
     _, _, visited, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), visited0, visited0, kstep)
+        cond, body, (jnp.int32(0), gather(visited0), visited0, kstep)
     )
     counter = visited.sum(axis=0, dtype=jnp.int32)      # fused count (C3)
     return visited.astype(jnp.uint8), counter, roots
@@ -635,13 +659,18 @@ def _bind_dense(model, graph: Graph, cfg, *, stable, placement,
                 kernel=False):
     logq = logq_from_probs(graph, model.edge_probs(graph))
     interpret = bool(getattr(cfg, "pallas_interpret", False))
+    # double-buffer the frontier all-gather on 2D placements (config-
+    # gated for the overlap-on/off equivalence cells; _dense_loop drops
+    # the flag on 1D/absent placements where there is no collective)
+    overlap = bool(getattr(cfg, "overlap", True))
     if stable:
         return lambda key, positions=None: _dense_loop(
             key, logq, positions, batch=cfg.batch, stable=True,
-            kernel=kernel, interpret=interpret, placement=placement)
+            kernel=kernel, interpret=interpret, placement=placement,
+            overlap=overlap)
     return lambda key: _dense_loop(
         key, logq, batch=cfg.batch, kernel=kernel, interpret=interpret,
-        placement=placement)
+        placement=placement, overlap=overlap)
 
 
 def _bind_pallas(model, graph: Graph, cfg, *, stable, placement):

@@ -164,40 +164,71 @@ def select_sparse(R_idx, valid, n: int, k: int, method: str = "rebuild"):
 
 # -------------------------------------------------------------- sharded ----
 
-def _vertex_sharded_pick(counter, alive, n, vertex_axis, member_local):
+def _vertex_sharded_pick(counter, alive, n, vertex_axis, member_local,
+                         starts=None):
     """Greedy argmax over a *vertex-sharded* counter -> (v, covered).
 
     Runs inside shard_map on every (theta, vertex) tile: mask padding
-    columns (global id >= ``n``) out of the race, take the local argmax,
-    resolve the global winner from ``Dv`` all-gathered (value, global id)
-    scalar pairs, then test membership of the winner tile-locally —
-    ``member_local(lv)`` returns the ``(rows_local,) bool`` membership of
-    in-range local id ``lv`` (its result is discarded for out-of-block
-    winners) — and psum-or the bits over the vertex axis.  Shared by the
-    dense and sharded-sparse strategies so their argmax/pad/tie-break
-    semantics can never diverge.
+    columns out of the race, take the local argmax, resolve the global
+    winner from ``Dv`` all-gathered (value, global id) scalar pairs, then
+    test membership of the winner tile-locally — ``member_local(lv)``
+    returns the ``(rows_local,) bool`` membership of in-range local id
+    ``lv`` (its result is discarded for out-of-block winners) — and
+    psum-or the bits over the vertex axis.  Shared by the dense and
+    sharded-sparse strategies so their argmax/pad/tie-break semantics can
+    never diverge.
+
+    ``starts`` is the replicated ``(Dv + 1,) int32`` block-boundary array
+    of the arena's `VertexPartition` (shard ``s`` owns global vertices
+    ``[starts[s], starts[s+1])``) — it carries both the local->global id
+    offset and the per-shard pad mask, for equal *and* edge-balanced
+    layouts.  Because blocks are contiguous ascending runs in both
+    layouts, per-shard-first argmax + first-shard-with-max resolution
+    equals the unsharded first-argmax exactly, so selections are
+    layout-invariant.  ``starts=None`` keeps the legacy arithmetic
+    (equal blocks of width ``nloc``, pad mask from ``n``).
     """
     nloc = counter.shape[0]
     shard = jax.lax.axis_index(vertex_axis)
-    if n is not None:
-        gids = shard * nloc + jnp.arange(nloc)
-        counter = jnp.where(gids < n, counter, -1.0)
+    if starts is not None:
+        lo = starts[shard].astype(jnp.int32)
+        size = starts[shard + 1].astype(jnp.int32) - lo
+    else:
+        lo = (shard * nloc).astype(jnp.int32)
+        size = (jnp.clip(n - lo, 0, nloc).astype(jnp.int32)
+                if n is not None else jnp.int32(nloc))
+    counter = jnp.where(jnp.arange(nloc) < size, counter, -1.0)
     vloc = jnp.argmax(counter)
     val = counter[vloc]
-    gidx = shard * nloc + vloc
+    gidx = lo + vloc
     vals = jax.lax.all_gather(val, vertex_axis)
     gidxs = jax.lax.all_gather(gidx, vertex_axis)
     v = gidxs[jnp.argmax(vals)].astype(jnp.int32)
-    lv = v - shard * nloc
+    lv = v - lo
     member = member_local(jnp.clip(lv, 0, nloc - 1))
     member = jnp.where((lv >= 0) & (lv < nloc), member, False)
     member = jax.lax.psum(member.astype(jnp.int32), vertex_axis) > 0
     return v, member & alive
 
 
+def _starts_for(mesh, vertex_axis, n, partition):
+    """Replicated ``(Dv + 1,) int32`` block boundaries for the sharded
+    pick, or None when there is no vertex axis (1D layouts never remap
+    ids) or no way to build them (``n`` and ``partition`` both absent —
+    the legacy unmasked path)."""
+    if vertex_axis is None:
+        return None
+    if partition is None:
+        if n is None:
+            return None
+        partition = vertex_partition(int(n), int(mesh.shape[vertex_axis]))
+    return jnp.asarray(partition.starts, jnp.int32)
+
+
 def select_dense_sharded(mesh, R, valid, k: int, *,
                          theta_axes=("data",), vertex_axis=None,
-                         method: str = "rebuild", n: int | None = None):
+                         method: str = "rebuild", n: int | None = None,
+                         partition=None):
     """EfficientIMM selection with the theta axis sharded over ``theta_axes``
     (paper C1) and, optionally, the vertex axis over ``vertex_axis``.
 
@@ -209,8 +240,12 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
     scattered on entry.  ``valid`` may be any mask, not just a prefix —
     sharded stores fill each shard independently.  ``n`` is the real
     vertex count: on 2D layouts the column dimension is padded to
-    ``Dv * ceil(n / Dv)`` and the pad columns must never win the argmax
+    ``Dv * n_local`` and the pad columns must never win the argmax
     (they are all-zero, but an all-zero round would otherwise pick one).
+    ``partition`` is the arena's `VertexPartition` — it must match the
+    layout the columns of ``R`` were tiled with (a `ShardedStore` exposes
+    it as ``store.partition``); when None the canonical equal-block
+    layout for ``n`` is assumed.
 
     Inside shard_map each device owns a ``(theta_local, n_local)`` tile.
     Per greedy round only reduced quantities cross devices: the counter
@@ -234,8 +269,9 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
     axes = tuple(theta_axes)
     if method not in ("rebuild", "decrement"):
         raise ValueError(f"unknown method {method}")
+    starts_arr = _starts_for(mesh, vertex_axis, n, partition)
 
-    def local_select(R_local, valid_local):
+    def local_select(R_local, valid_local, starts=None):
         Rf = R_local.astype(jnp.float32)
 
         def pick(counter, alive):
@@ -243,7 +279,7 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
             if vertex_axis is not None:
                 return _vertex_sharded_pick(
                     counter, alive, n, vertex_axis,
-                    lambda lv: R_local[:, lv] > 0)
+                    lambda lv: R_local[:, lv] > 0, starts)
             v = jnp.argmax(counter).astype(jnp.int32)
             return v, (R_local[:, v] > 0) & alive
 
@@ -282,17 +318,23 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
             jax.lax.psum(valid_local.sum(dtype=jnp.float32), axes), 1.0)
         return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
 
-    in_specs = (P(axes, vertex_axis), P(axes))
     out_specs = (P(), P(), P())
+    if starts_arr is None:
+        fn = shard_map(
+            local_select, mesh=mesh,
+            in_specs=(P(axes, vertex_axis), P(axes)), out_specs=out_specs,
+        )
+        return fn(R, valid)
     fn = shard_map(
-        local_select, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        local_select, mesh=mesh,
+        in_specs=(P(axes, vertex_axis), P(axes), P()), out_specs=out_specs,
     )
-    return fn(R, valid)
+    return fn(R, valid, starts_arr)
 
 
 def select_sparse_sharded(mesh, R_idx, valid, n: int, k: int, *,
                           theta_axes=("data",), vertex_axis=None,
-                          method: str = "rebuild"):
+                          method: str = "rebuild", partition=None):
     """Greedy max-coverage over *sharded index lists* — the C4 sparse
     representation on a 1D or 2D mesh, lifting the old bitmap-only
     restriction of the sharded pipeline.
@@ -320,11 +362,13 @@ def select_sparse_sharded(mesh, R_idx, valid, n: int, k: int, *,
     if method not in ("rebuild", "decrement"):
         raise ValueError(f"unknown method {method}")
     Dv = int(mesh.shape[vertex_axis]) if vertex_axis else 1
-    # the canonical vertex-block layout — must match the tiles
+    # the vertex-block layout — must match the tiles
     # ShardedStore.index_view emitted, or local ids mean the wrong vertex
-    n_local = vertex_partition(n, Dv).block
+    part = partition if partition is not None else vertex_partition(n, Dv)
+    n_local = part.block
+    starts_arr = _starts_for(mesh, vertex_axis, n, part)
 
-    def local_select(R_local, valid_local):
+    def local_select(R_local, valid_local, starts=None):
         def counter_of(alive):
             partial = bincount_weighted(
                 R_local, alive.astype(jnp.float32)[:, None], n_local)
@@ -334,7 +378,7 @@ def select_sparse_sharded(mesh, R_idx, valid, n: int, k: int, *,
             if vertex_axis is not None:
                 return _vertex_sharded_pick(
                     counter, alive, n, vertex_axis,
-                    lambda lv: (R_local == lv).any(axis=1))
+                    lambda lv: (R_local == lv).any(axis=1), starts)
             v = jnp.argmax(counter).astype(jnp.int32)
             return v, ((R_local == v).any(axis=1)) & alive
 
@@ -376,12 +420,19 @@ def select_sparse_sharded(mesh, R_idx, valid, n: int, k: int, *,
             jax.lax.psum(valid_local.sum(dtype=jnp.float32), axes), 1.0)
         return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
 
+    if starts_arr is None:
+        fn = shard_map(
+            local_select, mesh=mesh,
+            in_specs=(P(axes, vertex_axis), P(axes)),
+            out_specs=(P(), P(), P()),
+        )
+        return fn(R_idx, valid)
     fn = shard_map(
         local_select, mesh=mesh,
-        in_specs=(P(axes, vertex_axis), P(axes)),
+        in_specs=(P(axes, vertex_axis), P(axes), P()),
         out_specs=(P(), P(), P()),
     )
-    return fn(R_idx, valid)
+    return fn(R_idx, valid, starts_arr)
 
 
 def greedy_select(R_or_idx, valid, k: int, *, n: int | None = None,
@@ -440,24 +491,25 @@ def _sparse_strategy(method):
 
 def _sharded_strategy(method):
     def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
-            **_):
+            partition=None, **_):
         if mesh is None:
             raise ValueError("sharded selection needs a mesh")
         return select_dense_sharded(
             mesh, view.R, view.valid, k,
             theta_axes=theta_axes, vertex_axis=vertex_axis, method=method,
-            n=view.n)
+            n=view.n, partition=partition)
     return run
 
 
 def _sharded_sparse_strategy(method):
     def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
-            **_):
+            partition=None, **_):
         if mesh is None:
             raise ValueError("sharded selection needs a mesh")
         return select_sparse_sharded(
             mesh, view.R, view.valid, view.n, k,
-            theta_axes=theta_axes, vertex_axis=vertex_axis, method=method)
+            theta_axes=theta_axes, vertex_axis=vertex_axis, method=method,
+            partition=partition)
     return run
 
 

@@ -71,7 +71,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.adaptive import bitmap_to_indices
-from repro.graphs.partition import vertex_partition
+from repro.graphs.partition import VertexPartition, vertex_partition
 
 MIN_CAPACITY = 16     # matches the historical pad floor (1 << 4)
 MIN_INDEX_PAD = 4     # matches the historical l_pad floor (1 << 2)
@@ -729,18 +729,24 @@ def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
     the queried vertices that fall inside its own column block against its
     own rows; the vertex axis combines per-(row, query) hit bits with one
     psum-or (a ``(cap_local, Q)`` bool — rows x queries, never columns),
-    and the theta axis reduces only the final ``(Q,)`` counts."""
+    and the theta axis reduces only the final ``(Q,)`` counts.
+
+    ``starts`` is the replicated ``(Dv + 1,) int32`` block-boundary array
+    of the store's `VertexPartition` — shard ``s`` owns global vertices
+    ``[starts[s], starts[s+1])`` — so one compiled kernel serves equal
+    *and* edge-balanced layouts (the boundaries are data, not shape)."""
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
-    def hits(R, valid, S):
+    def hits(R, valid, S, starts):
         n_local = R.shape[1]
         flat = S.reshape(-1)
         if vertex_axis is None:
             lidx, ok = flat, jnp.ones(flat.shape, jnp.bool_)
         else:
             shard = jax.lax.axis_index(vertex_axis)
-            lidx = flat - shard * n_local
-            ok = (lidx >= 0) & (lidx < n_local)
+            lo = starts[shard]
+            lidx = flat - lo
+            ok = (flat >= lo) & (flat < starts[shard + 1])
         memb = jnp.take(R, jnp.clip(lidx, 0, n_local - 1), axis=1) > 0
         memb = (memb & ok[None, :]).reshape((R.shape[0],) + S.shape)
         hit = memb.any(axis=2)                       # (cap_local, Q)
@@ -753,7 +759,8 @@ def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
         return counts / n_valid
 
     return jax.jit(shard_map(
-        hits, mesh=mesh, in_specs=(sp_rows, sp_vec, P()), out_specs=P()))
+        hits, mesh=mesh, in_specs=(sp_rows, sp_vec, P(), P()),
+        out_specs=P()))
 
 
 @functools.lru_cache(maxsize=None)
@@ -761,23 +768,27 @@ def _sharded_touch_kernel(mesh, theta_axes, vertex_axis):
     """Reverse-touch (streaming invalidation) with both axes local: each
     tile checks the touched vertices inside its own column block against
     its own rows; only the ``(cap_local,)`` per-row partial hit bits cross
-    the vertex axis (psum-or), and the result stays ``P(theta_axes)``."""
+    the vertex axis (psum-or), and the result stays ``P(theta_axes)``.
+    ``starts`` carries the partition block boundaries, as in
+    `_sharded_hits_kernel`."""
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
-    def touch(R, verts, vmask):
+    def touch(R, verts, vmask, starts):
         n_local = R.shape[1]
         if vertex_axis is None:
             lidx, ok = verts, vmask
         else:
             shard = jax.lax.axis_index(vertex_axis)
-            lidx = verts - shard * n_local
-            ok = vmask & (lidx >= 0) & (lidx < n_local)
+            lo = starts[shard]
+            lidx = verts - lo
+            ok = vmask & (verts >= lo) & (verts < starts[shard + 1])
         memb = jnp.take(R, jnp.clip(lidx, 0, n_local - 1), axis=1) > 0
         local = (memb & ok[None, :]).any(axis=1)
         return _psum_if(local.astype(jnp.int32), vertex_axis) > 0
 
     return jax.jit(shard_map(
-        touch, mesh=mesh, in_specs=(sp_rows, P(), P()), out_specs=sp_vec))
+        touch, mesh=mesh, in_specs=(sp_rows, P(), P(), P()),
+        out_specs=sp_vec))
 
 
 @functools.lru_cache(maxsize=None)
@@ -931,15 +942,20 @@ class ShardedStore:
       * ``R``       — ``(Dt * cap_local, n_pad) uint8``,
         ``P(theta_axes, vertex_axis)``: tile ``(t, v)`` owns rows
         ``[t * cap_local, (t+1) * cap_local)`` x columns
-        ``[v * n_local, (v+1) * n_local)``, where ``n_local =
-        ceil(n / Dv)`` and ``n_pad = Dv * n_local`` (pad columns carry no
-        vertex and stay all-zero).  The full ``(theta, n)`` arena never
-        exists on one device; per-device memory is ``cap_local * n_local``
-        bytes, so **theta scales with the theta axis and n with the
-        vertex axis** — graph size scales with the mesh, not with one
-        device (the vertex-block layout is
-        `repro.graphs.partition.vertex_partition`, shared with samplers
-        and selection).
+        ``[v * n_local, (v+1) * n_local)``, where ``n_local`` is the
+        padded tile width of the store's `VertexPartition` and ``n_pad =
+        Dv * n_local`` (pad columns carry no vertex and stay all-zero).
+        The full ``(theta, n)`` arena never exists on one device;
+        per-device memory is ``cap_local * n_local`` bytes, so **theta
+        scales with the theta axis and n with the vertex axis** — graph
+        size scales with the mesh, not with one device.  The layout may
+        be the canonical equal blocks (``vertex_partition``; tile ``v``
+        holds vertices ``[v * n_local, (v+1) * n_local)``) or an
+        edge-balanced one (``balanced_vertex_partition``; tile ``v``
+        holds the contiguous run ``[starts[v], starts[v+1])`` with
+        data-dependent boundaries, padded to ``n_local`` columns) — both
+        shared with selection and streaming reverse-touch through
+        ``self.partition``.
       * ``sizes``   — ``(Dt * cap_local,) int32``, ``P(theta_axes)``
         (replicated over the vertex axis), aligned with ``R`` rows.
       * counter     — per-tile partials ``(Dt, n_pad) int32``,
@@ -977,7 +993,8 @@ class ShardedStore:
 
     def __init__(self, n: int, *, mesh, theta_axes=("data",),
                  vertex_axis=None, capacity: int = MIN_CAPACITY,
-                 policy: StorePressurePolicy | None = None):
+                 policy: StorePressurePolicy | None = None,
+                 partition: VertexPartition | None = None):
         if mesh is None:
             raise ValueError("ShardedStore needs a jax.sharding.Mesh")
         if isinstance(theta_axes, str):
@@ -988,8 +1005,15 @@ class ShardedStore:
         self.vertex_axis = vertex_axis
         self.D = int(np.prod([mesh.shape[a] for a in self.theta_axes]))
         self.Dv = int(mesh.shape[vertex_axis]) if vertex_axis else 1
-        vp = vertex_partition(self.n, self.Dv)
-        self.n_local, self.n_pad = vp.block, vp.n_pad
+        if partition is None:
+            partition = vertex_partition(self.n, self.Dv)
+        elif partition.n != self.n or partition.shards != self.Dv:
+            raise ValueError(
+                f"partition covers n={partition.n} over "
+                f"{partition.shards} shards; this store needs n={self.n} "
+                f"over Dv={self.Dv}")
+        self.partition = partition
+        self.n_local, self.n_pad = partition.block, partition.n_pad
         self.cap_local = next_pow2(-(-int(capacity) // self.D))
         self.version = 0
         self.policy = policy
@@ -1000,6 +1024,19 @@ class ShardedStore:
         self._sh_vec = NamedSharding(mesh, P(self.theta_axes))
         self._sh_rep = NamedSharding(mesh, P())
         self._sh_vrows = NamedSharding(mesh, P(None, vertex_axis))
+        # partition block boundaries, replicated for the starts-aware
+        # kernels; balanced layouts also carry the column gather maps
+        # (global order <-> padded layout) — host-precomputed, O(n)
+        self._starts_dev = jax.device_put(
+            jnp.asarray(partition.starts, jnp.int32), self._sh_rep)
+        if partition.is_equal:
+            self._col_src = self._col_ok = self._cols_from_pad = None
+        else:
+            src = partition.source_cols()
+            self._col_src = jnp.asarray(
+                np.clip(src, 0, max(self.n - 1, 0)), jnp.int32)
+            self._col_ok = jnp.asarray((src < self.n).astype(np.uint8))
+            self._cols_from_pad = partition.padded_cols()
         self._counts_host = np.zeros((self.D,), np.int64)
         if policy is not None:
             cap = policy.row_cap(self.n)
@@ -1087,8 +1124,12 @@ class ShardedStore:
         """Global fused counter ``(n,) int32`` — reduces the per-tile
         partials over the theta axis and strips the vertex padding
         columns (an all-reduce; host/reporting use only, the selection
-        kernels consume the partials tile-locally)."""
-        return self._counter.sum(axis=0)[:self.n]
+        kernels consume the partials tile-locally).  Always in *global*
+        vertex order, whatever the column layout."""
+        total = self._counter.sum(axis=0)
+        if self.partition.is_equal:
+            return total[:self.n]
+        return jnp.take(total, jnp.asarray(self._cols_from_pad), axis=0)
 
     @property
     def batch_sharding(self) -> NamedSharding:
@@ -1096,10 +1137,26 @@ class ShardedStore:
         the store write is a pure device-local slice update (rows
         block-partitioned over ``theta_axes``, vertex columns over
         ``vertex_axis`` when the mesh is 2D) — each device samples
-        exactly the (row, column) tile its arena shard will store."""
+        exactly the (row, column) tile its arena shard will store.
+        Under a *balanced* partition, GSPMD's equal column tiling of the
+        ``(B, n)`` batch does not coincide with the arena's
+        data-dependent boundaries; ``add_batch``'s layout gather performs
+        the boundary re-tiling on the (small) batch, so traversal keeps
+        its shape-stable equal tiling (and with it the positional coin
+        streams) while the resident arena stays edge-balanced."""
         return self._sh_rows
 
     # ---------------------------------------------------------- writing ----
+
+    def _layout_cols(self, rows):
+        """Rearrange ``(B, n)`` global-order rows into the arena's padded
+        column layout ``(B, n_pad)``: a zero-pad for the equal-block
+        layout (columns already line up), a masked column gather for
+        balanced layouts (pad columns land all-zero)."""
+        if self.partition.is_equal:
+            return _pad_cols(rows, self.n_pad)
+        return (jnp.take(rows, self._col_src, axis=1)
+                * self._col_ok[None, :].astype(rows.dtype))
 
     def _grow_rows(self, incoming: int):
         need = int(self._counts_host.max(initial=0)) + incoming
@@ -1172,7 +1229,7 @@ class ShardedStore:
         B = int(visited.shape[0])
         if B == 0:
             return np.zeros((0,), np.int64)
-        visited = _pad_cols(visited, self.n_pad)
+        visited = self._layout_cols(visited)
         b = -(-B // self.D)
         if b * self.D != B:
             visited = jnp.concatenate(
@@ -1237,7 +1294,7 @@ class ShardedStore:
             raise ValueError(
                 "replace_rows targets must be filled, dead slots "
                 "(kill_rows them first)")
-        rows = _pad_cols(jnp.asarray(rows).astype(jnp.uint8), self.n_pad)
+        rows = self._layout_cols(jnp.asarray(rows).astype(jnp.uint8))
         pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
         if pad:
             idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
@@ -1304,7 +1361,7 @@ class ShardedStore:
         cross the vertex axis and per-query counts the theta axis (never
         arena rows or columns)."""
         return self._hits_fn(self.R, self.valid_mask(),
-                             jnp.asarray(S, jnp.int32))
+                             jnp.asarray(S, jnp.int32), self._starts_dev)
 
     def coverage_stats(self) -> tuple[float, int]:
         """(avg fractional set coverage, max set size) over live stored
@@ -1351,7 +1408,7 @@ class ShardedStore:
         fn = _sharded_touch_kernel(
             self.mesh, self.theta_axes, self.vertex_axis)
         return fn(self.R, jnp.asarray(verts, jnp.int32),
-                  jnp.asarray(vmask, jnp.bool_))
+                  jnp.asarray(vmask, jnp.bool_), self._starts_dev)
 
     # ------------------------------------------------------ checkpointing ----
 
@@ -1362,8 +1419,14 @@ class ShardedStore:
         stripped) — stale/killed rows are dropped at snapshot time — so
         restore redistributes onto any mesh layout (none <-> 1D <-> 2D),
         the elastic layout `checkpoint.store` promises.  This is the one
-        deliberate host gather in the store's life cycle."""
-        R = np.asarray(self.R)[:, :self.n]
+        deliberate host gather in the store's life cycle.  Rows are put
+        back in *global* vertex-id order whatever the column layout, so
+        a snapshot taken under a balanced partition restores onto equal
+        blocks (or different balanced boundaries) unchanged — restore
+        re-partitions elastically."""
+        R = np.asarray(self.R)
+        R = (R[:, :self.n] if self.partition.is_equal
+             else R[:, self._cols_from_pad])
         sizes = np.asarray(self.sizes)
         keep = self._filled_host() & self._live_host
         live_count = int(keep.sum())
@@ -1385,7 +1448,7 @@ class ShardedStore:
 
     @classmethod
     def from_state(cls, st, *, mesh, theta_axes=("data",),
-                   vertex_axis=None) -> "ShardedStore":
+                   vertex_axis=None, partition=None) -> "ShardedStore":
         """Rebuild on ``mesh`` from a ``"sharded"`` (compact rows) *or*
         ``"bitmap"`` (full-capacity arena) snapshot: the valid rows are
         redistributed block-evenly across the new mesh's tiles (any
@@ -1401,7 +1464,8 @@ class ShardedStore:
             rows = rows[np.asarray(st["live"])[:count].astype(bool)]
             count = rows.shape[0]
         store = cls(n, mesh=mesh, theta_axes=theta_axes,
-                    vertex_axis=vertex_axis, capacity=max(count, 1))
+                    vertex_axis=vertex_axis, capacity=max(count, 1),
+                    partition=partition)
         chunk = max(cls.RESTORE_CHUNK // max(store.D, 1), 1) * store.D
         slot_chunks = []
         for lo in range(0, count, chunk):
@@ -1432,7 +1496,7 @@ def make_store(kind: str, n: int, **kw) -> RRRStore:
 
 
 def store_from_state(st, *, mesh=None, theta_axes=("data",),
-                     vertex_axis=None) -> RRRStore:
+                     vertex_axis=None, partition=None) -> RRRStore:
     """Rebuild a store from a `state()` tree (snapshot restore path).
 
     Snapshots are elastic across layouts: with ``mesh`` given, bitmap and
@@ -1457,7 +1521,8 @@ def store_from_state(st, *, mesh=None, theta_axes=("data",),
                 "elastically (the mesh engine still serves the C4 index "
                 "representation through ShardedStore.index_view).")
         return ShardedStore.from_state(st, mesh=mesh, theta_axes=theta_axes,
-                                       vertex_axis=vertex_axis)
+                                       vertex_axis=vertex_axis,
+                                       partition=partition)
     if kind == "sharded":
         return BitmapStore.from_rows(np.asarray(st["R"]), int(st["n"]))
     return STORE_KINDS[kind].from_state(st)

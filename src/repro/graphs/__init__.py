@@ -1,7 +1,14 @@
 from repro.graphs.csr import Graph, build_graph
 from repro.graphs.generators import rmat_graph, erdos_graph, star_graph, path_graph
 from repro.graphs.datasets import SNAP_STATS, synthetic_snap, scaled_snap
-from repro.graphs.partition import partition_edges_by_dst
+from repro.graphs.partition import (
+    VertexPartition,
+    balance_report,
+    balanced_vertex_partition,
+    partition_edges_by_dst,
+    resolve_partition,
+    vertex_partition,
+)
 from repro.graphs.sampler import neighbor_sampler
 
 __all__ = [
@@ -14,6 +21,11 @@ __all__ = [
     "SNAP_STATS",
     "synthetic_snap",
     "scaled_snap",
+    "VertexPartition",
+    "balance_report",
+    "balanced_vertex_partition",
     "partition_edges_by_dst",
+    "resolve_partition",
+    "vertex_partition",
     "neighbor_sampler",
 ]

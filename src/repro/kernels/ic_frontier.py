@@ -9,6 +9,14 @@ the log-semiring fused with Bernoulli sampling and the visited-bitmap mask
 Grid: (B/Tb, n/Tn, n/Tk) with the contraction axis minor; the logits
 accumulate in VMEM scratch and the sampling epilogue fires on the last k
 tile, so the (B, n) logit matrix never materializes in HBM.
+
+On a 2D (theta x vertex) mesh this kernel runs inside the dense loop's
+double-buffered frontier dispatch (``core/sampler.py::_dense_loop`` with
+``overlap=True``): the loop state carries the vertex-axis all-gathered
+frontier, so the collective producing step t+1's ``frontier`` operand is
+issued while this kernel computes step t — the all-gather hides behind
+the MXU matmul instead of serializing with it.  The kernel itself is
+oblivious: it always sees a full-width ``(B, n)`` frontier operand.
 """
 from __future__ import annotations
 

@@ -61,6 +61,7 @@ from repro.core.engine import IMMConfig, InfluenceEngine, Selection
 from repro.core.sampler import default_sampler_name, stable_variant
 from repro.core.store import StorePressurePolicy, make_store, next_pow2
 from repro.graphs.csr import Graph, edge_arrays
+from repro.graphs.partition import resolve_partition
 from repro.stream.delta import GraphDelta, canonicalize
 from repro.stream.invalidate import invalidate
 
@@ -118,9 +119,20 @@ class StreamEngine:
                 raise ValueError(
                     "streaming on a mesh requires the sharded bitmap "
                     "store (cfg.store='auto')")
+            # balanced boundaries are derived from the *initial* graph
+            # and stay fixed across deltas — a snapshot/restore (or a
+            # fresh stream on the mutated graph) re-partitions, the
+            # resident rows re-tile through the store's global-order
+            # snapshot contract
+            part = None
+            if vertex_axis is not None:
+                part = resolve_partition(
+                    getattr(cfg, "partition", "equal"), graph.n,
+                    int(mesh.shape[vertex_axis]), dst=graph.edge_dst)
             store = make_store("sharded", graph.n, mesh=mesh,
                                theta_axes=theta_axes,
-                               vertex_axis=vertex_axis, policy=policy)
+                               vertex_axis=vertex_axis, policy=policy,
+                               partition=part)
         else:
             kind = "bitmap" if cfg.store in ("auto", "sharded") else cfg.store
             store = make_store(kind, graph.n, policy=policy)

@@ -12,7 +12,11 @@ separate structure to build, grow, or keep consistent.
 For a `ShardedStore` the query is shard-local by construction: the
 touched-vertex list is tiny and replicated, each device reduces over its
 own arena block, and the resulting stale mask stays sharded
-``P(theta_axes)`` — nothing row-sized crosses devices.
+``P(theta_axes)`` — nothing row-sized crosses devices.  Which columns a
+device owns is the store's `VertexPartition` contract (equal or
+edge-balanced blocks): each tile resolves the touched vertices against
+its own block-start offsets, so the query answers identically under any
+column layout.
 
 ``invalidate(store, vertices)`` marks the touched rows dead through the
 store's ``kill_rows`` primitive: they leave ``view().valid``, ``hits``

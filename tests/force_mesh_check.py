@@ -14,12 +14,18 @@ devices).  Asserts the C1 acceptance criteria:
   * sharded ``select(k)`` and ``influence(S)`` are seed-for-seed
     identical to ``BitmapStore`` + dense selection for a fixed
     ``cfg.seed``, including the true decremental sharded strategy;
+  * edge-balanced vertex blocks (``cfg.partition="balanced"``) and
+    overlap-off traversal (``cfg.overlap=False``) are bitwise identical
+    to the equal/overlapped run — layout and scheduling never change an
+    answer — and on the 2D rmat cell the balanced layout reports
+    strictly lower per-tile edge imbalance;
   * snapshot/restore round-trips across layouts (this mesh -> 1D -> 1
     shard -> none) without changing answers.
 
 Prints one JSON line on success (consumed by the pytest wrapper).
 """
 import argparse
+import dataclasses
 import json
 import sys
 import tempfile
@@ -30,7 +36,7 @@ import jax
 from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.core.store import BitmapStore, ShardedStore
-from repro.graphs import rmat_graph
+from repro.graphs import balance_report, rmat_graph
 
 
 def main(argv=None):
@@ -87,6 +93,37 @@ def main(argv=None):
     np.testing.assert_array_equal(
         sel_dec.seeds, dense.select(5, method="decrement").seeds)
 
+    # --- layout & schedule invariance: balanced blocks, overlap off -----
+    imb = {"equal": 1.0, "balanced": 1.0}
+    if st.Dv > 1:
+        bal = InfluenceEngine(
+            g, dataclasses.replace(cfg, partition="balanced"), **kw)
+        r_bal = bal.run()
+        np.testing.assert_array_equal(r_dense.seeds, r_bal.seeds)
+        np.testing.assert_array_equal(r_dense.counter, r_bal.counter)
+        bst = bal.store
+        assert not bst.partition.is_equal
+        # boundaries are data-dependent but per-device tiles stay uniform
+        assert all(s.data.shape == (bst.cap_local, bst.n_local)
+                   for s in bst.R.addressable_shards)
+        imb["equal"] = balance_report(g.edge_dst, g.n, st.Dv)["imbalance"]
+        imb["balanced"] = balance_report(
+            g.edge_dst, g.n, st.Dv, partition=bst.partition)["imbalance"]
+        assert imb["balanced"] <= imb["equal"] + 1e-9, imb
+        if imb["equal"] > 1.1:
+            # rmat degrees are skewed: balancing must actually help
+            assert imb["balanced"] < imb["equal"], imb
+        # balanced + overlap-off together, still bitwise identical
+        both = InfluenceEngine(
+            g, dataclasses.replace(cfg, partition="balanced",
+                                   overlap=False), **kw)
+        np.testing.assert_array_equal(r_dense.seeds, both.run().seeds)
+    noov = InfluenceEngine(
+        g, dataclasses.replace(cfg, overlap=False), **kw)
+    r_noov = noov.run()
+    np.testing.assert_array_equal(r_dense.seeds, r_noov.seeds)
+    np.testing.assert_array_equal(r_dense.counter, r_noov.counter)
+
     # --- fused membership queries agree --------------------------------
     queries = [r_dense.seeds[:2], r_dense.seeds]
     np.testing.assert_allclose(
@@ -123,6 +160,7 @@ def main(argv=None):
         "theta": int(r_sharded.theta),
         "cap_local": int(st.cap_local), "n_local": int(st.n_local),
         "counts": [int(c) for c in st.counts],
+        "imbalance": imb,
     }))
 
 

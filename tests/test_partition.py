@@ -1,0 +1,196 @@
+"""Property wall for `repro.graphs.partition` — the one `VertexPartition`
+contract every 2D layer (store columns, sampler tables, sharded
+selection's id mapping, streaming reverse-touch) builds on.
+
+Hypothesis is not available in the image, so these are seeded-RNG
+parameter sweeps: every invariant is checked over a grid of (n, shards)
+shapes x weight distributions (uniform, rmat power-law, adversarial
+point masses), equal and balanced layouts alike.
+"""
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    VertexPartition,
+    balance_report,
+    balanced_vertex_partition,
+    partition_edges_by_dst,
+    resolve_partition,
+    rmat_graph,
+    vertex_partition,
+)
+
+# (n, shards) shapes: degenerate, non-dividing, shards > n, big-ish
+SHAPES = [(1, 1), (5, 2), (7, 3), (8, 4), (17, 16), (3, 8),
+          (64, 8), (100, 7), (193, 4)]
+
+
+def _partitions(n, shards, rng):
+    """Equal + a spread of balanced layouts (uniform / skewed / point
+    masses) for one shape."""
+    parts = [vertex_partition(n, shards)]
+    parts.append(balanced_vertex_partition(
+        n, shards, dst=rng.integers(0, n, size=4 * n)))
+    # power-law-ish weights: most mass on a few vertices
+    w = (1.0 / (1.0 + np.arange(n, dtype=np.float64))) ** 2
+    parts.append(balanced_vertex_partition(n, shards,
+                                           weights=rng.permutation(w)))
+    # adversarial: all weight on one vertex (blocks must stay valid)
+    w = np.ones(n)
+    w[int(rng.integers(0, n))] = 1e6
+    parts.append(balanced_vertex_partition(n, shards, weights=w))
+    # no dst at all: degree-0 everywhere -> uniform weights -> ~equal
+    parts.append(balanced_vertex_partition(n, shards))
+    return parts
+
+
+# ----------------------------------------------------------- invariants ----
+
+@pytest.mark.parametrize("n,shards", SHAPES)
+def test_partition_covers_every_vertex_exactly_once(n, shards, rng):
+    for part in _partitions(n, shards, rng):
+        starts = part.starts
+        assert starts[0] == 0 and starts[-1] == n
+        assert np.all(np.diff(starts) >= 0)
+        sizes = part.sizes
+        assert sizes.sum() == n
+        assert sizes.max(initial=0) <= part.block
+        assert part.n_pad == part.shards * part.block
+        # the live entries of source_cols are exactly 0..n-1, once each
+        src = part.source_cols()
+        live = src[src < n]
+        assert np.array_equal(np.sort(live), np.arange(n))
+        # pad columns carry the sentinel n and nothing else
+        assert np.all(src[src >= n] == n)
+        assert (src >= n).sum() == part.n_pad - n
+
+
+@pytest.mark.parametrize("n,shards", SHAPES)
+def test_local_id_block_of_round_trip(n, shards, rng):
+    u = np.arange(n)
+    for part in _partitions(n, shards, rng):
+        b = np.asarray(part.block_of(u))
+        loc = np.asarray(part.local_id(u))
+        starts = part.starts
+        # each vertex falls inside its block's global range
+        assert np.all(starts[b] <= u) and np.all(u < starts[b + 1])
+        assert np.all((0 <= loc) & (loc < part.block))
+        assert np.array_equal(starts[b] + loc, u)
+        # padded_col is the inverse of source_cols restricted to live ids
+        pc = np.asarray(part.padded_col(u))
+        assert np.array_equal(pc, part.padded_cols())
+        assert np.array_equal(part.source_cols()[pc], u)
+        # distinct vertices never share a padded column
+        assert np.unique(pc).size == n
+
+
+@pytest.mark.parametrize("n,shards", SHAPES)
+def test_pad_columns_are_invisible(n, shards, rng):
+    """A global-order payload gathered into the padded layout and back
+    is the identity, and pad columns never receive live data."""
+    for part in _partitions(n, shards, rng):
+        payload = rng.integers(1, 1 << 30, size=n)
+        layout = np.zeros(part.n_pad, dtype=payload.dtype)
+        src = part.source_cols()
+        live = src < n
+        layout[live] = payload[src[live]]
+        assert np.array_equal(layout[part.padded_cols()], payload)
+        assert np.all(layout[~live] == 0)
+
+
+@pytest.mark.parametrize("n,shards", [(8, 4), (100, 7), (64, 8), (193, 4)])
+def test_partition_edges_by_dst_slabs_are_dst_local(n, shards, rng):
+    m = 6 * n
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n, size=m).astype(np.int32)
+    for part in _partitions(n, shards, rng):
+        src_slabs, dst_slabs, node_block = partition_edges_by_dst(
+            src, dst, n, shards, partition=part)
+        assert node_block == part.block
+        assert src_slabs.shape == dst_slabs.shape == (shards, src_slabs.shape[1])
+        starts = part.starts
+        rebuilt = []
+        for s in range(shards):
+            real = dst_slabs[s] < node_block
+            # padding edges carry the dropped sentinel local id
+            assert np.all(dst_slabs[s][~real] == node_block)
+            # real edges are dst-local to block s
+            g = dst_slabs[s][real] + starts[s]
+            assert np.all((starts[s] <= g) & (g < starts[s + 1]))
+            rebuilt.extend(zip(src_slabs[s][real].tolist(), g.tolist()))
+        # the slabs hold exactly the input edge multiset
+        assert sorted(rebuilt) == sorted(zip(src.tolist(), dst.tolist()))
+
+
+def test_partition_edges_default_layout_unchanged(rng):
+    """partition=None must keep producing the historical equal-block
+    slabs byte-for-byte (the GNN path depends on it)."""
+    n, shards = 50, 4
+    src = rng.integers(0, n, size=300).astype(np.int32)
+    dst = rng.integers(0, n, size=300).astype(np.int32)
+    a = partition_edges_by_dst(src, dst, n, shards)
+    b = partition_edges_by_dst(src, dst, n, shards,
+                               partition=vertex_partition(n, shards))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------------------- balancing ----
+
+@pytest.mark.parametrize("shards", [2, 4, 8])
+def test_balanced_beats_equal_on_rmat(shards):
+    """On a power-law (rmat) degree distribution the balanced layout's
+    per-shard edge imbalance is never worse than equal blocks, and
+    strictly better whenever equal blocks are meaningfully skewed."""
+    for seed in range(3):
+        g = rmat_graph(256, 2048, seed=seed)
+        eq = balance_report(g.edge_dst, g.n, shards)
+        bal = balance_report(
+            g.edge_dst, g.n, shards,
+            partition=balanced_vertex_partition(g.n, shards, dst=g.edge_dst))
+        assert bal["imbalance"] <= eq["imbalance"] + 1e-9
+        if eq["imbalance"] > 1.1:
+            assert bal["imbalance"] < eq["imbalance"]
+
+
+def test_balanced_uniform_degrees_reduce_to_near_equal():
+    """With uniform weights the quantile cuts land on (near-)equal
+    blocks; the layout stays valid and fully covering."""
+    part = balanced_vertex_partition(64, 4, weights=np.ones(64))
+    assert np.array_equal(part.sizes, [16, 16, 16, 16])
+    assert part.block == 16
+
+
+def test_balanced_point_mass_keeps_blocks_contiguous():
+    """A single huge-degree vertex cannot break contiguity or coverage —
+    some blocks may be tiny (even empty), never out of order."""
+    w = np.ones(32)
+    w[5] = 1e9
+    part = balanced_vertex_partition(32, 4, weights=w)
+    starts = part.starts
+    assert starts[0] == 0 and starts[-1] == 32
+    assert np.all(np.diff(starts) >= 0)
+    assert part.sizes.sum() == 32
+
+
+# --------------------------------------------------------------- resolve ----
+
+def test_resolve_partition_specs():
+    eq = resolve_partition(None, 40, 4)
+    assert eq.is_equal and eq == vertex_partition(40, 4)
+    assert resolve_partition("equal", 40, 4) == eq
+    g = rmat_graph(64, 512, seed=0)
+    bal = resolve_partition("balanced", g.n, 4, dst=g.edge_dst)
+    assert not bal.is_equal
+    assert resolve_partition(bal, g.n, 4) is bal
+    with pytest.raises(ValueError):
+        resolve_partition(bal, g.n + 1, 4)
+    with pytest.raises(ValueError):
+        resolve_partition(bal, g.n, 8)
+    with pytest.raises(ValueError):
+        resolve_partition("zigzag", 40, 4)
+
+
+def test_balanced_weights_shape_validated():
+    with pytest.raises(ValueError):
+        balanced_vertex_partition(10, 2, weights=np.ones(9))

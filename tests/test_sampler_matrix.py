@@ -6,6 +6,7 @@ engine backend, pow2 edge padding, and the legacy deprecation contract.
 Mesh-touching tests use however many devices the process has — 1 in a
 plain run, 4 under scripts/ci.sh's forced-4-device pass.
 """
+import dataclasses
 import hashlib
 import warnings
 
@@ -14,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
 from repro.core.engine import IMMConfig, InfluenceEngine
 from repro.core.imm import imm
 from repro.core import sampler as smp
@@ -234,6 +236,34 @@ def test_matrix_cell_mesh_equals_single_device(model, backend):
     a, b = local.select(3), sharded.select(3)
     np.testing.assert_array_equal(a.seeds, b.seeds)
     assert a.covered_frac == pytest.approx(b.covered_frac)
+
+
+@pytest.mark.parametrize("model,backend", sampler_matrix())
+def test_matrix_cell_2d_layouts_equal_single_device(model, backend):
+    """Every matrix cell is invariant to the 2D vertex-column layout and
+    the traversal schedule: edge-balanced blocks, overlap-off, and both
+    at once all select bitwise the same seeds and counters as the
+    single-device run (real theta x vertex tiles under scripts/ci.sh's
+    forced-4-device pass — a 2x2 mesh there, 1x1 in a plain run)."""
+    g = golden_graph()
+    cfg = IMMConfig(k=3, batch=64, max_theta=128, seed=1, model=model,
+                    backend=backend)
+    local = InfluenceEngine(g, cfg)
+    local.extend(128)
+    ref_counter = np.asarray(local.store.counter)
+    ref = local.select(3)
+    d = jax.device_count()
+    mesh = make_im_mesh((d // 2, 2) if d % 2 == 0 else (d, 1))
+    kw = mesh_engine_kwargs(mesh)
+    for variant in ({"partition": "balanced"}, {"overlap": False},
+                    {"partition": "balanced", "overlap": False}):
+        e = InfluenceEngine(g, dataclasses.replace(cfg, **variant), **kw)
+        e.extend(128)
+        np.testing.assert_array_equal(ref_counter,
+                                      np.asarray(e.store.counter))
+        sel = e.select(3)
+        np.testing.assert_array_equal(ref.seeds, sel.seeds)
+        assert ref.covered_frac == pytest.approx(sel.covered_frac)
 
 
 def test_family_mismatch_fails_fast():

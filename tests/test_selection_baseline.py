@@ -1,0 +1,127 @@
+"""Unit wall for `select_vertex_partitioned` — the Ripples-faithful
+vertex-partitioned binary-search baseline (`repro.core.selection`).
+
+It must agree seed-for-seed with both production representations
+(`select_dense` on bitmaps, `select_sparse` on index lists) on the same
+row data, including the shapes the padding contract makes awkward:
+uneven final blocks (rows whose live index count varies, up to the full
+list width) and all-padding tiles (rows that are nothing but the
+sentinel ``n``).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.selection import (
+    select_dense, select_sparse, select_vertex_partitioned,
+)
+
+
+def _random_sets(rng, theta, n, L, *, empty_rows=(), full_rows=()):
+    """(R_idx, R, valid): ascending sentinel-padded index lists, the
+    matching bitmap, and an all-true valid mask.  Rows in ``empty_rows``
+    get no vertices (all-padding tiles); rows in ``full_rows`` get
+    exactly L (no padding at all)."""
+    R_idx = np.full((theta, L), n, dtype=np.int32)
+    R = np.zeros((theta, n), dtype=np.uint8)
+    for t in range(theta):
+        if t in empty_rows:
+            continue
+        size = L if t in full_rows else int(rng.integers(1, L + 1))
+        vs = np.sort(rng.choice(n, size=size, replace=False))
+        R_idx[t, :size] = vs
+        R[t, vs] = 1
+    return jnp.asarray(R_idx), jnp.asarray(R), jnp.ones(theta, bool)
+
+
+def _assert_matches(R_idx, R, valid, n, k):
+    seeds, frac, gains = select_vertex_partitioned(R_idx, valid, n, k)
+    for ref in (select_dense(R, valid, k, "decrement"),
+                select_sparse(R_idx, valid, n, k, "decrement")):
+        np.testing.assert_array_equal(np.asarray(seeds),
+                                      np.asarray(ref[0]))
+        np.testing.assert_allclose(float(frac), float(ref[1]), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(gains, np.float32),
+                                   np.asarray(ref[2], np.float32))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_matches_dense_and_sparse_on_random_sets(seed):
+    rng = np.random.default_rng(seed)
+    n, theta, L, k = 24, 40, 6, 5
+    R_idx, R, valid = _random_sets(rng, theta, n, L)
+    _assert_matches(R_idx, R, valid, n, k)
+
+
+def test_uneven_final_blocks(rng):
+    """Rows spanning every fill level — empty, partial, and exactly-L
+    (no sentinel at all) — in one store."""
+    n, theta, L, k = 16, 12, 5, 4
+    R_idx, R, valid = _random_sets(
+        rng, theta, n, L, empty_rows=(3,), full_rows=(0, 7, 11))
+    assert int((R_idx[0] < n).sum()) == L          # truly unpadded row
+    assert int((R_idx[3] < n).sum()) == 0          # truly empty row
+    _assert_matches(R_idx, R, valid, n, k)
+
+
+def test_all_padding_tiles_contribute_nothing(rng):
+    """Rows that are pure sentinel padding must act exactly like rows an
+    invalid mask removed: same seeds, same gains, and a covered_frac
+    normalized over the larger valid count."""
+    n, theta, L, k = 20, 10, 4, 3
+    R_idx, R, valid = _random_sets(rng, theta, n, L)
+    pad = jnp.full((3, L), n, dtype=jnp.int32)
+    R_idx_pad = jnp.concatenate([R_idx, pad])
+    R_pad = jnp.concatenate([R, jnp.zeros((3, n), jnp.uint8)])
+    valid_pad = jnp.concatenate([valid, jnp.ones(3, bool)])
+    _assert_matches(R_idx_pad, R_pad, valid_pad, n, k)
+
+    base = select_vertex_partitioned(R_idx, valid, n, k)
+    padded = select_vertex_partitioned(R_idx_pad, valid_pad, n, k)
+    np.testing.assert_array_equal(np.asarray(base[0]),
+                                  np.asarray(padded[0]))
+    np.testing.assert_array_equal(np.asarray(base[2]),
+                                  np.asarray(padded[2]))
+    # only the normalization sees the extra (empty but valid) rows
+    assert float(padded[1]) == pytest.approx(
+        float(base[1]) * theta / (theta + 3))
+
+
+def test_valid_mask_is_arbitrary_not_a_prefix(rng):
+    """Invalidated rows drop out of counters and coverage entirely."""
+    n, theta, L, k = 18, 16, 5, 4
+    R_idx, R, _ = _random_sets(rng, theta, n, L)
+    valid = jnp.asarray(rng.random(theta) < 0.6)
+    _assert_matches(R_idx, R, valid, n, k)
+    # equivalence with physically deleting the invalid rows
+    keep = np.flatnonzero(np.asarray(valid))
+    sub = select_vertex_partitioned(
+        jnp.asarray(np.asarray(R_idx)[keep]),
+        jnp.ones(keep.size, bool), n, k)
+    full = select_vertex_partitioned(R_idx, valid, n, k)
+    np.testing.assert_array_equal(np.asarray(full[0]), np.asarray(sub[0]))
+    np.testing.assert_allclose(float(full[1]), float(sub[1]), atol=1e-6)
+
+
+def test_no_valid_rows_gives_zero_coverage():
+    n, theta, L, k = 8, 5, 3, 2
+    R_idx = jnp.full((theta, L), n, dtype=jnp.int32)
+    seeds, frac, gains = select_vertex_partitioned(
+        R_idx, jnp.zeros(theta, bool), n, k)
+    assert float(frac) == 0.0
+    assert np.all(np.asarray(gains) == 0)
+    assert np.asarray(seeds).shape == (k,)
+
+
+def test_k_exceeding_distinct_coverage_pads_with_zero_gain(rng):
+    """Once every set is covered the remaining rounds add zero gain and
+    the covered fraction saturates (== dense behavior)."""
+    n, theta, L = 10, 6, 3
+    R_idx, R, valid = _random_sets(rng, theta, n, L)
+    k = n  # far more rounds than useful seeds
+    seeds, frac, gains = select_vertex_partitioned(R_idx, valid, n, k)
+    d_seeds, d_frac, d_gains = select_dense(R, valid, k, "decrement")
+    np.testing.assert_allclose(float(frac), float(d_frac), atol=1e-6)
+    assert float(frac) == pytest.approx(1.0)
+    g = np.asarray(gains)
+    assert g.sum() == theta and np.all(g[np.argmin(g):] >= 0)

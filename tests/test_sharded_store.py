@@ -29,7 +29,7 @@ from repro.core.selection import (
 from repro.core.store import (
     BitmapStore, ShardedStore, make_store, store_from_state,
 )
-from repro.graphs import rmat_graph
+from repro.graphs import balanced_vertex_partition, rmat_graph
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -366,6 +366,127 @@ def test_cross_layout_snapshot_roundtrips_2d():
                 np.testing.assert_array_equal(
                     np.asarray(dst.store.counter),
                     np.asarray(ref.store.counter))
+
+
+# ------------------------------------------------ balanced vertex layout ----
+
+def skewed_partition(n, dv, seed=13):
+    """An edge-balanced partition from a genuinely skewed dst stream, so
+    the block boundaries land away from the equal-block cuts."""
+    rng = np.random.default_rng(seed)
+    dst = np.minimum(rng.geometric(4.0 / n, size=8 * n), n - 1)
+    return balanced_vertex_partition(n, dv, dst=dst)
+
+
+def test_2d_balanced_store_matches_bitmap():
+    """A balanced-layout ShardedStore answers every read — counter,
+    coverage stats, membership hits, reverse touch — identically to a
+    BitmapStore and to the equal-layout store, for an n whose balanced
+    blocks are uneven and padded."""
+    rng = np.random.default_rng(14)
+    n, mesh = 49, im_mesh_2d()
+    dv = mesh.shape["vertex"]
+    part = skewed_partition(n, dv)
+    bs = BitmapStore(n)
+    eq = ShardedStore(n, mesh=mesh, vertex_axis="vertex")
+    bal = ShardedStore(n, mesh=mesh, vertex_axis="vertex", partition=part)
+    assert bal.partition is part
+    assert bal.n_local == part.block and bal.n_pad == part.n_pad
+    for B in (24, 10, 7, 64):
+        batch = (rng.random((B, n)) < 0.2).astype(np.uint8)
+        for s in (bs, eq, bal):
+            s.add_batch(jnp.asarray(batch))
+    assert bs.count == bal.count
+    np.testing.assert_array_equal(np.asarray(bs.counter),
+                                  np.asarray(bal.counter))
+    assert bs.coverage_stats() == bal.coverage_stats()
+    S = np.asarray([[0, 1, 2], [5, 5, 5], [7, 30, 12], [48, 48, 48]],
+                   np.int32)
+    np.testing.assert_allclose(np.asarray(bs.hits(S)),
+                               np.asarray(bal.hits(S)), rtol=1e-6)
+    # reverse touch: same row mask as the equal layout, vertex by vertex
+    verts = jnp.asarray([0, 17, 48, 5], jnp.int32)
+    vmask = jnp.asarray([True, True, True, False])
+    np.testing.assert_array_equal(
+        np.asarray(eq.rows_touching_cols(verts, vmask)),
+        np.asarray(bal.rows_touching_cols(verts, vmask)))
+
+
+def test_2d_balanced_selection_matches_dense():
+    """Balanced-layout sharded selection — rebuild/decrement, dense
+    bitmaps AND the C4 sharded-sparse index view — equals single-device
+    dense selection bit for bit (the boundaries move, the argmax
+    tie-break cannot)."""
+    rng = np.random.default_rng(15)
+    n, mesh = 41, im_mesh_2d()
+    part = skewed_partition(n, mesh.shape["vertex"], seed=16)
+    bs = BitmapStore(n)
+    ss = ShardedStore(n, mesh=mesh, vertex_axis="vertex", partition=part)
+    for B in (24, 9, 31):
+        batch = (rng.random((B, n)) < 0.25).astype(np.uint8)
+        bs.add_batch(jnp.asarray(batch))
+        ss.add_batch(jnp.asarray(batch))
+    vd, vs = bs.view(), ss.view()
+    iv = ss.index_view(l_pad_for(ss.max_local_size()))
+    for method in ("rebuild", "decrement"):
+        s1, f1, g1 = select_dense(vd.R, vd.valid, 6, method)
+        s2, f2, g2 = select_dense_sharded(
+            mesh, vs.R, vs.valid, 6, theta_axes=("data",),
+            vertex_axis="vertex", method=method, n=n, partition=part)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+        assert float(f1) == pytest.approx(float(f2))
+        s3, f3, g3 = select_sparse_sharded(
+            mesh, iv.R, iv.valid, n, 6, theta_axes=("data",),
+            vertex_axis="vertex", method=method, partition=part)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s3))
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g3))
+
+
+def test_balanced_snapshot_roundtrips_elastically():
+    """`state()` returns rows in global vertex order whatever the column
+    layout, so snapshots restore across equal <-> balanced <-> bitmap
+    with identical counters (the re-partitioning contract)."""
+    rng = np.random.default_rng(17)
+    n, mesh = 36, im_mesh_2d()
+    part = skewed_partition(n, mesh.shape["vertex"], seed=18)
+    bal = ShardedStore(n, mesh=mesh, vertex_axis="vertex", partition=part)
+    bal.add_batch(jnp.asarray((rng.random((50, n)) < 0.3).astype(np.uint8)))
+    st = bal.state()
+    assert st["R"].shape == (50, n)          # global order, pads stripped
+    want = np.asarray(bal.counter)
+    # balanced -> single-device bitmap
+    flat = store_from_state(st)
+    assert isinstance(flat, BitmapStore)
+    np.testing.assert_array_equal(np.asarray(flat.counter), want)
+    # balanced -> equal-layout sharded
+    eq = store_from_state(st, mesh=mesh, vertex_axis="vertex")
+    assert eq.partition.is_equal
+    np.testing.assert_array_equal(np.asarray(eq.counter), want)
+    # equal -> balanced (fresh boundaries) and balanced -> balanced
+    for src in (eq.state(), st):
+        back = store_from_state(src, mesh=mesh, vertex_axis="vertex",
+                                partition=part)
+        assert back.partition is part
+        np.testing.assert_array_equal(np.asarray(back.counter), want)
+
+
+def test_2d_engine_adaptive_sparse_with_balanced_partition():
+    """The C4 indices representation composes with the balanced layout:
+    local index lists convert through the data-dependent block starts
+    and still match the single-device answer."""
+    g = rmat_graph(256, 512, seed=8, weighted_ic="wc")
+    cfg = IMMConfig(k=4, batch=64, max_theta=256, seed=9,
+                    sparse_rep_min_n=1, backend="sparse", switch_ratio=2,
+                    partition="balanced")
+    dense = InfluenceEngine(g, cfg)     # partition is inert off-mesh
+    sharded = InfluenceEngine(g, cfg, **mesh_kw(im_mesh_2d()))
+    assert not sharded.store.partition.is_equal
+    dense.extend(256)
+    sharded.extend(256)
+    a, b = dense.select(4), sharded.select(4)
+    np.testing.assert_array_equal(a.seeds, b.seeds)
+    assert b.representation == "indices"   # the C4 sparse path engaged
 
 
 def test_make_im_mesh_and_engine_kwargs():
