@@ -26,6 +26,7 @@ validate the schema, so a bench cannot silently drop a core key.
 from __future__ import annotations
 
 import json
+import statistics
 import subprocess
 
 SCHEMA_KEYS = ("name", "mesh", "n", "theta", "wall_s")
@@ -41,8 +42,41 @@ def git_sha() -> str:
             capture_output=True, text=True, timeout=10)
         sha = out.stdout.strip()
         return sha if out.returncode == 0 and sha else "unknown"
-    except (OSError, subprocess.TimeoutExpired):
+    except Exception:
+        # no git binary, no checkout, an unreadable .git, a sandboxed
+        # interpreter without subprocess — a bench must still emit,
+        # just unstamped
         return "unknown"
+
+
+def span_median_s(name: str, tier: str = None, last: int = None) -> float:
+    """Median duration (seconds) of the completed ``repro.obs`` spans
+    named ``name`` — the tracer-backed replacement for hand-rolled
+    timer lists, so a BENCH row and a ``--trace-out`` timeline report
+    the same measurement.  ``last`` keeps only the most recent N spans
+    (repeated measurements in one process would otherwise mix);
+    returns 0.0 when nothing was recorded."""
+    from repro import obs
+    durs = obs.get_tracer().durations_s(name, tier)
+    if last is not None:
+        durs = durs[-int(last):]
+    if not durs:
+        return 0.0
+    return float(statistics.median(durs))
+
+
+def snapshot_scalar(snapshot: dict, name: str, default: float = 0.0):
+    """Pull one scalar out of a ``repro.obs`` registry snapshot by
+    series key: counters return their count, gauges their last value,
+    histograms their p50 — so BENCH emitters can lift columns straight
+    from the runtime telemetry instead of keeping parallel counters."""
+    if name in snapshot.get("counters", {}):
+        return snapshot["counters"][name]
+    if name in snapshot.get("gauges", {}):
+        return snapshot["gauges"][name]["value"]
+    if name in snapshot.get("histograms", {}):
+        return snapshot["histograms"][name]["p50"]
+    return default
 
 
 def device_kind() -> str:

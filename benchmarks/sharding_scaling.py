@@ -47,8 +47,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
-from benchmarks._emit import bench_row, mesh_tag, write_bench
-from benchmarks._util import block, print_table, timeit
+from benchmarks._emit import bench_row, mesh_tag, span_median_s, write_bench
+from benchmarks._util import block, print_table
+from repro import obs
 from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
 from repro.core.engine import InfluenceEngine, IMMConfig
 from repro.graphs import balance_report, resolve_partition, rmat_graph
@@ -101,6 +102,22 @@ def _imbalance(g, mesh, kw, partition) -> float:
     return float(rep["imbalance"])
 
 
+_STEP_ITERS = 3
+
+
+def _timed_span(name, fn, *args):
+    """Median seconds of ``fn(*args)`` over ``_STEP_ITERS`` blocked
+    iterations, each recorded as an obs span (tier ``bench``), read back
+    from the tracer — so the number in the BENCH row is the same
+    measurement a ``--trace-out`` timeline would show.  One untimed
+    warmup absorbs compilation."""
+    block(fn(*args))
+    for _ in range(_STEP_ITERS):
+        with obs.span(name, tier="bench"):
+            block(fn(*args))
+    return span_median_s(name, tier="bench", last=_STEP_ITERS)
+
+
 def _step_breakdown(g, mesh, kw, batch):
     """Median per-step frontier cost split ``(collective_s, compute_s)``.
 
@@ -111,7 +128,9 @@ def _step_breakdown(g, mesh, kw, batch):
     times the work it hides behind — the full-width local logq matmul
     producing the next tiled frontier.  Layouts with no vertex axis
     (single device, 1D theta meshes, ``Dv == 1``) have no frontier
-    collective: ``collective_s == 0.0``.
+    collective: ``collective_s == 0.0``.  Both are measured through obs
+    spans (phases ``collective`` / ``compute``), so the trace timeline
+    and the BENCH row agree by construction.
     """
     n = g.n
     rng = np.random.default_rng(7)
@@ -120,7 +139,7 @@ def _step_breakdown(g, mesh, kw, batch):
     matmul = jax.jit(lambda f, w: f @ w)
     vx = kw.get("vertex_axis")
     if mesh is None or vx is None or int(mesh.shape[vx]) == 1:
-        return 0.0, timeit(matmul, frontier, logq)
+        return 0.0, _timed_span("compute", matmul, frontier, logq)
     axes = tuple(kw["theta_axes"])
     tiled = NamedSharding(mesh, PartitionSpec(axes, vx))
     gathered = NamedSharding(mesh, PartitionSpec(axes, None))
@@ -130,10 +149,12 @@ def _step_breakdown(g, mesh, kw, batch):
     # logq column-sharded over the vertex axis: each device's matmul is
     # (B/Dt, n) @ (n, block) -> its own tile of the next frontier
     w_cols = jax.device_put(logq, NamedSharding(mesh, PartitionSpec(None, vx)))
-    return timeit(gather, f_tiled), timeit(matmul, f_gathered, w_cols)
+    return (_timed_span("collective", gather, f_tiled),
+            _timed_span("compute", matmul, f_gathered, w_cols))
 
 
 def run(n=1024, m=8192, theta=4096, k=10, batch=256, seed=0, log=print):
+    obs.enable()          # the step breakdown is measured through spans
     g = rmat_graph(n, m, seed=seed)
     base = IMMConfig(k=k, batch=batch, max_theta=max(theta, 1 << 20),
                      seed=seed)

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Validate IMTrace export artifacts (docs/observability.md).
+
+Checks a metrics-registry JSON snapshot (``--metrics-out``) against the
+schema `repro.obs.MetricsRegistry.snapshot` promises — ``counters`` /
+``gauges`` / ``histograms`` maps with the right per-series shapes, exact
+cumulative bucket counts — and a ``--trace-out`` file for being valid
+Chrome trace-event JSON (the format Perfetto / chrome://tracing load):
+a ``traceEvents`` list of ``ph: "M"`` metadata and ``ph: "X"`` complete
+events with microsecond ``ts``/``dur``, plus at least one span from
+every tier named in ``--tiers``.
+
+    python scripts/check_obs.py --metrics M.json --trace T.json \
+        --tiers engine,store,serve
+
+Either artifact may be omitted; exits non-zero with a pointed message on
+the first violation.  CI runs this against the artifacts a tiny launch
+campaign exports (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+NUM = (int, float)
+
+
+def fail(msg: str):
+    sys.exit(f"check_obs: {msg}")
+
+
+def check_metrics(path: str) -> str:
+    with open(path) as f:
+        snap = json.load(f)
+    if not isinstance(snap, dict):
+        fail(f"{path}: snapshot must be a JSON object, got {type(snap)}")
+    for section in ("counters", "gauges", "histograms"):
+        if not isinstance(snap.get(section), dict):
+            fail(f"{path}: missing/invalid {section!r} map")
+    for key, v in snap["counters"].items():
+        if not isinstance(v, int) or v < 0:
+            fail(f"{path}: counter {key!r} must be a non-negative int: {v}")
+    for key, v in snap["gauges"].items():
+        if not isinstance(v, dict) or not all(
+                isinstance(v.get(f), NUM) for f in ("value", "max")):
+            fail(f"{path}: gauge {key!r} must carry numeric value/max: {v}")
+    for key, h in snap["histograms"].items():
+        for f in ("count", "sum", "min", "max", "p50", "p99"):
+            if not isinstance(h.get(f), NUM):
+                fail(f"{path}: histogram {key!r} missing numeric {f!r}")
+        buckets = h.get("buckets")
+        if not isinstance(buckets, list) or not buckets:
+            fail(f"{path}: histogram {key!r} has no buckets")
+        if buckets[-1][0] != "+Inf":
+            fail(f"{path}: histogram {key!r} must end in a +Inf bucket")
+        if sum(c for _, c in buckets) != h["count"]:
+            fail(f"{path}: histogram {key!r} bucket counts do not sum "
+                 f"to count={h['count']}")
+    n = (len(snap["counters"]) + len(snap["gauges"])
+         + len(snap["histograms"]))
+    return (f"metrics OK: {len(snap['counters'])} counters, "
+            f"{len(snap['gauges'])} gauges, "
+            f"{len(snap['histograms'])} histograms ({n} series)")
+
+
+def check_trace(path: str, tiers: list[str]) -> str:
+    with open(path) as f:
+        trace = json.load(f)
+    if not isinstance(trace, dict) or not isinstance(
+            trace.get("traceEvents"), list):
+        fail(f"{path}: not Chrome trace-event JSON "
+             f"(object with a traceEvents list)")
+    spans = 0
+    seen_tiers = set()
+    for i, ev in enumerate(trace["traceEvents"]):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        if ph != "X":
+            fail(f"{path}: event {i} has ph={ph!r}, expected 'M' or 'X'")
+        for f in ("name", "cat", "ts", "dur", "pid", "tid"):
+            if f not in ev:
+                fail(f"{path}: span event {i} ({ev.get('name')!r}) "
+                     f"missing {f!r}")
+        if not isinstance(ev["ts"], NUM) or not isinstance(ev["dur"], NUM):
+            fail(f"{path}: span event {i} has non-numeric ts/dur")
+        spans += 1
+        seen_tiers.add(ev["cat"])
+    if spans == 0:
+        fail(f"{path}: trace has no spans")
+    missing = [t for t in tiers if t not in seen_tiers]
+    if missing:
+        fail(f"{path}: no spans from tier(s) {missing} "
+             f"(saw {sorted(seen_tiers)})")
+    return (f"trace OK: {spans} spans across tiers {sorted(seen_tiers)}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--metrics", default=None,
+                    help="metrics-registry JSON snapshot to validate")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--tiers", default="engine,store,serve",
+                    help="comma-separated tiers the trace must contain "
+                         "at least one span from")
+    args = ap.parse_args(argv)
+    if not args.metrics and not args.trace:
+        fail("nothing to check: pass --metrics and/or --trace")
+    tiers = [t for t in args.tiers.split(",") if t]
+    if args.metrics:
+        print(check_metrics(args.metrics))
+    if args.trace:
+        print(check_trace(args.trace, tiers))
+
+
+if __name__ == "__main__":
+    main()

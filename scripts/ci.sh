@@ -102,5 +102,40 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m benchmarks.serve_tier --tiny --mesh 2x2 \
         --out "${TMPDIR:-/tmp}/BENCH_6.json"
 
+# IMTrace (repro.obs) export path: a small IMM campaign with
+# --metrics-out/--trace-out, then the artifact gate — the metrics
+# snapshot must match the registry schema and the trace must parse as
+# Chrome trace-event JSON with spans from the engine and store tiers
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.im_run --graph com-Amazon --scale 0.002 \
+        --k 4 --max-theta 256 \
+        --metrics-out "${TMPDIR:-/tmp}/obs_metrics.json" \
+        --trace-out "${TMPDIR:-/tmp}/obs_trace.json"
+python scripts/check_obs.py \
+    --metrics "${TMPDIR:-/tmp}/obs_metrics.json" \
+    --trace "${TMPDIR:-/tmp}/obs_trace.json" --tiers engine,store
+
+# ...and the serving tier under the same flags: the trace must now also
+# carry stream (deltas + refresh) and serve (admission/cache/batch) spans
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --workload tier \
+        --tenants 3 --tier-n 128 --max-theta 256 --duration 0.25 \
+        --qps 64 --refresh-budget 128 --replicas 1 \
+        --metrics-out "${TMPDIR:-/tmp}/obs_metrics.json" \
+        --trace-out "${TMPDIR:-/tmp}/obs_trace.json"
+python scripts/check_obs.py \
+    --metrics "${TMPDIR:-/tmp}/obs_metrics.json" \
+    --trace "${TMPDIR:-/tmp}/obs_trace.json" \
+    --tiers engine,store,stream,serve
+
+# the observability acceptance cell on the forced-8-device 2x4 mesh:
+# obs fully enabled is seed-for-seed bitwise identical to obs disabled,
+# nested spans land from every tier, and a meshed IMServe campaign
+# reports per-tenant latency quantiles, cache hit/miss, queue depth,
+# and SLO violations (tests/force_obs_check.py asserts all of it)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python tests/force_obs_check.py --mesh 2x4
+
 # docs health: files referenced from README/docs must exist
 python scripts/check_docs.py

@@ -42,6 +42,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.graphs.csr import Graph
 from repro.core import martingale as mg
 from repro.core.adaptive import choose_representation, l_pad_for
@@ -235,14 +236,21 @@ class InfluenceEngine:
         """
         cap = getattr(self.store, "row_cap", None)
         target = theta if cap is None else min(theta, cap)
-        while self.store.count < target:
-            self.key, sub = jax.random.split(self.key)
-            if self._emit_l:
-                rows_idx, counter = self._sample_index_batch(sub)
-                self.store.add_index_batch(rows_idx, counter)
-            else:
-                visited, counter, _ = self._sample(sub)
-                self.store.add_batch(visited, counter)
+        with obs.span("extend", tier="engine", target=target):
+            while self.store.count < target:
+                self.key, sub = jax.random.split(self.key)
+                if self._emit_l:
+                    with obs.span("sample", tier="engine",
+                                  sampler=self.sampler_name):
+                        rows_idx, counter = self._sample_index_batch(sub)
+                    self.store.add_index_batch(rows_idx, counter)
+                else:
+                    with obs.span("sample", tier="engine",
+                                  sampler=self.sampler_name):
+                        visited, counter, _ = self._sample(sub)
+                    self.store.add_batch(visited, counter)
+                obs.counter("engine.batches_sampled").add(1)
+        obs.gauge("engine.theta").set(self.store.count)
         return self.store.count
 
     def _sample_index_batch(self, sub):
@@ -341,7 +349,9 @@ class InfluenceEngine:
         cache_key = (self.store.version, self.store.count, k, method)
         hit = self._select_cache.get(cache_key)
         if hit is not None:
+            obs.counter("engine.select_cache_hits").add(1)
             return hit
+        obs.counter("engine.select_cache_misses").add(1)
 
         if self.mesh is not None:
             # a ShardedStore view hands its native arena tiles straight to
@@ -368,10 +378,12 @@ class InfluenceEngine:
                 view = self.store.view()
             layout = "dense" if rep == "bitmap" else "sparse"
         strategy = get_selection(method, layout)
-        seeds, frac, gains = strategy(
-            view, k, mesh=self.mesh, theta_axes=self.theta_axes,
-            vertex_axis=self.vertex_axis,
-            partition=getattr(self.store, "partition", None))
+        with obs.span("select", tier="engine", k=k, method=method,
+                      layout=layout):
+            seeds, frac, gains = strategy(
+                view, k, mesh=self.mesh, theta_axes=self.theta_axes,
+                vertex_axis=self.vertex_axis,
+                partition=getattr(self.store, "partition", None))
         sel = Selection(
             seeds=np.asarray(seeds), covered_frac=float(frac),
             influence=float(frac) * self.graph.n, gains=np.asarray(gains),
@@ -405,7 +417,8 @@ class InfluenceEngine:
             s = sets[min(i, q - 1)]
             S[i, :s.size] = s
             S[i, s.size:] = s[0]
-        fracs = np.asarray(self.store.hits(S))[:q]
+        with obs.span("influence", tier="engine", queries=q):
+            fracs = np.asarray(self.store.hits(S))[:q]
         return fracs.astype(np.float64) * self.graph.n
 
     def influence(self, seed_set: Sequence[int]) -> float:
@@ -501,22 +514,27 @@ class InfluenceEngine:
         lb = 1.0
         rounds = 0
 
-        for i in range(1, bounds.max_rounds + 1):
-            rounds = i
-            theta_i = min(mg.round_theta(bounds, i), cfg.max_theta)
-            self.extend(theta_i)
-            sel = self.select(k)
-            if n * sel.covered_frac >= mg.round_target(bounds, i):
-                lb = mg.lower_bound_from_coverage(bounds, sel.covered_frac)
-                break
-            if self.store.count >= cfg.max_theta:
-                lb = max(mg.lower_bound_from_coverage(bounds, sel.covered_frac),
-                         1.0)
-                break
+        with obs.span("run", tier="engine", n=n, k=k):
+            for i in range(1, bounds.max_rounds + 1):
+                rounds = i
+                theta_i = min(mg.round_theta(bounds, i), cfg.max_theta)
+                with obs.span("round", tier="engine", round=i,
+                              theta=theta_i):
+                    self.extend(theta_i)
+                    sel = self.select(k)
+                obs.counter("engine.rounds").add(1)
+                if n * sel.covered_frac >= mg.round_target(bounds, i):
+                    lb = mg.lower_bound_from_coverage(bounds, sel.covered_frac)
+                    break
+                if self.store.count >= cfg.max_theta:
+                    lb = max(
+                        mg.lower_bound_from_coverage(bounds, sel.covered_frac),
+                        1.0)
+                    break
 
-        theta = min(mg.theta_from_lb(bounds, lb), cfg.max_theta)
-        self.extend(theta)
-        sel = self.select(k)
+            theta = min(mg.theta_from_lb(bounds, lb), cfg.max_theta)
+            self.extend(theta)
+            sel = self.select(k)
         return IMMResult(
             seeds=sel.seeds,
             influence=sel.influence,

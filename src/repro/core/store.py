@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.core.adaptive import bitmap_to_indices
 from repro.graphs.partition import VertexPartition, vertex_partition
@@ -300,6 +301,14 @@ class _ArenaBase:
         self.counter = self.counter + counter
         self.count += int(B)
         self.version += 1
+        if obs.enabled():
+            # host arithmetic only — shapes the store already tracks,
+            # never a device read
+            obs.counter("store.rows_written").add(int(B))
+            obs.gauge("store.occupancy").set(self.count / self.capacity)
+            arena = self.capacity * self._row_bytes()
+            obs.gauge("store.arena_bytes").set(arena)
+            obs.gauge("store.bytes_per_device").set(arena)
 
     def _valid(self):
         return (jnp.arange(self.capacity) < self.count) & self.live
@@ -351,6 +360,7 @@ class _ArenaBase:
         self.live = self.live & ~dead
         self.dead += k
         self.version += 1
+        obs.counter("store.rows_killed").add(k)
         return k
 
     def replace_rows(self, idx, rows) -> None:
@@ -369,22 +379,25 @@ class _ArenaBase:
             raise ValueError(
                 "replace_rows targets must be filled, dead slots "
                 "(kill_rows them first)")
-        rows = jnp.asarray(rows).astype(jnp.uint8)
-        pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
-        if pad:
-            idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
-            rows = jnp.concatenate(
-                [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
-        mask = jnp.asarray(idx >= 0)
-        rows = rows * mask[:, None].astype(jnp.uint8)   # zero pad rows
-        row_sizes = rows.sum(axis=1, dtype=jnp.int32)
-        stored = self._rows_for_storage(rows)
-        self.R, self.sizes, self.live, self.counter = _replace_rows_kernel(
-            self.R, self.sizes, self.live, self.counter,
-            jnp.asarray(idx, jnp.int32), stored, row_sizes,
-            rows.sum(axis=0, dtype=jnp.int32))
-        self.dead -= k
-        self.version += 1
+        with obs.span("store.write", tier="store", kind="replace"):
+            rows = jnp.asarray(rows).astype(jnp.uint8)
+            pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
+            if pad:
+                idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
+                rows = jnp.concatenate(
+                    [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
+            mask = jnp.asarray(idx >= 0)
+            rows = rows * mask[:, None].astype(jnp.uint8)  # zero pad rows
+            row_sizes = rows.sum(axis=1, dtype=jnp.int32)
+            stored = self._rows_for_storage(rows)
+            self.R, self.sizes, self.live, self.counter = \
+                _replace_rows_kernel(
+                    self.R, self.sizes, self.live, self.counter,
+                    jnp.asarray(idx, jnp.int32), stored, row_sizes,
+                    rows.sum(axis=0, dtype=jnp.int32))
+            self.dead -= k
+            self.version += 1
+        obs.counter("store.rows_replaced").add(k)
 
     def compact(self) -> np.ndarray | None:
         """Rewrite live rows to the arena head in place, reclaiming dead
@@ -401,6 +414,7 @@ class _ArenaBase:
         self.dead = 0
         self.live = jnp.ones((self.capacity,), jnp.bool_)
         self.version += 1
+        obs.counter("store.compactions").add(1)
         if self.track_remaps:
             self._remaps.append(remap)
         return remap
@@ -421,7 +435,8 @@ class _ArenaBase:
         self.compact()
         over = self.count + incoming - cap
         if over > 0:
-            self.kill_rows(jnp.arange(self.capacity) < over)
+            evicted = self.kill_rows(jnp.arange(self.capacity) < over)
+            obs.counter("store.rows_evicted").add(evicted)
             self.compact()
 
     def _base_state(self) -> dict:
@@ -477,15 +492,16 @@ class BitmapStore(_ArenaBase):
         `StorePressurePolicy` the write may first compact and evict (see
         ``_ensure_room``).
         """
-        visited = jnp.asarray(visited).astype(jnp.uint8)
-        B = int(visited.shape[0])
-        self._ensure_room(B)
-        self._grow_rows(self.count + B)
-        if counter is None:
-            counter = visited.sum(axis=0, dtype=jnp.int32)
-        slots = np.arange(self.count, self.count + B, dtype=np.int64)
-        self.R = _write_rows(self.R, visited, jnp.int32(self.count))
-        self._finish_add(visited.sum(axis=1, dtype=jnp.int32), counter)
+        with obs.span("store.write", tier="store", kind="bitmap"):
+            visited = jnp.asarray(visited).astype(jnp.uint8)
+            B = int(visited.shape[0])
+            self._ensure_room(B)
+            self._grow_rows(self.count + B)
+            if counter is None:
+                counter = visited.sum(axis=0, dtype=jnp.int32)
+            slots = np.arange(self.count, self.count + B, dtype=np.int64)
+            self.R = _write_rows(self.R, visited, jnp.int32(self.count))
+            self._finish_add(visited.sum(axis=1, dtype=jnp.int32), counter)
         return slots
 
     def view(self) -> StoreView:
@@ -504,7 +520,9 @@ class BitmapStore(_ArenaBase):
 
     def hits(self, S) -> jnp.ndarray:
         """Covered fraction per query: ``S (Q, L) int32`` -> ``(Q,) f32``."""
-        return _bitmap_hits(self.R, self._valid(), jnp.asarray(S, jnp.int32))
+        with obs.span("count", tier="store", kind="bitmap"):
+            return _bitmap_hits(self.R, self._valid(),
+                                jnp.asarray(S, jnp.int32))
 
     def state(self) -> dict:
         """Host snapshot pytree: full ``(capacity, n)`` arena plus
@@ -588,18 +606,19 @@ class IndexStore(_ArenaBase):
                 .astype(jnp.int32))
 
     def add_batch(self, visited, counter=None) -> np.ndarray:
-        visited = jnp.asarray(visited).astype(jnp.uint8)
-        B = int(visited.shape[0])
-        batch_sizes = visited.sum(axis=1, dtype=jnp.int32)
-        self._widen(int(batch_sizes.max()))
-        self._ensure_room(B)
-        self._grow_rows(self.count + B)
-        if counter is None:
-            counter = visited.sum(axis=0, dtype=jnp.int32)
-        rows = bitmap_to_indices(visited, self.l_pad)
-        slots = np.arange(self.count, self.count + B, dtype=np.int64)
-        self.R = _write_rows(self.R, rows, jnp.int32(self.count))
-        self._finish_add(batch_sizes, counter)
+        with obs.span("store.write", tier="store", kind="indices"):
+            visited = jnp.asarray(visited).astype(jnp.uint8)
+            B = int(visited.shape[0])
+            batch_sizes = visited.sum(axis=1, dtype=jnp.int32)
+            self._widen(int(batch_sizes.max()))
+            self._ensure_room(B)
+            self._grow_rows(self.count + B)
+            if counter is None:
+                counter = visited.sum(axis=0, dtype=jnp.int32)
+            rows = bitmap_to_indices(visited, self.l_pad)
+            slots = np.arange(self.count, self.count + B, dtype=np.int64)
+            self.R = _write_rows(self.R, rows, jnp.int32(self.count))
+            self._finish_add(batch_sizes, counter)
         return slots
 
     def add_index_batch(self, rows, counter=None) -> np.ndarray:
@@ -612,31 +631,34 @@ class IndexStore(_ArenaBase):
         the arena widens to ``L`` if needed and narrower rows backfill
         with the sentinel.  Returns the landing slots, like `add_batch`.
         """
-        rows = jnp.asarray(rows, jnp.int32)
-        B, L = int(rows.shape[0]), int(rows.shape[1])
-        batch_sizes = (rows < self.n).sum(axis=1, dtype=jnp.int32)
-        self._widen(L)
-        if L < self.l_pad:
-            rows = jnp.concatenate(
-                [rows, jnp.full((B, self.l_pad - L), self.n, jnp.int32)],
-                axis=1)
-        # normalize any emitter sentinel (>= n) to the store's (== n)
-        rows = jnp.where(rows < self.n, rows, self.n)
-        self._ensure_room(B)
-        self._grow_rows(self.count + B)
-        if counter is None:
-            counter = (jnp.zeros((self.n,), jnp.int32)
-                       .at[rows.reshape(-1)].add(1, mode="drop"))
-        slots = np.arange(self.count, self.count + B, dtype=np.int64)
-        self.R = _write_rows(self.R, rows, jnp.int32(self.count))
-        self._finish_add(batch_sizes, counter)
+        with obs.span("store.write", tier="store", kind="indices"):
+            rows = jnp.asarray(rows, jnp.int32)
+            B, L = int(rows.shape[0]), int(rows.shape[1])
+            batch_sizes = (rows < self.n).sum(axis=1, dtype=jnp.int32)
+            self._widen(L)
+            if L < self.l_pad:
+                rows = jnp.concatenate(
+                    [rows, jnp.full((B, self.l_pad - L), self.n, jnp.int32)],
+                    axis=1)
+            # normalize any emitter sentinel (>= n) to the store's (== n)
+            rows = jnp.where(rows < self.n, rows, self.n)
+            self._ensure_room(B)
+            self._grow_rows(self.count + B)
+            if counter is None:
+                counter = (jnp.zeros((self.n,), jnp.int32)
+                           .at[rows.reshape(-1)].add(1, mode="drop"))
+            slots = np.arange(self.count, self.count + B, dtype=np.int64)
+            self.R = _write_rows(self.R, rows, jnp.int32(self.count))
+            self._finish_add(batch_sizes, counter)
         return slots
 
     def view(self) -> StoreView:
         return StoreView("indices", self.R, self._valid(), self.n, self.count)
 
     def hits(self, S) -> jnp.ndarray:
-        return _index_hits(self.R, self._valid(), jnp.asarray(S, jnp.int32))
+        with obs.span("count", tier="store", kind="indices"):
+            return _index_hits(self.R, self._valid(),
+                               jnp.asarray(S, jnp.int32))
 
     def state(self) -> dict:
         st = self._base_state()
@@ -1207,7 +1229,8 @@ class ShardedStore:
                 if over[d] > 0:
                     lo = d * self.cap_local
                     mask[lo:lo + int(over[d])] = True
-            self.kill_rows(mask)
+            evicted = self.kill_rows(mask)
+            obs.counter("store.rows_evicted").add(evicted)
             self.compact()
 
     def add_batch(self, visited, counter=None) -> np.ndarray:
@@ -1225,33 +1248,42 @@ class ShardedStore:
         compact and evict per shard.
         """
         del counter  # recomputed shard-locally inside the write kernel
-        visited = jnp.asarray(visited).astype(jnp.uint8)
-        B = int(visited.shape[0])
-        if B == 0:
-            return np.zeros((0,), np.int64)
-        visited = self._layout_cols(visited)
-        b = -(-B // self.D)
-        if b * self.D != B:
-            visited = jnp.concatenate(
-                [visited,
-                 jnp.zeros((b * self.D - B, self.n_pad), jnp.uint8)])
-        # no-op when the sampler already placed the batch with
-        # ``batch_sharding``; otherwise reshards the (small) batch only
-        visited = jax.device_put(visited, self._sh_rows)
-        self._ensure_room(b)
-        self._grow_rows(b)
-        incs_np = np.clip(B - np.arange(self.D) * b, 0, b).astype(np.int32)
-        incs = jax.device_put(jnp.asarray(incs_np), self._sh_vec)
-        slots = np.empty((B,), np.int64)
-        for d in range(self.D):
-            i0 = d * b
-            cnt = int(incs_np[d])
-            slots[i0:i0 + cnt] = (d * self.cap_local
-                                  + self._counts_host[d] + np.arange(cnt))
-        self.R, self.sizes, self._counter, self._counts = self._write_fn(
-            self.R, self.sizes, self._counter, self._counts, visited, incs)
-        self._counts_host += incs_np
-        self.version += 1
+        with obs.span("store.write", tier="store", kind="sharded"):
+            visited = jnp.asarray(visited).astype(jnp.uint8)
+            B = int(visited.shape[0])
+            if B == 0:
+                return np.zeros((0,), np.int64)
+            visited = self._layout_cols(visited)
+            b = -(-B // self.D)
+            if b * self.D != B:
+                visited = jnp.concatenate(
+                    [visited,
+                     jnp.zeros((b * self.D - B, self.n_pad), jnp.uint8)])
+            # no-op when the sampler already placed the batch with
+            # ``batch_sharding``; otherwise reshards the (small) batch only
+            visited = jax.device_put(visited, self._sh_rows)
+            self._ensure_room(b)
+            self._grow_rows(b)
+            incs_np = np.clip(B - np.arange(self.D) * b, 0, b).astype(np.int32)
+            incs = jax.device_put(jnp.asarray(incs_np), self._sh_vec)
+            slots = np.empty((B,), np.int64)
+            for d in range(self.D):
+                i0 = d * b
+                cnt = int(incs_np[d])
+                slots[i0:i0 + cnt] = (d * self.cap_local
+                                      + self._counts_host[d] + np.arange(cnt))
+            self.R, self.sizes, self._counter, self._counts = self._write_fn(
+                self.R, self.sizes, self._counter, self._counts, visited, incs)
+            self._counts_host += incs_np
+            self.version += 1
+        if obs.enabled():
+            # host arithmetic on shard shapes only — never a device read
+            obs.counter("store.rows_written").add(B)
+            obs.gauge("store.occupancy").set(self.count / self.capacity)
+            obs.gauge("store.arena_bytes").set(
+                self.D * self.cap_local * self.n_pad)
+            obs.gauge("store.bytes_per_device").set(
+                self.cap_local * (self.n_pad // max(self.Dv, 1)))
         return slots
 
     # ----------------------------------------------------- row lifecycle ----
@@ -1272,6 +1304,7 @@ class ShardedStore:
             self.R, self._counter, self.sizes, self.live, dead_dev)
         self._live_host &= ~dead_host
         self.version += 1
+        obs.counter("store.rows_killed").add(k)
         return k
 
     def replace_rows(self, idx, rows) -> None:
@@ -1294,23 +1327,26 @@ class ShardedStore:
             raise ValueError(
                 "replace_rows targets must be filled, dead slots "
                 "(kill_rows them first)")
-        rows = self._layout_cols(jnp.asarray(rows).astype(jnp.uint8))
-        pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
-        if pad:
-            idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
-            rows = jnp.concatenate(
-                [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
-            real = idx >= 0
-        rows = jax.device_put(rows, self._sh_vrows)
-        idx_dev = jax.device_put(jnp.asarray(idx, jnp.int32), self._sh_rep)
-        offs = jax.device_put(
-            jnp.arange(self.D, dtype=jnp.int32) * self.cap_local,
-            self._sh_vec)
-        self.R, self._counter, self.sizes, self.live = self._replace_fn(
-            self.R, self._counter, self.sizes, self.live, offs, idx_dev,
-            rows)
-        self._live_host[idx[real]] = True
-        self.version += 1
+        with obs.span("store.write", tier="store", kind="sharded-replace"):
+            rows = self._layout_cols(jnp.asarray(rows).astype(jnp.uint8))
+            pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
+            if pad:
+                idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
+                rows = jnp.concatenate(
+                    [rows, jnp.zeros((pad, rows.shape[1]), jnp.uint8)])
+                real = idx >= 0
+            rows = jax.device_put(rows, self._sh_vrows)
+            idx_dev = jax.device_put(jnp.asarray(idx, jnp.int32),
+                                     self._sh_rep)
+            offs = jax.device_put(
+                jnp.arange(self.D, dtype=jnp.int32) * self.cap_local,
+                self._sh_vec)
+            self.R, self._counter, self.sizes, self.live = self._replace_fn(
+                self.R, self._counter, self.sizes, self.live, offs, idx_dev,
+                rows)
+            self._live_host[idx[real]] = True
+            self.version += 1
+        obs.counter("store.rows_replaced").add(k)
 
     def compact(self) -> np.ndarray | None:
         """Rewrite each shard's live rows to its arena-block head in
@@ -1333,6 +1369,7 @@ class ShardedStore:
             self._counts_host[d] = nkeep
         self._live_host = np.ones((self.D * self.cap_local,), bool)
         self.version += 1
+        obs.counter("store.compactions").add(1)
         if self.track_remaps:
             self._remaps.append(remap)
         return remap
@@ -1360,8 +1397,9 @@ class ShardedStore:
         column block against its own rows; only per-(row, query) hit bits
         cross the vertex axis and per-query counts the theta axis (never
         arena rows or columns)."""
-        return self._hits_fn(self.R, self.valid_mask(),
-                             jnp.asarray(S, jnp.int32), self._starts_dev)
+        with obs.span("count", tier="store", kind="sharded"):
+            return self._hits_fn(self.R, self.valid_mask(),
+                                 jnp.asarray(S, jnp.int32), self._starts_dev)
 
     def coverage_stats(self) -> tuple[float, int]:
         """(avg fractional set coverage, max set size) over live stored

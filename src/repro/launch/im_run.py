@@ -24,6 +24,7 @@ import argparse
 import json
 import time
 
+from repro import obs
 from repro.configs.imm_snap import (
     IMM_EXPERIMENTS, make_im_mesh, mesh_engine_kwargs,
 )
@@ -34,7 +35,10 @@ from repro.graphs.datasets import scaled_snap, synthetic_snap
 def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         eps: float = 0.5, baseline: bool = False, seed: int = 0,
         max_theta: int = 1 << 14, select_ks=(), snapshot_dir: str = None,
-        mesh=None, backend: str = None, sampler: str = None, log=print):
+        mesh=None, backend: str = None, sampler: str = None,
+        metrics_out: str = None, trace_out: str = None, log=print):
+    if metrics_out or trace_out:
+        obs.enable()
     exp = IMM_EXPERIMENTS[graph]
     scale = exp.bench_scale if scale is None else scale
     t0 = time.time()
@@ -84,6 +88,10 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
     if queries:
         out["queries"] = queries
         out["queries_s"] = round(t_queries, 3)
+    if metrics_out:
+        out["metrics_out"] = obs.write_metrics(metrics_out)
+    if trace_out:
+        out["trace_out"] = obs.write_trace(trace_out)
     log(json.dumps(out))
     return out
 
@@ -119,11 +127,18 @@ def main(argv=None):
                     help="RRR store mesh: an int or 'auto' (1D theta "
                          "sharding), 'RxC' e.g. '2x4' (2D theta x vertex "
                          "sharding), or omit for single-device")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable repro.obs and write the metrics-registry "
+                         "JSON snapshot here at exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable repro.obs and write the Chrome "
+                         "trace-event JSON (Perfetto-loadable) here")
     args = ap.parse_args(argv)
     run(args.graph, scale=args.scale, model=args.model, k=args.k,
         eps=args.eps, baseline=args.baseline, max_theta=args.max_theta,
         select_ks=args.select_k, snapshot_dir=args.snapshot_dir,
-        mesh=args.mesh, backend=args.backend, sampler=args.sampler)
+        mesh=args.mesh, backend=args.backend, sampler=args.sampler,
+        metrics_out=args.metrics_out, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_arch
 from repro.models.transformer import (
     LMConfig, init_lm, prefill, decode_step, init_kv_cache,
@@ -243,7 +244,7 @@ class IMServer:
         and the flush does none.
         """
         results = {}
-        with self._lock:
+        with obs.span("flush", tier="serve"), self._lock:
             while self._pending:
                 chunk = self._pending[:self.max_batch]
                 self._pending = self._pending[self.max_batch:]
@@ -265,6 +266,11 @@ class IMServer:
         """Top-k seed-selection query (memoized by the engine)."""
         with self._lock:
             return self.engine.select(k)
+
+    def metrics(self) -> dict:
+        """The obs metrics-registry snapshot (empty maps unless
+        ``repro.obs`` is enabled — see docs/observability.md)."""
+        return obs.snapshot()
 
     def drain(self, timeout: float | None = 30.0) -> bool:
         """Block until the staleness backlog is fully repaired (True) or
@@ -507,13 +513,25 @@ def main(argv=None):
                          "relaxed-SLO tenant (0 disables)")
     ap.add_argument("--max-pending", type=int, default=1024,
                     help="tier workload: per-tenant admission queue cap")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable repro.obs and write the metrics-registry "
+                         "JSON snapshot here at exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable repro.obs and write the Chrome "
+                         "trace-event JSON (Perfetto-loadable) here")
     args = ap.parse_args(argv)
+    if args.metrics_out or args.trace_out:
+        obs.enable()
     if args.workload == "tier":
         _main_tier(args)
     elif args.workload == "im":
         _main_im(args)
     else:
         _main_lm(args)
+    if args.metrics_out:
+        print(f"[obs] metrics -> {obs.write_metrics(args.metrics_out)}")
+    if args.trace_out:
+        print(f"[obs] trace -> {obs.write_trace(args.trace_out)}")
 
 
 if __name__ == "__main__":

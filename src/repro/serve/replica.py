@@ -21,9 +21,11 @@ mesh-sharded primary fans out to mesh-sharded replicas unchanged.
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import store as ckpt
 
 
@@ -61,24 +63,29 @@ class ReplicaGroup:
         must own theirs), and restored everywhere, so the whole group
         lands on one store state.  ``epoch`` tags the group (default:
         the primary's current epoch).  Returns the synced epoch."""
-        base = _base_engine(self.primary)
-        tree = base.snapshot_tree()
-        per_replica = ckpt.tree_bytes(tree)
-        with self._lock:
-            if not self.replicas:
-                self.replicas = [base.replicate(tree)
-                                 for _ in range(self.n_replicas)]
-            else:
+        t0 = time.perf_counter()
+        with obs.span("replica.sync", tier="serve",
+                      replicas=self.n_replicas):
+            base = _base_engine(self.primary)
+            tree = base.snapshot_tree()
+            per_replica = ckpt.tree_bytes(tree)
+            with self._lock:
+                if not self.replicas:
+                    self.replicas = [base.replicate(tree)
+                                     for _ in range(self.n_replicas)]
+                else:
+                    for r in self.replicas:
+                        r.restore_tree(ckpt.clone_tree(tree))
                 for r in self.replicas:
-                    r.restore_tree(ckpt.clone_tree(tree))
-            for r in self.replicas:
-                if r.graph is not base.graph:
-                    r.rebind_graph(base.graph)   # deltas moved the graph
-            self.synced_epoch = (int(epoch) if epoch is not None
-                                 else getattr(self.primary, "epoch", 0))
-            self.syncs += 1
-            self.bytes_shipped += per_replica * self.n_replicas
-            return self.synced_epoch
+                    if r.graph is not base.graph:
+                        r.rebind_graph(base.graph)  # deltas moved the graph
+                self.synced_epoch = (int(epoch) if epoch is not None
+                                     else getattr(self.primary, "epoch", 0))
+                self.syncs += 1
+                self.bytes_shipped += per_replica * self.n_replicas
+        obs.histogram("serve.replica_sync_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        return self.synced_epoch
 
     def _next(self):
         with self._lock:

@@ -59,6 +59,10 @@ class TenantSpec:
     share_engine_with : name of an already-registered tenant whose
         engine (and lock) this tenant shares — a slot on the shared
         engine pool instead of a private engine.
+    latency_slo_ms : optional per-query latency objective; answers
+        slower than this are counted in the tier's
+        ``serve.slo_violations`` metric (observability only — routing
+        never keys on it).
     """
     name: str
     graph: Optional[Graph] = None
@@ -71,12 +75,17 @@ class TenantSpec:
     replicas: int = 0
     policy: Optional[StorePressurePolicy] = None
     share_engine_with: Optional[str] = None
+    latency_slo_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.slo not in SLO_CLASSES:
             raise ValueError(
                 f"tenant {self.name!r}: slo must be one of {SLO_CLASSES}, "
                 f"got {self.slo!r}")
+        if self.latency_slo_ms is not None and self.latency_slo_ms <= 0:
+            raise ValueError(
+                f"tenant {self.name!r}: latency_slo_ms must be > 0, got "
+                f"{self.latency_slo_ms}")
         if self.weight <= 0:
             raise ValueError(
                 f"tenant {self.name!r}: weight must be > 0, got "

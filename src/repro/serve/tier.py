@@ -43,6 +43,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.serve.admission import (
     AdmissionError, DeficitRoundRobin, QueryTicket,
 )
@@ -156,7 +157,10 @@ class IMServe:
             t.submitted += 1
             if not self.queue.try_submit(ticket):
                 t.rejected += 1
+                obs.counter("serve.rejected", tenant=tenant).add(1)
                 return None
+            obs.gauge("serve.queue_depth", tenant=tenant).set(
+                self.queue.pending(tenant))
         return ticket.id
 
     def submit(self, tenant: str, seed_set) -> int:
@@ -182,7 +186,8 @@ class IMServe:
         group = self.replica_groups.get(name)
         use_replica = (tenant.spec.slo == "relaxed" and group is not None
                        and group.servable)
-        with tenant.lock:
+        with obs.span("serve.batch", tier="serve", tenant=name,
+                      queries=len(tickets)), tenant.lock:
             epoch = group.synced_epoch if use_replica else tenant.epoch
             if epoch != tenant.served_epoch:
                 # the moment served_epoch advances is the moment older
@@ -199,12 +204,13 @@ class IMServe:
             keys = [self.cache.key(name, epoch, t.seeds) for t in tickets]
             vals: dict[int, tuple[float, bool]] = {}
             misses = []
-            for tk, key in zip(tickets, keys):
-                hit = self.cache.get(key) if consistent else None
-                if hit is not None:
-                    vals[tk.id] = (hit, True)
-                else:
-                    misses.append((tk, key))
+            with obs.span("cache", tier="serve", tenant=name):
+                for tk, key in zip(tickets, keys):
+                    hit = self.cache.get(key) if consistent else None
+                    if hit is not None:
+                        vals[tk.id] = (hit, True)
+                    else:
+                        misses.append((tk, key))
             if misses:
                 backend = group if use_replica else tenant.engine
                 fresh = backend.influences([tk.seeds for tk, _ in misses])
@@ -226,14 +232,40 @@ class IMServe:
             if use_replica:
                 tenant.replica_reads += len(tickets)
             self.queries_served += len(tickets)
+        if obs.enabled():
+            hits = sum(1 for v in vals.values() if v[1])
+            if consistent:
+                obs.counter("serve.cache_hits", tenant=name).add(hits)
+                obs.counter("serve.cache_misses",
+                            tenant=name).add(len(misses))
+            else:
+                # degraded-fidelity answers skipped the cache entirely
+                obs.counter("serve.cache_bypass",
+                            tenant=name).add(len(tickets))
+            lat = obs.histogram("serve.latency_ms", tenant=name)
+            slo_ms = tenant.spec.latency_slo_ms
+            violations = 0
+            for tk in tickets:
+                ms = (now - tk.t_submit) * 1e3
+                lat.observe(ms)
+                if slo_ms is not None and ms > slo_ms:
+                    violations += 1
+            if violations:
+                obs.counter("serve.slo_violations",
+                            tenant=name).add(violations)
         return out
 
     def pump(self) -> dict[int, float]:
         """One DRR scheduling round: every backlogged tenant serves its
         weighted share, each share answered as one fused batch against
         one epoch.  Returns ``{ticket: value}`` for the round."""
-        with self._lock:
+        with obs.span("admission", tier="serve"), self._lock:
             round_ = self.queue.take_round()
+        if obs.enabled():
+            obs.counter("serve.drr_rounds").add(1)
+            for name, tickets in round_:
+                obs.gauge("serve.queue_depth", tenant=name).set(
+                    self.queue.pending(name))
         results = {}
         for name, tickets in round_:
             results.update(self._serve_batch(self._tenant(name), tickets))
@@ -402,3 +434,9 @@ class IMServe:
             out["replicas"] = {n: g.stats()
                                for n, g in self.replica_groups.items()}
         return out
+
+    def metrics(self) -> dict:
+        """The obs metrics-registry snapshot (counters / gauges /
+        histograms — see docs/observability.md for the catalog).  Empty
+        maps unless ``repro.obs`` is enabled."""
+        return obs.snapshot()

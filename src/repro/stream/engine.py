@@ -56,6 +56,7 @@ import math
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import store as ckpt
 from repro.core.engine import IMMConfig, InfluenceEngine, Selection
 from repro.core.sampler import default_sampler_name, stable_variant
@@ -258,11 +259,15 @@ class StreamEngine:
         mutated edge's destination.  Opens a new epoch; serving continues
         immediately on the surviving rows.  Returns the number of rows
         that went stale."""
-        new_graph = delta.apply(self.graph)
-        stale = invalidate(self.store, delta.touched_vertices())
-        self.engine.rebind_graph(new_graph)
+        with obs.span("delta", tier="stream", epoch=self.epoch + 1):
+            new_graph = delta.apply(self.graph)
+            stale = invalidate(self.store, delta.touched_vertices())
+            self.engine.rebind_graph(new_graph)
         self.epoch += 1
         self.deltas_applied += 1
+        obs.counter("stream.deltas").add(1)
+        obs.counter("stream.rows_invalidated").add(stale)
+        obs.gauge("stream.backlog").set(self.stale)
         return stale
 
     def refresh(self, budget: int | None = None) -> int:
@@ -283,53 +288,60 @@ class StreamEngine:
         store = self.store
         if store.dead == 0 and self.stale == 0:
             return 0     # steady state: skip the live-mask gather entirely
-        self._sync_layout()
-        left = math.inf if budget is None else int(budget)
-        repaired = 0
-
-        dead_slots = np.flatnonzero(~np.asarray(store.live_mask()))
-        by_bid: dict[int, list[int]] = {}
-        for s in dead_slots:
-            by_bid.setdefault(int(self._slot_batch[s]), []).append(int(s))
-        orphans = by_bid.pop(-1, [])
-        row_repair = self.engine.supports_row_resample
-        for bid in sorted(by_bid):
-            if left <= 0:
-                break
-            slots = np.asarray(by_bid[bid], np.int64)
-            # pad the repair batch to a power of two (-1 targets are
-            # dropped by the store) so the sampler/scatter kernels retrace
-            # O(log batch) times, not once per distinct staleness count
-            k = slots.shape[0]
-            width = next_pow2(k, 1)
-            idx = np.full(width, -1, np.int64)
-            idx[:k] = slots
-            pos = np.zeros(width, np.int64)
-            pos[:k] = self._slot_pos[slots]
-            if row_repair:
-                # stable sampler: re-generate ONLY the stale rows of the
-                # batch — repair work scales with staleness, not batches
-                rows, _ = self.engine.resample(self._batch_keys[bid],
-                                               positions=pos)
-            else:
-                visited, _ = self.engine.resample(self._batch_keys[bid])
-                rows = jnp.take(visited, jnp.asarray(pos, jnp.int32),
-                                axis=0)
-            store.replace_rows(idx, rows)
-            left -= k
-            repaired += k
-
-        if orphans and left > 0:
-            store.compact()
+        with obs.span("refresh", tier="stream",
+                      budget=-1 if budget is None else int(budget)):
             self._sync_layout()
+            left = math.inf if budget is None else int(budget)
+            repaired = 0
 
-        while self.store.live_count < self._effective_target and left > 0:
-            got = self._add_recorded_batch()
-            left -= got
-            repaired += got
+            dead_slots = np.flatnonzero(~np.asarray(store.live_mask()))
+            by_bid: dict[int, list[int]] = {}
+            for s in dead_slots:
+                by_bid.setdefault(int(self._slot_batch[s]), []).append(int(s))
+            orphans = by_bid.pop(-1, [])
+            row_repair = self.engine.supports_row_resample
+            for bid in sorted(by_bid):
+                if left <= 0:
+                    break
+                slots = np.asarray(by_bid[bid], np.int64)
+                # pad the repair batch to a power of two (-1 targets are
+                # dropped by the store) so the sampler/scatter kernels
+                # retrace O(log batch) times, not once per distinct
+                # staleness count
+                k = slots.shape[0]
+                width = next_pow2(k, 1)
+                idx = np.full(width, -1, np.int64)
+                idx[:k] = slots
+                pos = np.zeros(width, np.int64)
+                pos[:k] = self._slot_pos[slots]
+                if row_repair:
+                    # stable sampler: re-generate ONLY the stale rows of
+                    # the batch — repair work scales with staleness, not
+                    # batches
+                    rows, _ = self.engine.resample(self._batch_keys[bid],
+                                                   positions=pos)
+                else:
+                    visited, _ = self.engine.resample(self._batch_keys[bid])
+                    rows = jnp.take(visited, jnp.asarray(pos, jnp.int32),
+                                    axis=0)
+                store.replace_rows(idx, rows)
+                left -= k
+                repaired += k
+
+            if orphans and left > 0:
+                store.compact()
+                self._sync_layout()
+
+            while self.store.live_count < self._effective_target and left > 0:
+                got = self._add_recorded_batch()
+                left -= got
+                repaired += got
         self.refreshes += 1
         self.rows_repaired += repaired
         self.last_repair = repaired
+        obs.counter("stream.refreshes").add(1)
+        obs.counter("stream.rows_repaired").add(repaired)
+        obs.gauge("stream.backlog").set(self.stale)
         return self.stale
 
     # ------------------------------------------------------- checkpointing

@@ -1,0 +1,181 @@
+"""Subprocess body for the forced multi-device IMTrace acceptance cell.
+
+Run by scripts/ci.sh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and ``--mesh
+2x4`` so the obs instrumentation executes against real (host-platform)
+multi-device buffers.  Asserts the observability acceptance criteria
+(docs/observability.md):
+
+  * a fully-instrumented meshed engine run (spans + metrics live, all
+    tiers recording) is **seed-for-seed bitwise identical** to the same
+    run with obs disabled — observability provably changes no numerics;
+  * the exported Chrome trace contains **nested** spans from the
+    engine, store, stream, and serve tiers;
+  * a meshed `IMServe` campaign (strict + relaxed/replicated +
+    streaming tenants, repeated queries, a delta + refresh) reports
+    non-zero per-tenant p50/p99 latency histograms, cache hit/miss
+    counters, and queue-depth gauges in its metrics snapshot, plus an
+    SLO-violation count for a tenant with an (intentionally
+    unmeetable) ``latency_slo_ms``;
+  * both export artifacts round-trip through `scripts.check_obs`'s
+    validators.
+
+Prints one JSON line on success (consumed by scripts/ci.sh).
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+from scripts.check_obs import check_metrics, check_trace  # noqa: E402
+
+from repro import obs                                     # noqa: E402
+from repro.configs.imm_snap import (                      # noqa: E402
+    make_im_mesh, mesh_engine_kwargs,
+)
+from repro.core.engine import InfluenceEngine, IMMConfig  # noqa: E402
+from repro.graphs import rmat_graph                       # noqa: E402
+from repro.serve.tier import IMServe                      # noqa: E402
+from repro.serve.tenant import TenantSpec                 # noqa: E402
+from repro.stream.delta import random_delta               # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="2x4",
+                    help="layout to check: an int (1D) or 'RxC' (2D)")
+    args = ap.parse_args(argv)
+
+    mesh = make_im_mesh(args.mesh)
+    n_dev = jax.device_count()
+    want = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    assert n_dev == want, \
+        f"mesh {args.mesh} wants {want} forced host devices, got {n_dev}"
+    kw = mesh_engine_kwargs(mesh)
+
+    g = rmat_graph(128, 1024, seed=4)
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3)
+
+    # --- obs OFF: the reference run ------------------------------------
+    assert not obs.enabled()
+    off = InfluenceEngine(g, cfg, **kw)
+    r_off = off.run()
+    inf_off = np.asarray(off.influences([r_off.seeds[:3], r_off.seeds]))
+
+    # --- obs ON: same config, same mesh, everything recording ----------
+    obs.reset()
+    obs.enable()
+    on = InfluenceEngine(g, cfg, **kw)
+    r_on = on.run()
+    inf_on = np.asarray(on.influences([r_on.seeds[:3], r_on.seeds]))
+
+    # bitwise seed identity: obs provably changed no numerics
+    np.testing.assert_array_equal(np.asarray(r_off.seeds),
+                                  np.asarray(r_on.seeds))
+    np.testing.assert_array_equal(np.asarray(r_off.counter),
+                                  np.asarray(r_on.counter))
+    assert r_off.theta == r_on.theta
+    assert r_off.influence == r_on.influence
+    np.testing.assert_array_equal(inf_off, inf_on)
+
+    # --- a meshed IMServe campaign on the same mesh --------------------
+    tier = IMServe(quantum=8, refresh_budget=256, mesh_kwargs=kw)
+    tier.register(TenantSpec("brand-a", graph=g, cfg=cfg, theta=128,
+                             latency_slo_ms=250.0))
+    tier.register(TenantSpec("brand-b", graph=g, cfg=cfg, theta=128,
+                             slo="relaxed", replicas=1,
+                             latency_slo_ms=1e-3))   # unmeetably tight
+    tier.register(TenantSpec("evolving", graph=g, cfg=cfg, theta=128,
+                             streaming=True))
+    rng = np.random.default_rng(11)
+    queries = [rng.choice(g.n, size=3, replace=False) for _ in range(6)]
+    for name in ("brand-a", "brand-b", "evolving"):
+        for S in queries:
+            tier.submit(name, S)
+    tier.flush()
+    # the same queries again: epoch unchanged -> these must hit the cache
+    for name in ("brand-a", "brand-b"):
+        for S in queries:
+            tier.submit(name, S)
+    tier.flush()
+    # a delta + SLO-aware refresh on the streaming tenant (stream spans)
+    stale = tier.apply_delta(
+        "evolving", random_delta(g, np.random.default_rng(5), reweights=8))
+    assert stale >= 0
+    while tier.backlog:
+        assert tier.refresh_step()
+    assert tier.sync_replicas() >= 0
+
+    snap = tier.metrics()
+
+    # per-tenant latency histograms: non-zero counts and quantiles
+    for name in ("brand-a", "brand-b", "evolving"):
+        h = snap["histograms"][f"serve.latency_ms{{tenant={name}}}"]
+        assert h["count"] >= len(queries), (name, h["count"])
+        assert h["p50"] > 0.0 and h["p99"] >= h["p50"], (name, h)
+        assert sum(c for _, c in h["buckets"]) == h["count"]
+    # cache behaviour: the replayed queries hit, the first pass missed
+    for name in ("brand-a", "brand-b"):
+        hits = snap["counters"][f"serve.cache_hits{{tenant={name}}}"]
+        misses = snap["counters"][f"serve.cache_misses{{tenant={name}}}"]
+        assert hits >= len(queries), (name, hits)
+        assert misses >= len(queries), (name, misses)
+    # queue depth was observed non-zero while the submits were backlogged
+    for name in ("brand-a", "brand-b", "evolving"):
+        qd = snap["gauges"][f"serve.queue_depth{{tenant={name}}}"]
+        assert qd["max"] >= 1.0, (name, qd)
+    assert snap["counters"]["serve.drr_rounds"] >= 2
+    # the unmeetable SLO tenant accumulated violations; the lax one none
+    assert snap["counters"]["serve.slo_violations{tenant=brand-b}"] > 0
+    assert "serve.slo_violations{tenant=brand-a}" not in snap["counters"]
+    # the replica group's snapshot fan-out was timed
+    assert snap["histograms"]["serve.replica_sync_ms"]["count"] >= 1
+    # the engine/store instrumentation recorded through the tier too
+    assert snap["counters"]["store.rows_written"] >= r_on.theta
+    assert snap["counters"]["stream.refreshes"] >= 1
+
+    # --- nested spans from every instrumented tier ---------------------
+    tr = obs.get_tracer()
+    for tier_name in ("engine", "store", "stream", "serve"):
+        assert tr.events(tier=tier_name), \
+            f"no spans from tier {tier_name!r}"
+    # nesting: stream-tier spans (delta/refresh) are roots the driver
+    # opens, so the nesting they prove is the engine/store work inside
+    # them; engine, store, and serve spans must themselves be nested
+    for tier_name in ("engine", "store", "serve"):
+        assert any(e["args"]["depth"] > 0 for e in tr.events(tier=tier_name)), \
+            f"no NESTED spans from tier {tier_name!r}"
+    assert any(e["args"]["parent"] == "refresh"
+               for e in tr.events(tier="store")), \
+        "refresh repair did not nest store spans"
+    assert any(e["args"]["parent"] == "serve.batch"
+               for e in tr.events("cache", "serve"))
+    assert any(e["args"]["parent"] == "extend"
+               for e in tr.events("store.write", "store"))
+
+    # --- export artifacts validate under the CI checker ----------------
+    with tempfile.TemporaryDirectory() as d:
+        m = obs.write_metrics(os.path.join(d, "metrics.json"))
+        t = obs.write_trace(os.path.join(d, "trace.json"))
+        check_metrics(m)
+        check_trace(t, ["engine", "store", "stream", "serve"])
+
+    print(json.dumps({
+        "ok": True, "devices": n_dev, "mesh": args.mesh,
+        "theta": int(r_on.theta),
+        "spans": len(tr),
+        "series": (len(snap["counters"]) + len(snap["gauges"])
+                   + len(snap["histograms"])),
+        "p50_ms": {n: snap["histograms"]
+                   [f"serve.latency_ms{{tenant={n}}}"]["p50"]
+                   for n in ("brand-a", "brand-b", "evolving")},
+    }))
+
+
+if __name__ == "__main__":
+    sys.exit(main())
