@@ -1,0 +1,186 @@
+"""IMPack memory: RRR bytes-at-rest and quality-per-byte across codecs.
+
+The IMPack claim is twofold and this bench gates both:
+
+* **Unchanged answers, fewer bytes.**  At a fixed theta the packed
+  (bit-packed, 8 vertices/byte) and compressed (token-list) arenas hold
+  exactly the same RRR sets as the uint8 bitmap — selections are
+  seed-for-seed identical — in a fraction of the resident bytes.  The
+  bench runs the same IMM workload through all three at-rest formats
+  (plus every mesh layout when multiple devices are available), asserts
+  identical seeds, and asserts the headline: packed spends **>= 4x**
+  fewer ``bytes_per_device`` than bitmap at identical quality (it is
+  8x by construction; compressed must come in under bitmap too, and
+  under packed when the rows are sparse — the default rmat parameters
+  keep RRR rows sparse so the token lists win).
+
+* **More quality per byte.**  Holding the byte budget fixed instead of
+  theta, a denser format fits more RRR sets per device, and more sets
+  mean better influence estimates.  The bench grows each store through
+  geometric theta checkpoints and emits ``(bytes_per_device,
+  influence)`` curve rows per format — at any byte level the packed and
+  compressed curves sit at or above bitmap's.
+
+Emits ``BENCH_9.json`` rows (shared `benchmarks._emit` schema):
+
+    {"name": "pack-fixed-theta"|"pack-curve", "mesh", "n", "theta",
+     "wall_s", "store", "bytes_per_device", "influence", "covered_frac"}
+
+    PYTHONPATH=src python -m benchmarks.pack_memory [--tiny] [--out F]
+
+CI runs the ``--tiny`` smoke (scripts/ci.sh); the forced-8-device pass
+picks up the mesh cells, so the equivalence and byte gates execute on
+real multi-device buffers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from benchmarks._emit import bench_row, mesh_tag, write_bench
+from benchmarks._util import block, print_table
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.graphs import rmat_graph
+
+STORES = ("bitmap", "packed", "compressed")
+
+
+def _bytes_per_device(store) -> int:
+    """Physical resident arena bytes on one device (max over shards)."""
+    R = store.R
+    shards = getattr(R, "addressable_shards", None)
+    if not shards:
+        return int(R.nbytes)
+    return max(int(s.data.nbytes) for s in shards)
+
+
+def _layouts():
+    """None (single device) plus, with multiple devices, the 1D theta
+    mesh and — when the count allows it — a genuinely 2D theta x vertex
+    mesh, so the encoded tiles exercise both arena axes."""
+    d = jax.device_count()
+    yield None
+    if d > 1:
+        yield make_im_mesh(d)
+        if d % 4 == 0 and d > 4:
+            yield make_im_mesh((d // 4, 4))
+
+
+def _cell(g, cfg, mesh, kw, theta, k):
+    """One (layout, store) cell: extend + select, timed after a
+    throwaway compile warmup; returns (wall_s, bytes/device, result)."""
+    warm = InfluenceEngine(g, cfg, **kw)
+    warm.extend(min(theta, cfg.batch))
+    block(warm.select(k).seeds)
+    engine = InfluenceEngine(g, cfg, **kw)
+    t0 = time.perf_counter()
+    engine.extend(theta)
+    res = engine.select(k)
+    block(engine.store.counter)
+    wall = time.perf_counter() - t0
+    return wall, _bytes_per_device(engine.store), res
+
+
+def run(n=1024, m=4096, theta=2048, k=10, batch=256, seed=0, log=print):
+    # low average degree keeps RRR rows sparse — the regime where the
+    # compressed token lists undercut even the packed bytes
+    g = rmat_graph(n, m, seed=seed)
+    bench, rows, seeds_ref = [], [], None
+    bytes_at = {}                      # (mesh_tag, store) -> bytes/device
+    for mesh in _layouts():
+        kw = mesh_engine_kwargs(mesh)
+        tag = mesh_tag(mesh)
+        for kind in STORES:
+            # on a mesh, "auto" is the sharded bitmap arena — the
+            # baseline the encoded tiles are measured against
+            store = ("auto" if (mesh is not None and kind == "bitmap")
+                     else kind)
+            cfg = IMMConfig(k=k, batch=batch, store=store, seed=seed,
+                            max_theta=max(theta, 1 << 20))
+            wall, per_dev, res = _cell(g, cfg, mesh, kw, theta, k)
+            if seeds_ref is None:
+                seeds_ref = np.asarray(res.seeds)
+            else:
+                # the equivalence gate: every at-rest format on every
+                # layout answers bit-identically
+                np.testing.assert_array_equal(seeds_ref,
+                                              np.asarray(res.seeds))
+            bytes_at[(tag, kind)] = per_dev
+            bench.append(bench_row(
+                "pack-fixed-theta", mesh=tag, n=n, theta=theta,
+                wall_s=wall, store=kind, bytes_per_device=per_dev,
+                influence=res.influence, covered_frac=res.covered_frac))
+            rows.append([tag, kind, theta, f"{wall:.3f}", f"{per_dev:,}",
+                         f"{bytes_at[(tag, 'bitmap')] / per_dev:.1f}x",
+                         f"{res.influence:.1f}"])
+            log(f"[pack-memory] mesh={tag} store={kind}: {wall:.3f}s, "
+                f"{per_dev:,} B/device, influence {res.influence:.1f}")
+    # the headline byte gates, on every layout that ran
+    for (tag, kind), per_dev in bytes_at.items():
+        base = bytes_at[(tag, "bitmap")]
+        if kind == "packed":
+            assert per_dev * 4 <= base, \
+                f"packed arena on mesh={tag} is only " \
+                f"{base / per_dev:.1f}x smaller than bitmap (need >= 4x)"
+        elif kind == "compressed":
+            assert per_dev < base, \
+                f"compressed arena on mesh={tag} ({per_dev} B) did not " \
+                f"beat bitmap ({base} B)"
+
+    # quality-per-byte curves: same workload, geometric theta
+    # checkpoints, each store growing in place (single device — the
+    # per-row byte ratios are layout-independent)
+    checkpoints = [theta >> s for s in (3, 2, 1, 0) if theta >> s >= k]
+    for kind in STORES:
+        cfg = IMMConfig(k=k, batch=batch, store=kind, seed=seed,
+                        max_theta=max(theta, 1 << 20))
+        engine = InfluenceEngine(g, cfg)
+        seen = set()
+        for t in checkpoints:
+            engine.extend(t)           # grows to >= t in batch multiples
+            t_actual = engine.store.count
+            if t_actual in seen:
+                continue
+            seen.add(t_actual)
+            res = engine.select(k)
+            per_dev = _bytes_per_device(engine.store)
+            bench.append(bench_row(
+                "pack-curve", mesh="1", n=n, theta=t_actual, wall_s=0.0,
+                store=kind, bytes_per_device=per_dev,
+                influence=res.influence, covered_frac=res.covered_frac))
+            log(f"[pack-curve] store={kind} theta={t_actual}: "
+                f"{per_dev:,} B, influence {res.influence:.1f}")
+    print_table(
+        f"IMPack bytes at rest (n={n}, m={m}, theta={theta}, k={k}, "
+        f"{jax.device_count()} device(s); identical seeds asserted)",
+        ["mesh", "store", "theta", "wall_s", "arena B/dev", "vs bitmap",
+         "influence"], rows)
+    return bench
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small graph, small theta")
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--m", type=int, default=4096)
+    ap.add_argument("--theta", type=int, default=2048)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--out", default="BENCH_9.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+    if args.tiny:
+        bench = run(n=192, m=768, theta=256, k=4, batch=64)
+    else:
+        bench = run(n=args.n, m=args.m, theta=args.theta, k=args.k,
+                    batch=args.batch)
+    write_bench(args.out, bench)
+
+
+if __name__ == "__main__":
+    main()

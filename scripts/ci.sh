@@ -17,15 +17,18 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # ShardedStore (1D and 2x2 theta x vertex), sharded selection (dense and
 # sharded-sparse), the engine equivalence tests, the streaming subsystem
 # (per-shard invalidation/eviction/compaction, refresh-equivalence and
-# cross-layout snapshot-provenance cells incl. 2D), and the sampler
+# cross-layout snapshot-provenance cells incl. 2D), the sampler
 # model x backend x stable matrix (legacy goldens + per-cell mesh
-# equivalence) all run with the theta axis physically split 4 ways
+# equivalence), and the IMPack suite (codec round-trips, encoded mesh
+# tiles, the compress-before-evict ladder, snapshot elasticity) all run
+# with the theta axis physically split 4 ways
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -q -m "not slow" \
         tests/test_sharded_store.py \
         tests/test_stream.py \
         tests/test_sampler_matrix.py \
+        tests/test_pack.py \
         "tests/test_engine_store.py::test_sharded_strategy_through_engine_matches_local" \
         "tests/test_sharded_and_integration.py::test_select_dense_sharded_equals_local"
 
@@ -33,10 +36,18 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
 # shards x vertices over 4 — per-device arena buffers are (cap_local,
 # n/4), the full (theta, n) arena never exists on one device, and
 # select/influence answers are bitwise identical to the single-device
-# engine (tests/force_mesh_check.py asserts all of it)
+# engine (tests/force_mesh_check.py asserts all of it); the packed and
+# compressed cells re-prove it with IMPack-encoded tiles, whose
+# per-device buffers are (cap_local, w_local) at the codec width
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     python tests/force_mesh_check.py --mesh 2x4
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python tests/force_mesh_check.py --mesh 2x4 --store packed
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python tests/force_mesh_check.py --mesh 2x4 --store compressed
 
 # sharding-scaling benchmark smoke (BENCH_5): every mesh factorization of
 # 8 forced devices (1, 8, 8x1, 4x2, 2x4, 1x8) runs the same workload —
@@ -63,6 +74,16 @@ for row in rows:
 print(f"BENCH_5 schema OK: {len(rows)} rows carry "
       f"imbalance/collective_s/compute_s")
 PY
+
+# IMPack memory benchmark smoke (BENCH_9): bitmap vs packed vs
+# compressed arenas on every layout of the 8 forced devices (1, 1D 8,
+# 2D 2x4) — identical seeds asserted per cell, packed >= 4x fewer
+# bytes_per_device than bitmap asserted per layout, plus the
+# quality-per-byte curve rows
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.pack_memory --tiny \
+        --out "${TMPDIR:-/tmp}/BENCH_9.json"
 
 # streaming benchmark smoke (tiny evolving graph; the non-slow analogue of
 # the full benchmarks/stream_runtime.py run) — exercises delta apply,

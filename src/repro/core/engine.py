@@ -48,11 +48,16 @@ from repro.core import martingale as mg
 from repro.core.adaptive import choose_representation, l_pad_for
 from repro.core.sampler import bind_sampler, default_sampler_name, get_sampler
 from repro.core.selection import get_selection
+import repro.core.pack  # noqa: F401 — registers IMPack stores/strategies
 from repro.core.store import (
     RRRStore, ShardedStore, make_store, next_pow2, store_from_state,
 )
 from repro.checkpoint import store as ckpt
 from repro.graphs.partition import resolve_partition
+
+# the IMPack at-rest representations a cfg.store can name (beyond the
+# legacy auto/bitmap/indices/sharded) — restore re-encodes into these
+_PACK_REPS = ("packed", "compressed")
 
 
 @dataclasses.dataclass
@@ -87,8 +92,13 @@ class IMMConfig:
     fuse_counters: bool = True            # C3 (informational; sampler always fuses)
     switch_ratio: int = 32
     # "auto" resolves to "sharded" when the engine has a mesh, "bitmap"
-    # otherwise; "sharded" demands a mesh
-    store: str = "auto"   # "auto" | "bitmap" | "indices" | "sharded"
+    # otherwise; "sharded" demands a mesh.  "packed" (bit-packed, 8x
+    # smaller at rest) and "compressed" (token lists, decode-and-count
+    # reads) are the IMPack at-rest formats — on a mesh they resolve to a
+    # ShardedStore whose tiles use that codec.  Representation never
+    # changes results: all stores are seed-for-seed bitwise-identical
+    store: str = "auto"   # "auto" | "bitmap" | "indices" | "packed"
+    #                     # | "compressed" | "sharded"
     # vertex-axis column layout of a meshed store: "equal" keeps the
     # canonical contiguous equal blocks; "balanced" places the block
     # boundaries at the graph's dst-degree quantiles so per-shard edge
@@ -170,6 +180,13 @@ class InfluenceEngine:
                 "sharded", graph.n, mesh=mesh, theta_axes=self.theta_axes,
                 vertex_axis=vertex_axis,
                 partition=self._resolve_partition(mesh, vertex_axis))
+        elif mesh is not None and self.cfg.store in ("packed", "compressed"):
+            # the IMPack at-rest formats shard like bitmaps — every tile
+            # of the mesh arena is encoded with the configured codec
+            self.store = make_store(
+                "sharded", graph.n, mesh=mesh, theta_axes=self.theta_axes,
+                vertex_axis=vertex_axis, codec=self.cfg.store,
+                partition=self._resolve_partition(mesh, vertex_axis))
         elif mesh is not None and self.cfg.store == "indices":
             # fail fast: the sharded pipeline (store, selection, snapshot
             # restore) is dense-only, and the late failure used to surface
@@ -177,8 +194,9 @@ class InfluenceEngine:
             raise ValueError(
                 "store='indices' cannot be combined with a mesh: "
                 "IndexStore (and its snapshots) is single-device only. "
-                "Use the bitmap representation (store='auto' or "
-                "'bitmap'), which shards across the mesh.")
+                "Use a dense at-rest representation (store='auto', "
+                "'bitmap', 'packed', or 'compressed'), all of which "
+                "shard across the mesh.")
         elif self.cfg.store == "sharded":
             raise ValueError("store='sharded' needs a mesh")
         else:
@@ -315,7 +333,14 @@ class InfluenceEngine:
     # ----------------------------------------------------------- selection
 
     def _choose_representation(self) -> str:
-        if self.store.representation == "indices":
+        """The C4 adaptive choice, generalized over at-rest formats: the
+        answer is either ``"indices"`` (sparse sets past the switch
+        ratio) or the store's own resident representation (``"bitmap"``
+        / ``"packed"`` / ``"compressed"`` — the dense layouts all serve
+        selection natively, so the store never converts except to the
+        derived index view)."""
+        rep = self.store.representation
+        if rep == "indices":
             return "indices"
         cfg = self.cfg
         if cfg.adaptive_representation and self.graph.n >= cfg.sparse_rep_min_n:
@@ -326,13 +351,16 @@ class InfluenceEngine:
                 # are local quantities — adding vertex shards makes the
                 # index representation win earlier
                 avg_cov, _ = self.store.coverage_stats()
-                return choose_representation(
+                chosen = choose_representation(
                     avg_cov, self.store.n_local,
                     self.store.max_local_size(), cfg.switch_ratio)
-            avg_cov, l_max = self.store.coverage_stats()
-            return choose_representation(
-                avg_cov, self.graph.n, l_max, cfg.switch_ratio)
-        return "bitmap"
+            else:
+                avg_cov, l_max = self.store.coverage_stats()
+                chosen = choose_representation(
+                    avg_cov, self.graph.n, l_max, cfg.switch_ratio)
+            if chosen == "indices":
+                return "indices"
+        return rep
 
     def select(self, k: int = None, *, method: str = None) -> Selection:
         """Greedy max-coverage over the *current* store — re-queryable.
@@ -355,35 +383,46 @@ class InfluenceEngine:
 
         if self.mesh is not None:
             # a ShardedStore view hands its native arena tiles straight to
-            # the strategy (no resharding), a replicated BitmapStore view
-            # is scattered on entry by shard_map.  The C4 adaptive choice
-            # runs here too (per vertex shard): when sets are sparse
-            # enough, selection consumes a tile-local index view through
-            # the sharded-sparse strategy instead of the bitmaps
-            if self.store.representation != "bitmap":
-                raise ValueError("sharded selection requires a bitmap store")
+            # the strategy (no resharding — encoded packed/compressed
+            # tiles decode inside the selection kernel through the
+            # store's codec), a replicated BitmapStore view is scattered
+            # on entry by shard_map.  The C4 adaptive choice runs here
+            # too (per vertex shard): when sets are sparse enough,
+            # selection consumes a tile-local index view through the
+            # sharded-sparse strategy instead of the dense tiles
+            if self.store.representation == "indices":
+                raise ValueError(
+                    "sharded selection requires a dense-at-rest store "
+                    "(bitmap, packed, or compressed)")
             rep = self._choose_representation()
             if rep == "indices" and isinstance(self.store, ShardedStore):
                 view = self.store.index_view(
                     l_pad_for(self.store.max_local_size()))
                 layout = "sharded-sparse"
             else:
-                rep, view, layout = "bitmap", self.store.view(), "sharded"
+                rep = self.store.representation
+                view, layout = self.store.view(), "sharded"
         else:
             rep = self._choose_representation()
-            if rep == "indices" and self.store.representation == "bitmap":
+            srep = self.store.representation
+            if rep == "indices" and srep != "indices":
                 _, l_max = self.store.coverage_stats()
                 view = self.store.index_view(l_pad_for(l_max))
+                layout = "sparse"
             else:
                 view = self.store.view()
-            layout = "dense" if rep == "bitmap" else "sparse"
+                layout = {"bitmap": "dense", "indices": "sparse",
+                          "packed": "packed",
+                          "compressed": "compressed"}[rep]
         strategy = get_selection(method, layout)
         with obs.span("select", tier="engine", k=k, method=method,
                       layout=layout):
             seeds, frac, gains = strategy(
                 view, k, mesh=self.mesh, theta_axes=self.theta_axes,
                 vertex_axis=self.vertex_axis,
-                partition=getattr(self.store, "partition", None))
+                partition=getattr(self.store, "partition", None),
+                codec=getattr(self.store, "codec", None),
+                pallas_interpret=cfg.pallas_interpret)
         sel = Selection(
             seeds=np.asarray(seeds), covered_frac=float(frac),
             influence=float(frac) * self.graph.n, gains=np.asarray(gains),
@@ -463,9 +502,13 @@ class InfluenceEngine:
         # single-device store (cfg.store="bitmap" etc.) keep their kind
         mesh = self.mesh if isinstance(self.store, ShardedStore) else None
         vx = self.vertex_axis if mesh is not None else None
+        # a packed/compressed-configured engine re-encodes whatever the
+        # snapshot holds; legacy configs keep the snapshot's own kind
+        target = (self.cfg.store if self.cfg.store in _PACK_REPS else None)
         self.store = store_from_state(
             tree["store"], mesh=mesh, theta_axes=self.theta_axes,
-            vertex_axis=vx, partition=self._resolve_partition(mesh, vx))
+            vertex_axis=vx, partition=self._resolve_partition(mesh, vx),
+            kind=target)
         self.key = jnp.asarray(tree["key"])
         self._reset_index_emission()
         self._select_cache.clear()

@@ -1,0 +1,26 @@
+"""IMPack: bit-packed and compressed-at-rest RRR arenas.
+
+Importing this package registers `PackedBitmapStore` and
+`CompressedStore` in `repro.core.store.STORE_KINDS` and their selection
+strategies in `repro.core.selection.SELECTION_STRATEGIES` (the engine
+imports it; `make_store`/`store_from_state` lazy-import it).
+"""
+from repro.core.pack.codec import (  # noqa: F401
+    BitmapCodec,
+    PackedCodec,
+    TokenCodec,
+    codec_for,
+    pack_bits,
+    pack_bits_np,
+    tokens_needed,
+    unpack_bits,
+    unpack_bits_np,
+)
+from repro.core.pack.stores import (  # noqa: F401
+    CompressedStore,
+    PackedBitmapStore,
+)
+from repro.core.pack.selection import (  # noqa: F401
+    select_compressed,
+    select_packed,
+)

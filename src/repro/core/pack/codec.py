@@ -1,0 +1,362 @@
+"""Row codecs for RRR arenas: bitmap, bit-packed, and token-compressed.
+
+A codec maps a batch of RRR membership rows — uint8 0/1 bitmaps of shape
+``(B, n_cols)`` — to an at-rest representation and back.  Codecs are the
+unit the stores compose over: `PackedBitmapStore`/`CompressedStore` hold
+one codec for the whole arena, and `ShardedStore` holds one codec per
+vertex tile (``n_cols = n_local``), swapping codecs in place when the
+`StorePressurePolicy` ladder fires.  Every method is pure jnp so it can
+run inside ``jit`` and ``shard_map`` bodies.
+
+At-rest formats
+---------------
+* ``bitmap`` — the identity codec: one uint8 per vertex.
+* ``packed`` — 8 vertices per byte, ``width = ceil(n_cols / 8)``.
+  Bit ``j`` of byte ``b`` is vertex ``b * 8 + j`` (LSB-first).
+* ``compressed`` — per-row token lists over the *packed* bytes, mixing
+  two codes chosen per 32-byte superblock by density:
+
+      token = block * 512 + code
+      code < 256   -> dictionary literal: byte ``block`` equals ``code``
+      code == 256  -> saturated run: 32 consecutive 0xFF bytes starting
+                      at ``block`` (block % 32 == 0), i.e. 256 set bits
+      sentinel     -> ``n_blocks_padded * 512`` (past-the-end block,
+                      code 0: decodes to nothing)
+
+  A fully-saturated superblock (dense rows) costs one run token instead
+  of 32 literals; everything else pays one literal per nonzero byte
+  (sparse rows degenerate to a pure dictionary list).  Rows are padded
+  to ``s_pad`` tokens with the sentinel; `tokens_needed` gives the
+  per-row count so stores can widen ``s_pad`` the way `IndexStore`
+  widens ``l_pad``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TOKEN_BASE = 512       # tokens are block * TOKEN_BASE + code
+SAT_CODE = 256         # code marking a saturated 32-byte run
+SUPERBLOCK = 32        # bytes per run-length superblock
+MIN_TOKEN_PAD = 8      # floor for CompressedStore s_pad
+
+_BIT_WEIGHTS = np.array([1, 2, 4, 8, 16, 32, 64, 128], dtype=np.uint8)
+
+
+def n_bytes_for(n_cols: int) -> int:
+    """Packed width in bytes for an ``n_cols``-bit row."""
+    return -(-int(n_cols) // 8)
+
+
+def n_superblocks_for(n_cols: int) -> int:
+    return -(-n_bytes_for(n_cols) // SUPERBLOCK)
+
+
+def n_blocks_padded(n_cols: int) -> int:
+    """Byte count rounded up to whole superblocks (token block space)."""
+    return n_superblocks_for(n_cols) * SUPERBLOCK
+
+
+def token_sentinel(n_cols: int) -> int:
+    return n_blocks_padded(n_cols) * TOKEN_BASE
+
+
+# ---------------------------------------------------------------------------
+# bit packing
+
+
+def pack_bits(bits):
+    """(..., n) uint8 0/1 -> (..., ceil(n/8)) uint8, LSB-first."""
+    n = bits.shape[-1]
+    nb = n_bytes_for(n)
+    pad = nb * 8 - n
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    grouped = bits.reshape(bits.shape[:-1] + (nb, 8)).astype(jnp.uint8)
+    return (grouped * jnp.asarray(_BIT_WEIGHTS)).sum(
+        axis=-1, dtype=jnp.uint8)
+
+
+def unpack_bits(packed, n_cols: int):
+    """(..., nb) uint8 -> (..., n_cols) uint8 0/1 (inverse of pack_bits)."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)
+    return bits.reshape(packed.shape[:-1] + (-1,))[..., :n_cols]
+
+
+def pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    bits = np.ascontiguousarray(bits, dtype=np.uint8)
+    return np.packbits(bits, axis=-1, bitorder="little")
+
+
+def unpack_bits_np(packed: np.ndarray, n_cols: int) -> np.ndarray:
+    out = np.unpackbits(np.ascontiguousarray(packed, dtype=np.uint8),
+                        axis=-1, bitorder="little")
+    return out[..., :n_cols]
+
+
+def popcount_u8(x):
+    """Per-byte population count (uint8 in, uint8 out)."""
+    x = x.astype(jnp.uint8)
+    v = x - ((x >> 1) & jnp.uint8(0x55))
+    v = (v & jnp.uint8(0x33)) + ((v >> 2) & jnp.uint8(0x33))
+    return (v + (v >> 4)) & jnp.uint8(0x0F)
+
+
+def popcount_i32(x):
+    """Population count of non-negative int32 values (int32 out)."""
+    x = x.astype(jnp.int32)
+    v = x - ((x >> 1) & 0x55555555)
+    v = (v & 0x33333333) + ((v >> 2) & 0x33333333)
+    v = (v + (v >> 4)) & 0x0F0F0F0F
+    return (v * 0x01010101) >> 24
+
+
+# ---------------------------------------------------------------------------
+# token codec primitives (free functions so kernels/oracles can share the
+# format math without holding a codec instance)
+
+
+def _row_plan(bits):
+    """Per-row byte/superblock masks behind the token layout.
+
+    Returns ``(bytes_, lit_mask, sat_mask)`` where ``bytes_`` is the
+    superblock-padded packed row, ``lit_mask`` marks bytes emitted as
+    dictionary literals, and ``sat_mask`` marks saturated superblocks
+    emitted as one run token.
+    """
+    n = bits.shape[-1]
+    nbp = n_blocks_padded(n)
+    bytes_ = pack_bits(bits)
+    pad = nbp - bytes_.shape[-1]
+    if pad:
+        bytes_ = jnp.pad(bytes_, [(0, 0)] * (bytes_.ndim - 1) + [(0, pad)])
+    grouped = bytes_.reshape(bytes_.shape[:-1] + (-1, SUPERBLOCK))
+    sat_mask = (grouped == jnp.uint8(0xFF)).all(axis=-1)
+    lit_mask = (bytes_ > 0) & ~jnp.repeat(sat_mask, SUPERBLOCK, axis=-1)
+    return bytes_, lit_mask, sat_mask
+
+
+def tokens_needed(bits):
+    """(..., n) bit rows -> (...,) int32 token count under the codec."""
+    _, lit_mask, sat_mask = _row_plan(bits)
+    return (lit_mask.sum(axis=-1, dtype=jnp.int32)
+            + sat_mask.sum(axis=-1, dtype=jnp.int32))
+
+
+def token_encode(bits, s_pad: int):
+    """(B, n) bit rows -> (B, s_pad) int32 tokens (sentinel padded).
+
+    The caller must guarantee ``s_pad >= tokens_needed(bits).max()`` —
+    overflow tokens are silently dropped (stores widen first, the way
+    `IndexStore` widens ``l_pad``).
+    """
+    n = bits.shape[-1]
+    nbp = n_blocks_padded(n)
+    nsb = nbp // SUPERBLOCK
+    sentinel = jnp.int32(token_sentinel(n))
+    bytes_, lit_mask, sat_mask = _row_plan(bits)
+
+    blocks = jnp.arange(nbp, dtype=jnp.int32)
+    lit_vals = blocks * TOKEN_BASE + bytes_.astype(jnp.int32)
+    sat_vals = (jnp.arange(nsb, dtype=jnp.int32) * SUPERBLOCK * TOKEN_BASE
+                + SAT_CODE)
+    vals = jnp.concatenate(
+        [lit_vals, jnp.broadcast_to(sat_vals, bits.shape[:-1] + (nsb,))],
+        axis=-1)
+    mask = jnp.concatenate([lit_mask, sat_mask], axis=-1)
+
+    # stable compaction: keep masked candidates in layout order (same
+    # top_k trick as adaptive.bitmap_to_indices)
+    total = nbp + nsb
+    score = (mask.astype(jnp.int32) * (total + 1)
+             - jnp.arange(total, dtype=jnp.int32))
+    _, pick = jax.lax.top_k(score, min(s_pad, total))
+    toks = jnp.where(jnp.take_along_axis(mask, pick, axis=-1),
+                     jnp.take_along_axis(vals, pick, axis=-1), sentinel)
+    if s_pad > total:
+        toks = jnp.pad(toks, [(0, 0)] * (toks.ndim - 1)
+                       + [(0, s_pad - total)], constant_values=sentinel)
+    return toks
+
+
+def token_decode(tokens, n_cols: int):
+    """(B, s_pad) int32 tokens -> (B, n_cols) uint8 0/1 bit rows."""
+    nbp = n_blocks_padded(n_cols)
+    nsb = nbp // SUPERBLOCK
+    blk = tokens // TOKEN_BASE
+    code = tokens - blk * TOKEN_BASE
+
+    def one(blk_r, code_r):
+        # literal bytes: scatter into a one-slot-padded scratch so the
+        # sentinel block (== nbp) and run tokens land harmlessly
+        lit_idx = jnp.where(code_r < SAT_CODE, blk_r, nbp)
+        bytes_ = jnp.zeros(nbp + 1, jnp.uint8).at[lit_idx].max(
+            jnp.where(code_r < SAT_CODE, code_r, 0).astype(jnp.uint8))[:nbp]
+        sat_idx = jnp.where(code_r == SAT_CODE, blk_r // SUPERBLOCK, nsb)
+        sat = jnp.zeros(nsb + 1, jnp.uint8).at[sat_idx].max(
+            jnp.uint8(1))[:nsb]
+        bytes_ = jnp.maximum(
+            bytes_, jnp.repeat(sat, SUPERBLOCK) * jnp.uint8(0xFF))
+        return unpack_bits(bytes_, n_cols)
+
+    return jax.vmap(one)(blk, code)
+
+
+def token_decode_cols(tokens, cols):
+    """Membership of global columns: (B, s_pad), (L,) -> (B, L) bool."""
+    cols = cols.astype(jnp.int32)
+    cblk = cols >> 3
+    cbit = cols & 7
+    csb = (cblk // SUPERBLOCK) * SUPERBLOCK
+    blk = tokens // TOKEN_BASE
+    code = tokens - blk * TOKEN_BASE
+    lit = ((code < SAT_CODE)[..., None]
+           & (blk[..., None] == cblk)
+           & (((code[..., None] >> cbit) & 1) > 0))
+    sat = (code == SAT_CODE)[..., None] & (blk[..., None] == csb)
+    return (lit | sat).any(axis=-2)
+
+
+def token_row_popcount(tokens):
+    """(B, s_pad) tokens -> (B,) int32 set-bit counts (no decode)."""
+    blk = tokens // TOKEN_BASE
+    code = tokens - blk * TOKEN_BASE
+    per = jnp.where(code == SAT_CODE, SUPERBLOCK * 8, popcount_i32(code))
+    return per.sum(axis=-1, dtype=jnp.int32)
+
+
+def token_decode_np(tokens: np.ndarray, n_cols: int) -> np.ndarray:
+    """Host-side token decode for snapshot paths."""
+    tokens = np.asarray(tokens, dtype=np.int64)
+    nbp = n_blocks_padded(n_cols)
+    blk = tokens // TOKEN_BASE
+    code = tokens - blk * TOKEN_BASE
+    out = np.zeros(tokens.shape[:-1] + (nbp,), dtype=np.uint8)
+    rows = np.broadcast_to(
+        np.arange(tokens.shape[0])[:, None], tokens.shape)
+    # sentinel tokens live at the past-the-end block — not literals
+    lit = (code < SAT_CODE) & (blk < nbp)
+    out[rows[lit], blk[lit]] = code[lit].astype(np.uint8)
+    sat = code == SAT_CODE
+    for r, b in zip(rows[sat], blk[sat]):
+        out[r, b:b + SUPERBLOCK] = 0xFF
+    return unpack_bits_np(out, n_cols)
+
+
+# ---------------------------------------------------------------------------
+# codec objects (frozen + hashable: they key the sharded kernel caches)
+
+
+@dataclasses.dataclass(frozen=True)
+class BitmapCodec:
+    """Identity codec: one uint8 per vertex (the PR-1 layout)."""
+    n_cols: int
+    kind: ClassVar[str] = "bitmap"
+    dtype: ClassVar = jnp.uint8
+
+    @property
+    def width(self) -> int:
+        return self.n_cols
+
+    @property
+    def fill(self) -> int:
+        return 0
+
+    def encode(self, bits):
+        return bits.astype(jnp.uint8)
+
+    def decode(self, stored):
+        return stored
+
+    def decode_cols(self, stored, cols):
+        return jnp.take(stored, cols, axis=-1) > 0
+
+    def row_popcount(self, stored):
+        return stored.astype(jnp.int32).sum(axis=-1)
+
+    def decode_np(self, stored: np.ndarray) -> np.ndarray:
+        return np.asarray(stored, dtype=np.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedCodec:
+    """Bit-packed codec: 8 vertices per byte, 8x smaller at rest."""
+    n_cols: int
+    kind: ClassVar[str] = "packed"
+    dtype: ClassVar = jnp.uint8
+
+    @property
+    def width(self) -> int:
+        return n_bytes_for(self.n_cols)
+
+    @property
+    def fill(self) -> int:
+        return 0
+
+    def encode(self, bits):
+        return pack_bits(bits)
+
+    def decode(self, stored):
+        return unpack_bits(stored, self.n_cols)
+
+    def decode_cols(self, stored, cols):
+        cols = cols.astype(jnp.int32)
+        bytes_ = jnp.take(stored, cols >> 3, axis=-1)
+        return ((bytes_ >> (cols & 7).astype(jnp.uint8)) & 1) > 0
+
+    def row_popcount(self, stored):
+        return popcount_u8(stored).astype(jnp.int32).sum(axis=-1)
+
+    def decode_np(self, stored: np.ndarray) -> np.ndarray:
+        return unpack_bits_np(stored, self.n_cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenCodec:
+    """Compressed-at-rest codec: per-row literal/run token lists."""
+    n_cols: int
+    s_pad: int
+    kind: ClassVar[str] = "compressed"
+    dtype: ClassVar = jnp.int32
+
+    @property
+    def width(self) -> int:
+        return self.s_pad
+
+    @property
+    def fill(self) -> int:
+        return token_sentinel(self.n_cols)
+
+    def encode(self, bits):
+        return token_encode(bits, self.s_pad)
+
+    def decode(self, stored):
+        return token_decode(stored, self.n_cols)
+
+    def decode_cols(self, stored, cols):
+        return token_decode_cols(stored, cols)
+
+    def row_popcount(self, stored):
+        return token_row_popcount(stored)
+
+    def decode_np(self, stored: np.ndarray) -> np.ndarray:
+        return token_decode_np(stored, self.n_cols)
+
+
+def codec_for(kind: str, n_cols: int, s_pad: int = MIN_TOKEN_PAD):
+    """Build the codec named ``kind`` (``bitmap``/``packed``/
+    ``compressed``) for ``n_cols``-wide rows."""
+    if kind == "bitmap":
+        return BitmapCodec(int(n_cols))
+    if kind == "packed":
+        return PackedCodec(int(n_cols))
+    if kind == "compressed":
+        return TokenCodec(int(n_cols), int(s_pad))
+    raise ValueError(
+        f"unknown codec kind {kind!r}; expected one of "
+        "'bitmap', 'packed', 'compressed'")

@@ -228,7 +228,7 @@ def _starts_for(mesh, vertex_axis, n, partition):
 def select_dense_sharded(mesh, R, valid, k: int, *,
                          theta_axes=("data",), vertex_axis=None,
                          method: str = "rebuild", n: int | None = None,
-                         partition=None):
+                         partition=None, codec=None):
     """EfficientIMM selection with the theta axis sharded over ``theta_axes``
     (paper C1) and, optionally, the vertex axis over ``vertex_axis``.
 
@@ -271,7 +271,13 @@ def select_dense_sharded(mesh, R, valid, k: int, *,
         raise ValueError(f"unknown method {method}")
     starts_arr = _starts_for(mesh, vertex_axis, n, partition)
 
-    def local_select(R_local, valid_local, starts=None):
+    def local_select(R_enc, valid_local, starts=None):
+        # IMPack arenas rest encoded: decode each device's tile inside
+        # shard_map (a jit temporary — the decoded tile never lands in
+        # HBM between rounds) and run the identical greedy body, so
+        # selections are bitwise-equal to the bitmap layout
+        R_local = (R_enc if codec is None or codec.kind == "bitmap"
+                   else codec.decode(R_enc))
         Rf = R_local.astype(jnp.float32)
 
         def pick(counter, alive):
@@ -491,13 +497,13 @@ def _sparse_strategy(method):
 
 def _sharded_strategy(method):
     def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
-            partition=None, **_):
+            partition=None, codec=None, **_):
         if mesh is None:
             raise ValueError("sharded selection needs a mesh")
         return select_dense_sharded(
             mesh, view.R, view.valid, k,
             theta_axes=theta_axes, vertex_axis=vertex_axis, method=method,
-            n=view.n, partition=partition)
+            n=view.n, partition=partition, codec=codec)
     return run
 
 

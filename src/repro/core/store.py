@@ -91,16 +91,28 @@ class StorePressurePolicy:
     """Bounded-memory contract for an indefinite stream of batches.
 
     ``max_rows`` caps the arena's row capacity directly; ``max_bytes``
-    caps it through the backend's bytes-per-row (``n`` for bitmaps,
-    ``4 * l_pad`` for index lists); when both are set the tighter one
-    wins.  Victim order under pressure is **staleness-first**: dead
+    caps it through the backend's *physical* bytes-per-row (``n`` for
+    bitmaps, ``4 * l_pad`` for index lists, ``ceil(n/8)`` packed,
+    ``4 * s_pad`` compressed); when both are set the tighter one wins.
+    Victim order under pressure is **staleness-first**: dead
     (stale/invalidated) rows are reclaimed by compaction before any live
     row is touched, then the *oldest* live rows are evicted FIFO — the
     lowest-information residents under a growing theta schedule (HBMax's
     observation: early small-theta samples are the cheapest to drop).
+
+    ``ladder`` makes the eviction-vs-compression tradeoff explicit
+    (IMPack): an ordered tuple of codec kinds (subset of ``("packed",
+    "compressed")``) the arena may morph *down* through when a write
+    would not fit — compress-before-evict.  Each step shrinks
+    bytes-per-row, so a ``max_bytes`` cap admits more rows; only when
+    the ladder is exhausted do live rows get evicted.  Backends that
+    cannot morph their layout (`BitmapStore`, `IndexStore`) ignore the
+    ladder; `repro.core.pack.CodecStore` and codec-bearing
+    `ShardedStore` arenas honor it.
     """
     max_rows: int | None = None
     max_bytes: int | None = None
+    ladder: tuple = ()
 
     def row_cap(self, row_bytes: int) -> int | None:
         """Effective row capacity for a backend storing ``row_bytes`` per
@@ -118,6 +130,20 @@ class StorePressurePolicy:
                 f"StorePressurePolicy resolves to a row cap of {cap} "
                 f"(row_bytes={row_bytes}); the cap must hold >= 1 row")
         return cap
+
+
+_LADDER_RANK = {"bitmap": 0, "packed": 1, "compressed": 2}
+
+
+def _ladder_next(current_kind: str, ladder) -> str | None:
+    """Next codec kind a pressure ladder may morph ``current_kind`` down
+    to, or None when the ladder is exhausted.  Only strictly-denser
+    kinds qualify — a ladder can never decompress an arena."""
+    rank = _LADDER_RANK.get(current_kind, 0)
+    for kind in ladder:
+        if _LADDER_RANK.get(kind, -1) > rank:
+            return kind
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -306,9 +332,14 @@ class _ArenaBase:
             # never a device read
             obs.counter("store.rows_written").add(int(B))
             obs.gauge("store.occupancy").set(self.count / self.capacity)
+            # physical at-rest bytes (_row_bytes is per-backend: packed
+            # and compressed arenas report their encoded width, not the
+            # logical uint8 bitmap width)
             arena = self.capacity * self._row_bytes()
             obs.gauge("store.arena_bytes").set(arena)
             obs.gauge("store.bytes_per_device").set(arena)
+            obs.gauge("store.compress_ratio").set(
+                self.capacity * self.n / max(arena, 1))
 
     def _valid(self):
         return (jnp.arange(self.capacity) < self.count) & self.live
@@ -419,13 +450,26 @@ class _ArenaBase:
             self._remaps.append(remap)
         return remap
 
+    def _compress_step(self) -> bool:
+        """Morph the arena one step down the policy ladder (see
+        `StorePressurePolicy.ladder`); returns True when a step was
+        taken.  Backends with a fixed layout cannot morph."""
+        return False
+
     def _ensure_room(self, incoming: int):
-        """Pressure-policy enforcement before a batch write: reclaim dead
-        slots first (staleness-first victim order), then evict the oldest
-        live rows FIFO until ``incoming`` rows fit under the cap."""
+        """Pressure-policy enforcement before a batch write, in
+        compress-before-evict order: reclaim dead slots first
+        (staleness-first victim order), then walk the codec ladder —
+        each step shrinks bytes-per-row, so a ``max_bytes`` cap admits
+        more rows — and only when the ladder is exhausted evict the
+        oldest live rows FIFO until ``incoming`` rows fit."""
         cap = self.row_cap
         if cap is None:
             return
+        if self.count + incoming > cap and self.dead:
+            self.compact()
+        while self.count + incoming > cap and self._compress_step():
+            cap = self.row_cap
         if incoming > cap:
             raise ValueError(
                 f"batch of {incoming} rows exceeds the policy row cap "
@@ -701,7 +745,7 @@ def _psum_if(x, axis):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_write_kernels(mesh, theta_axes, vertex_axis):
+def _sharded_write_kernels(mesh, theta_axes, vertex_axis, codec=None):
     """Compiled per-(mesh, axes) store kernels, shared across stores.
 
     Returns ``(write, valid)``:
@@ -717,12 +761,19 @@ def _sharded_write_kernels(mesh, theta_axes, vertex_axis):
       * ``valid(counts, sizes)`` — per-shard prefix mask
         ``local_iota < counts[shard]`` as a global ``P(theta_axes)`` bool
         array (``sizes`` is only a shape donor).
+
+    ``codec`` (a hashable ``repro.core.pack.codec`` tile codec, or None
+    for the raw bitmap layout) encodes each tile's batch block before the
+    arena write — sizes and counter partials are still computed from the
+    *bit* rows, so the fused C3 path is layout-invariant.  Pack-on-write
+    is fused: the encoded block is a jit temporary of the write kernel.
     """
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def write(R, sizes, counter, counts, rows, incs):
         start = counts[0]
-        R = jax.lax.dynamic_update_slice(R, rows, (start, jnp.int32(0)))
+        stored = rows if codec is None else codec.encode(rows)
+        R = jax.lax.dynamic_update_slice(R, stored, (start, jnp.int32(0)))
         live = jnp.arange(rows.shape[0], dtype=jnp.int32) < incs[0]
         row_sizes = _psum_if(rows.sum(axis=1, dtype=jnp.int32), vertex_axis)
         row_sizes = jnp.where(live, row_sizes, 0)
@@ -746,7 +797,7 @@ def _sharded_write_kernels(mesh, theta_axes, vertex_axis):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
+def _sharded_hits_kernel(mesh, theta_axes, vertex_axis, codec=None):
     """Membership queries with both arena axes resident: each tile tests
     the queried vertices that fall inside its own column block against its
     own rows; the vertex axis combines per-(row, query) hit bits with one
@@ -760,7 +811,7 @@ def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def hits(R, valid, S, starts):
-        n_local = R.shape[1]
+        n_local = R.shape[1] if codec is None else codec.n_cols
         flat = S.reshape(-1)
         if vertex_axis is None:
             lidx, ok = flat, jnp.ones(flat.shape, jnp.bool_)
@@ -769,7 +820,9 @@ def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
             lo = starts[shard]
             lidx = flat - lo
             ok = (flat >= lo) & (flat < starts[shard + 1])
-        memb = jnp.take(R, jnp.clip(lidx, 0, n_local - 1), axis=1) > 0
+        lidx = jnp.clip(lidx, 0, n_local - 1)
+        memb = (jnp.take(R, lidx, axis=1) > 0 if codec is None
+                else codec.decode_cols(R, lidx))
         memb = (memb & ok[None, :]).reshape((R.shape[0],) + S.shape)
         hit = memb.any(axis=2)                       # (cap_local, Q)
         hit = _psum_if(hit.astype(jnp.int32), vertex_axis) > 0
@@ -786,7 +839,7 @@ def _sharded_hits_kernel(mesh, theta_axes, vertex_axis):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_touch_kernel(mesh, theta_axes, vertex_axis):
+def _sharded_touch_kernel(mesh, theta_axes, vertex_axis, codec=None):
     """Reverse-touch (streaming invalidation) with both axes local: each
     tile checks the touched vertices inside its own column block against
     its own rows; only the ``(cap_local,)`` per-row partial hit bits cross
@@ -796,7 +849,7 @@ def _sharded_touch_kernel(mesh, theta_axes, vertex_axis):
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def touch(R, verts, vmask, starts):
-        n_local = R.shape[1]
+        n_local = R.shape[1] if codec is None else codec.n_cols
         if vertex_axis is None:
             lidx, ok = verts, vmask
         else:
@@ -804,7 +857,9 @@ def _sharded_touch_kernel(mesh, theta_axes, vertex_axis):
             lo = starts[shard]
             lidx = verts - lo
             ok = vmask & (verts >= lo) & (verts < starts[shard + 1])
-        memb = jnp.take(R, jnp.clip(lidx, 0, n_local - 1), axis=1) > 0
+        lidx = jnp.clip(lidx, 0, n_local - 1)
+        memb = (jnp.take(R, lidx, axis=1) > 0 if codec is None
+                else codec.decode_cols(R, lidx))
         local = (memb & ok[None, :]).any(axis=1)
         return _psum_if(local.astype(jnp.int32), vertex_axis) > 0
 
@@ -814,7 +869,8 @@ def _sharded_touch_kernel(mesh, theta_axes, vertex_axis):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_index_kernels(mesh, theta_axes, vertex_axis, l_pad):
+def _sharded_index_kernels(mesh, theta_axes, vertex_axis, l_pad,
+                           codec=None):
     """Per-tile C4 conversion: each (theta, vertex) tile rewrites its own
     ``(cap_local, n_local)`` bitmap block as ``(cap_local, l_pad)``
     *local-id* index lists (sentinel ``n_local``) — no cross-device
@@ -824,21 +880,24 @@ def _sharded_index_kernels(mesh, theta_axes, vertex_axis, l_pad):
     sp_rows = P(theta_axes, vertex_axis)
 
     def convert(R):
-        return bitmap_to_indices(R, l_pad)
+        return bitmap_to_indices(R if codec is None else codec.decode(R),
+                                 l_pad)
 
     return jax.jit(shard_map(
         convert, mesh=mesh, in_specs=(sp_rows,), out_specs=sp_rows))
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_localmax_kernel(mesh, theta_axes, vertex_axis):
+def _sharded_localmax_kernel(mesh, theta_axes, vertex_axis, codec=None):
     """Max per-vertex-shard set size over valid rows — the statistic the
     per-shard C4 threshold keys on.  Tile-local row popcounts, one scalar
     psum-max; nothing row- or column-sized crosses devices."""
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def localmax(R, valid):
-        sz = R.sum(axis=1, dtype=jnp.int32) * valid.astype(jnp.int32)
+        sz = (R.sum(axis=1, dtype=jnp.int32) if codec is None
+              else codec.row_popcount(R))
+        sz = sz * valid.astype(jnp.int32)
         m = jnp.max(sz, initial=0)
         axes = theta_axes + ((vertex_axis,) if vertex_axis else ())
         return jax.lax.pmax(m, axes)[None]
@@ -867,7 +926,7 @@ def _sharded_grow_kernel(mesh, theta_axes, vertex_axis, pad):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_stream_kernels(mesh, theta_axes, vertex_axis):
+def _sharded_stream_kernels(mesh, theta_axes, vertex_axis, codec=None):
     """Compiled per-(mesh, axes) streaming row-lifecycle kernels.
 
     Returns ``(kill, replace, compact)``, each tile-local in *both* axes
@@ -893,7 +952,8 @@ def _sharded_stream_kernels(mesh, theta_axes, vertex_axis):
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
 
     def kill(R, counter, sizes, live, dead):
-        contrib = dead.astype(jnp.float32) @ R.astype(jnp.float32)
+        bits = R if codec is None else codec.decode(R)
+        contrib = dead.astype(jnp.float32) @ bits.astype(jnp.float32)
         counter = counter - contrib.astype(jnp.int32)[None, :]
         return counter, jnp.where(dead, 0, sizes), live & ~dead
 
@@ -908,7 +968,8 @@ def _sharded_stream_kernels(mesh, theta_axes, vertex_axis):
         lidx = idx - offs[0]
         ok = (lidx >= 0) & (lidx < cap_local)
         tgt = jnp.where(ok, lidx, cap_local)        # OOB -> dropped
-        R = R.at[tgt].set(rows, mode="drop")
+        stored = rows if codec is None else codec.encode(rows)
+        R = R.at[tgt].set(stored, mode="drop")
         contrib = (rows * ok[:, None]).sum(axis=0, dtype=jnp.int32)
         counter = counter + contrib[None, :]
         row_sizes = _psum_if(rows.sum(axis=1, dtype=jnp.int32), vertex_axis)
@@ -940,6 +1001,52 @@ def _sharded_stream_kernels(mesh, theta_axes, vertex_axis):
         donate_argnums=(0, 1))
 
     return kill_fn, replace_fn, comp_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_recode_kernel(mesh, theta_axes, vertex_axis, codec_from,
+                           codec_to):
+    """Tile-local arena re-encode (``codec_from`` -> ``codec_to``) — the
+    compress-ladder morph and token-width growth both route here.  Each
+    tile decodes and re-encodes its own block; the decoded bits are a jit
+    temporary, nothing crosses devices, and the output is born in the
+    arena's own ``P(theta_axes, vertex_axis)`` layout (not donatable —
+    the at-rest width changes)."""
+    sp_rows = P(theta_axes, vertex_axis)
+
+    def recode(R):
+        return codec_to.encode(codec_from.decode(R))
+
+    return jax.jit(shard_map(
+        recode, mesh=mesh, in_specs=(sp_rows,), out_specs=sp_rows))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_tokneed_kernel(mesh, theta_axes, vertex_axis, codec=None):
+    """Max per-tile token count of an arena (or batch) — the statistic
+    that sizes a `TokenCodec`'s ``s_pad`` before a compress-ladder morph
+    or a token-width growth.  Tile-local `tokens_needed` row maxima, one
+    scalar pmax over every mesh axis.  ``codec`` decodes an encoded
+    resident arena first; None reads raw bit rows (a staged batch)."""
+    from repro.core.pack.codec import tokens_needed
+    sp_rows = P(theta_axes, vertex_axis)
+
+    def need(X):
+        bits = X if codec is None else codec.decode(X)
+        m = jnp.max(tokens_needed(bits), initial=0)
+        axes = theta_axes + ((vertex_axis,) if vertex_axis else ())
+        return jax.lax.pmax(m, axes)[None]
+
+    return jax.jit(shard_map(
+        need, mesh=mesh, in_specs=(sp_rows,), out_specs=P()))
+
+
+def _tile_codec(kind: str, n_cols: int, s_pad=None):
+    """Per-tile codec for encoded sharded arenas (lazy import — the pack
+    package itself imports this module)."""
+    from repro.core.pack.codec import MIN_TOKEN_PAD, codec_for
+    return codec_for(kind, n_cols,
+                     MIN_TOKEN_PAD if s_pad is None else int(s_pad))
 
 
 def _pad_cols(rows, n_pad: int):
@@ -1011,12 +1118,11 @@ class ShardedStore:
     no mesh is available (see `store_from_state`).
     """
 
-    representation = "bitmap"
-
     def __init__(self, n: int, *, mesh, theta_axes=("data",),
                  vertex_axis=None, capacity: int = MIN_CAPACITY,
                  policy: StorePressurePolicy | None = None,
-                 partition: VertexPartition | None = None):
+                 partition: VertexPartition | None = None,
+                 codec: str = "bitmap", s_pad=None):
         if mesh is None:
             raise ValueError("ShardedStore needs a jax.sharding.Mesh")
         if isinstance(theta_axes, str):
@@ -1036,6 +1142,12 @@ class ShardedStore:
                 f"over Dv={self.Dv}")
         self.partition = partition
         self.n_local, self.n_pad = partition.block, partition.n_pad
+        # the per-tile at-rest codec: "bitmap" keeps the historical raw
+        # layout; "packed"/"compressed" store each (theta, vertex) tile
+        # encoded — every kernel decodes tile-locally (IMPack)
+        self.codec = _tile_codec(codec, self.n_local, s_pad)
+        self.w_local = self.codec.width
+        self.w_pad = self.Dv * self.w_local
         self.cap_local = next_pow2(-(-int(capacity) // self.D))
         self.version = 0
         self.policy = policy
@@ -1061,7 +1173,7 @@ class ShardedStore:
             self._cols_from_pad = partition.padded_cols()
         self._counts_host = np.zeros((self.D,), np.int64)
         if policy is not None:
-            cap = policy.row_cap(self.n)
+            cap = policy.row_cap(self._row_bytes())
             if cap // self.D < 1:
                 raise ValueError(
                     f"policy row cap {cap} is below one row per shard "
@@ -1069,7 +1181,8 @@ class ShardedStore:
             self.cap_local = min(self.cap_local, cap // self.D)
         self._live_host = np.ones((self.D * self.cap_local,), bool)
         self.R = _sharded_zeros(
-            (self.D * self.cap_local, self.n_pad), jnp.uint8, self._sh_rows)
+            (self.D * self.cap_local, self.w_pad), self.codec.dtype,
+            self._sh_rows)
         self.sizes = _sharded_zeros(
             (self.D * self.cap_local,), jnp.int32, self._sh_vec)
         self.live = _sharded_ones(
@@ -1077,15 +1190,96 @@ class ShardedStore:
         self._counter = _sharded_zeros(
             (self.D, self.n_pad), jnp.int32, self._sh_rows)
         self._counts = _sharded_zeros((self.D,), jnp.int32, self._sh_vec)
-        self._write_fn, self._valid_fn = _sharded_write_kernels(
-            mesh, self.theta_axes, vertex_axis)
-        self._kill_fn, self._replace_fn, self._compact_fn = (
-            _sharded_stream_kernels(mesh, self.theta_axes, vertex_axis))
-        self._hits_fn = _sharded_hits_kernel(
-            mesh, self.theta_axes, vertex_axis)
+        self._bind_kernels()
         self._idx_cache = None      # (version, l_pad) -> sharded R_idx
 
+    def _bind_kernels(self):
+        """(Re)bind the per-(mesh, axes, codec) compiled kernels — called
+        at construction and after every codec morph.  ``_codec_arg`` is
+        None for the raw bitmap layout so the historical kernel cache
+        keys keep serving bitmap stores unchanged."""
+        codec = None if self.codec.kind == "bitmap" else self.codec
+        self._codec_arg = codec
+        self._write_fn, self._valid_fn = _sharded_write_kernels(
+            self.mesh, self.theta_axes, self.vertex_axis, codec)
+        self._kill_fn, self._replace_fn, self._compact_fn = (
+            _sharded_stream_kernels(
+                self.mesh, self.theta_axes, self.vertex_axis, codec))
+        self._hits_fn = _sharded_hits_kernel(
+            self.mesh, self.theta_axes, self.vertex_axis, codec)
+
+    def _row_bytes(self) -> int:
+        """Physical at-rest bytes per global row — what byte-budget
+        pressure policies meter.  Bitmap rows keep the historical
+        logical-``n`` accounting (1 byte/vertex); encoded rows charge the
+        padded tile width times the codec element size."""
+        if self.codec.kind == "bitmap":
+            return self.n
+        return self.w_pad * jnp.dtype(self.codec.dtype).itemsize
+
+    def _set_codec(self, codec):
+        """Morph the resident arena to ``codec`` in place (tile-local
+        decode/re-encode), rebind kernels, and invalidate derived
+        views."""
+        if codec == self.codec:
+            return
+        rec = _sharded_recode_kernel(
+            self.mesh, self.theta_axes, self.vertex_axis, self.codec, codec)
+        self.R = rec(self.R)
+        self.codec = codec
+        self.w_local = codec.width
+        self.w_pad = self.Dv * self.w_local
+        self._bind_kernels()
+        self._idx_cache = None
+        self.version += 1
+
+    def _widen_tokens(self, rows_bits=None):
+        """Grow the token codec's ``s_pad`` to fit ``rows_bits`` (a
+        staged sharded bit batch; None re-measures the resident arena) —
+        the `IndexStore` ``_widen`` analogue for compressed tiles."""
+        from repro.core.pack.codec import MIN_TOKEN_PAD, TokenCodec
+        if rows_bits is None:
+            fn = _sharded_tokneed_kernel(
+                self.mesh, self.theta_axes, self.vertex_axis,
+                self._codec_arg)
+            need = int(np.asarray(fn(self.R))[0])
+        else:
+            fn = _sharded_tokneed_kernel(
+                self.mesh, self.theta_axes, self.vertex_axis, None)
+            need = int(np.asarray(fn(rows_bits))[0])
+        s_new = next_pow2(max(need, MIN_TOKEN_PAD), self.codec.s_pad)
+        if s_new > self.codec.s_pad:
+            self._set_codec(TokenCodec(self.n_local, s_new))
+
+    def _compress_step(self) -> bool:
+        """One rung up the policy's compress-before-evict ladder (see
+        `StorePressurePolicy.ladder`): morph the arena to the next
+        denser at-rest codec and report whether anything changed."""
+        ladder = self.policy.ladder if self.policy is not None else ()
+        nxt = _ladder_next(self.codec.kind, ladder)
+        if nxt is None:
+            return False
+        if nxt == "compressed":
+            from repro.core.pack.codec import MIN_TOKEN_PAD, TokenCodec
+            fn = _sharded_tokneed_kernel(
+                self.mesh, self.theta_axes, self.vertex_axis,
+                self._codec_arg)
+            need = int(np.asarray(fn(self.R))[0])
+            new = TokenCodec(self.n_local,
+                             next_pow2(max(need, 1), MIN_TOKEN_PAD))
+        else:
+            new = _tile_codec(nxt, self.n_local)
+        self._set_codec(new)
+        obs.counter("store.compress_steps").add(1)
+        return True
+
     # ------------------------------------------------------------ shape ----
+
+    @property
+    def representation(self) -> str:
+        """The at-rest tile codec kind (``"bitmap"``/``"packed"``/
+        ``"compressed"``) — what engines dispatch selection on."""
+        return self.codec.kind
 
     @property
     def capacity(self) -> int:
@@ -1126,7 +1320,7 @@ class ShardedStore:
         ``extend``-to-cap loops spin forever on non-divisible caps."""
         if self.policy is None:
             return None
-        cap = self.policy.row_cap(self.n)
+        cap = self.policy.row_cap(self._row_bytes())
         return (cap // self.D) * self.D
 
     def live_mask(self) -> jnp.ndarray:
@@ -1209,11 +1403,20 @@ class ShardedStore:
 
     def _ensure_room(self, b: int):
         """Per-shard pressure enforcement: compact away dead rows first,
+        then climb the policy's compress ladder (each morph shrinks
+        ``_row_bytes`` and so *raises* the byte-budget row cap), and only
         then evict each over-full shard's oldest live rows FIFO."""
         cap = self.row_cap
         if cap is None:
             return
         local_cap = cap // self.D
+        if (int(self._counts_host.max(initial=0)) + b > local_cap
+                and self.dead):
+            self.compact()
+        while (int(self._counts_host.max(initial=0)) + b > local_cap
+               and self._compress_step()):
+            cap = self.row_cap
+            local_cap = cap // self.D
         if b > local_cap:
             raise ValueError(
                 f"batch of {b} rows per shard exceeds the per-shard "
@@ -1262,7 +1465,15 @@ class ShardedStore:
             # no-op when the sampler already placed the batch with
             # ``batch_sharding``; otherwise reshards the (small) batch only
             visited = jax.device_put(visited, self._sh_rows)
+            if self.codec.kind == "compressed":
+                self._widen_tokens(visited)
+            kind_before = self.codec.kind
             self._ensure_room(b)
+            if (self.codec.kind == "compressed"
+                    and kind_before != "compressed"):
+                # the pressure ladder just morphed to tokens sized off the
+                # resident rows — the incoming batch may need wider ones
+                self._widen_tokens(visited)
             self._grow_rows(b)
             incs_np = np.clip(B - np.arange(self.D) * b, 0, b).astype(np.int32)
             incs = jax.device_put(jnp.asarray(incs_np), self._sh_vec)
@@ -1277,13 +1488,18 @@ class ShardedStore:
             self._counts_host += incs_np
             self.version += 1
         if obs.enabled():
-            # host arithmetic on shard shapes only — never a device read
+            # host arithmetic on shard shapes only — never a device read;
+            # byte gauges report *physical* at-rest bytes (the encoded
+            # tile width), not the logical uint8 bitmap footprint
+            itemsize = jnp.dtype(self.codec.dtype).itemsize
+            arena = self.D * self.cap_local * self.w_pad * itemsize
             obs.counter("store.rows_written").add(B)
             obs.gauge("store.occupancy").set(self.count / self.capacity)
-            obs.gauge("store.arena_bytes").set(
-                self.D * self.cap_local * self.n_pad)
+            obs.gauge("store.arena_bytes").set(arena)
             obs.gauge("store.bytes_per_device").set(
-                self.cap_local * (self.n_pad // max(self.Dv, 1)))
+                self.cap_local * self.w_local * itemsize)
+            obs.gauge("store.compress_ratio").set(
+                self.D * self.cap_local * self.n_pad / max(arena, 1))
         return slots
 
     # ----------------------------------------------------- row lifecycle ----
@@ -1329,6 +1545,16 @@ class ShardedStore:
                 "(kill_rows them first)")
         with obs.span("store.write", tier="store", kind="sharded-replace"):
             rows = self._layout_cols(jnp.asarray(rows).astype(jnp.uint8))
+            if self.codec.kind == "compressed":
+                from repro.core.pack.codec import (
+                    MIN_TOKEN_PAD, TokenCodec, tokens_needed)
+                need = int(jnp.max(
+                    tokens_needed(rows.reshape(-1, self.n_local)),
+                    initial=0))
+                s_new = next_pow2(max(need, MIN_TOKEN_PAD),
+                                  self.codec.s_pad)
+                if s_new > self.codec.s_pad:
+                    self._set_codec(TokenCodec(self.n_local, s_new))
             pad = next_pow2(idx.shape[0], 1) - idx.shape[0]
             if pad:
                 idx = np.concatenate([idx, np.full(pad, -1, np.int64)])
@@ -1388,8 +1614,8 @@ class ShardedStore:
         ``P(theta_axes)`` layout, so sharded selection strategies consume
         the tiles natively (zero resharding on entry).  Aliases live
         buffers — consume before the next ``add_batch``."""
-        return StoreView("bitmap", self.R, self.valid_mask(), self.n,
-                         self.count)
+        return StoreView(self.representation, self.R, self.valid_mask(),
+                         self.n, self.count)
 
     def hits(self, S) -> jnp.ndarray:
         """Covered fraction per query: ``S (Q, L) int32`` -> ``(Q,) f32``.
@@ -1418,7 +1644,7 @@ class ShardedStore:
         if cache is not None and cache[0] == self.version:
             return cache[1]
         fn = _sharded_localmax_kernel(
-            self.mesh, self.theta_axes, self.vertex_axis)
+            self.mesh, self.theta_axes, self.vertex_axis, self._codec_arg)
         val = int(np.asarray(fn(self.R, self.valid_mask()))[0])
         self._localmax_cache = (self.version, val)
         return val
@@ -1433,7 +1659,8 @@ class ShardedStore:
         key = (self.version, int(l_pad))
         if self._idx_cache is None or self._idx_cache[0] != key:
             fn = _sharded_index_kernels(
-                self.mesh, self.theta_axes, self.vertex_axis, int(l_pad))
+                self.mesh, self.theta_axes, self.vertex_axis, int(l_pad),
+                self._codec_arg)
             self._idx_cache = (key, fn(self.R))
         return StoreView("indices", self._idx_cache[1], self.valid_mask(),
                          self.n, self.count)
@@ -1444,7 +1671,7 @@ class ShardedStore:
         tile-local in both axes (`repro.stream.invalidate` dispatches
         here on sharded stores)."""
         fn = _sharded_touch_kernel(
-            self.mesh, self.theta_axes, self.vertex_axis)
+            self.mesh, self.theta_axes, self.vertex_axis, self._codec_arg)
         return fn(self.R, jnp.asarray(verts, jnp.int32),
                   jnp.asarray(vmask, jnp.bool_), self._starts_dev)
 
@@ -1461,8 +1688,17 @@ class ShardedStore:
         back in *global* vertex-id order whatever the column layout, so
         a snapshot taken under a balanced partition restores onto equal
         blocks (or different balanced boundaries) unchanged — restore
-        re-partitions elastically."""
+        re-partitions elastically.  Encoded (packed/compressed) arenas
+        are decoded per vertex tile on host first — snapshot rows are
+        always the *bit* interchange format, so any at-rest codec
+        restores into any other (the ``rep`` tag records the source
+        representation for restore-target defaulting)."""
         R = np.asarray(self.R)
+        if self.codec.kind != "bitmap":
+            R = np.concatenate(
+                [self.codec.decode_np(
+                    R[:, v * self.w_local:(v + 1) * self.w_local])
+                 for v in range(self.Dv)], axis=1)
         R = (R[:, :self.n] if self.partition.is_equal
              else R[:, self._cols_from_pad])
         sizes = np.asarray(self.sizes)
@@ -1470,6 +1706,7 @@ class ShardedStore:
         live_count = int(keep.sum())
         return {
             "kind": np.asarray("sharded"),
+            "rep": np.asarray(self.codec.kind),
             "n": np.int64(self.n),
             "count": np.int64(live_count),
             "R": (R[keep] if live_count
@@ -1486,24 +1723,23 @@ class ShardedStore:
 
     @classmethod
     def from_state(cls, st, *, mesh, theta_axes=("data",),
-                   vertex_axis=None, partition=None) -> "ShardedStore":
-        """Rebuild on ``mesh`` from a ``"sharded"`` (compact rows) *or*
-        ``"bitmap"`` (full-capacity arena) snapshot: the valid rows are
-        redistributed block-evenly across the new mesh's tiles (any
-        theta x vertex layout), and the fused counter/sizes are recomputed
-        tile-locally (exactly equal to the saved ones).  Rows are fed in
-        ``RESTORE_CHUNK``-row slices so an arena that only fits *because*
-        it is sharded never transits any single device whole on restore."""
-        n, count = int(st["n"]), int(st["count"])
-        rows = np.asarray(st["R"])[:count]
-        if "live" in st:
-            # a bitmap snapshot may carry dead (stale) rows in place —
-            # restore live rows only, like a sharded snapshot would
-            rows = rows[np.asarray(st["live"])[:count].astype(bool)]
-            count = rows.shape[0]
+                   vertex_axis=None, partition=None,
+                   codec: str = "bitmap") -> "ShardedStore":
+        """Rebuild on ``mesh`` from any snapshot kind — ``"sharded"``
+        (compact rows), ``"bitmap"`` (full-capacity arena), or encoded
+        ``"packed"``/``"compressed"`` arenas (decoded to bit rows on
+        host first): the valid rows are redistributed block-evenly
+        across the new mesh's tiles (any theta x vertex layout) and
+        re-encoded under ``codec``, and the fused counter/sizes are
+        recomputed tile-locally (exactly equal to the saved ones).  Rows
+        are fed in ``RESTORE_CHUNK``-row slices so an arena that only
+        fits *because* it is sharded never transits any single device
+        whole on restore."""
+        n, rows = _live_rows_from_state(st)
+        count = rows.shape[0]
         store = cls(n, mesh=mesh, theta_axes=theta_axes,
                     vertex_axis=vertex_axis, capacity=max(count, 1),
-                    partition=partition)
+                    partition=partition, codec=codec)
         chunk = max(cls.RESTORE_CHUNK // max(store.D, 1), 1) * store.D
         slot_chunks = []
         for lo in range(0, count, chunk):
@@ -1519,48 +1755,127 @@ class ShardedStore:
 STORE_KINDS = {"bitmap": BitmapStore, "indices": IndexStore,
                "sharded": ShardedStore}
 
+# kinds registered lazily by ``repro.core.pack`` (imported on demand so
+# this module stays importable without the pack package loaded)
+_PACK_KINDS = ("packed", "compressed")
+
+
+def _load_pack_kinds():
+    """Import the IMPack package, which registers the ``packed`` and
+    ``compressed`` store kinds plus their selection strategies."""
+    import repro.core.pack  # noqa: F401  (registration side effect)
+
+
+def _live_rows_from_state(st) -> tuple[int, np.ndarray]:
+    """Decode any snapshot kind to its live bit rows: ``(n, (count, n)
+    uint8)``.  This is the cross-representation interchange path —
+    bitmap / packed / compressed arenas and compact sharded rows all
+    reduce to the same decoded form, which any target store's
+    ``from_rows``/restore feed re-encodes."""
+    kind = str(np.asarray(st["kind"]))
+    n, count = int(st["n"]), int(st["count"])
+    R = np.asarray(st["R"])
+    if kind == "packed":
+        from repro.core.pack.codec import unpack_bits_np
+        rows = unpack_bits_np(R, n)
+    elif kind == "compressed":
+        from repro.core.pack.codec import token_decode_np
+        rows = token_decode_np(R, n)
+    elif kind == "indices":
+        rows = np.zeros((R.shape[0], n), np.uint8)
+        r, c = np.nonzero(R < n)
+        rows[r, R[r, c]] = 1
+    else:                       # bitmap / sharded: already bit rows
+        rows = np.asarray(R, np.uint8)
+    rows = rows[:count]
+    if "live" in st:
+        # full-arena snapshots may carry dead (stale) rows in place —
+        # restore live rows only, like a compact sharded snapshot would
+        rows = rows[np.asarray(st["live"])[:count].astype(bool)]
+    return n, rows
+
 
 def make_store(kind: str, n: int, **kw) -> RRRStore:
     """Store factory: ``"auto"`` (bitmap, the back-compat default),
-    ``"bitmap"``, ``"indices"``, or ``"sharded"`` (requires a ``mesh=``
-    keyword; accepts ``theta_axes=``)."""
+    ``"bitmap"``, ``"indices"``, ``"packed"``, ``"compressed"``, or
+    ``"sharded"`` (requires a ``mesh=`` keyword; accepts ``theta_axes=``
+    and a ``codec=`` at-rest kind)."""
     kind = "bitmap" if kind == "auto" else kind
+    if kind in _PACK_KINDS and kind not in STORE_KINDS:
+        _load_pack_kinds()
     try:
         ctor = STORE_KINDS[kind]
     except KeyError:
         raise ValueError(
-            f"unknown store kind {kind!r}; have {sorted(STORE_KINDS)}")
+            f"unknown store kind {kind!r}; have "
+            f"{sorted(set(STORE_KINDS) | set(_PACK_KINDS))}")
     return ctor(n, **kw)
 
 
+def _restore_error(snap_kind: str, target: str, meshed: bool) -> ValueError:
+    """The one coherent restore-matrix error: names every supported
+    ``(representation, mesh)`` combination instead of hinting at a
+    single alternative."""
+    where = "on a mesh" if meshed else "without a mesh"
+    return ValueError(
+        f"cannot restore a {snap_kind!r} snapshot as representation "
+        f"{target!r} {where}. Supported (representation, mesh) restore "
+        "combinations: 'bitmap', 'packed', and 'compressed' each restore "
+        "from any 'bitmap', 'packed', 'compressed', or 'sharded' "
+        "snapshot, with or without a mesh (a meshed restore builds a "
+        "ShardedStore whose tiles use that at-rest codec; snapshots are "
+        "decoded-row interchange, so layout none/1D/2D and at-rest "
+        "format are both elastic); 'indices' restores only from an "
+        "'indices' snapshot and only without a mesh (the sharded "
+        "resident arena is never index-list — on meshes the C4 index "
+        "representation is a derived ShardedStore.index_view, and "
+        "single-device cross-representation restores re-encode, which "
+        "an index-list snapshot does not round-trip). Re-run with "
+        "IMMConfig(store='bitmap'/'packed'/'compressed'/'auto') for a "
+        "snapshot that restores anywhere.")
+
+
 def store_from_state(st, *, mesh=None, theta_axes=("data",),
-                     vertex_axis=None, partition=None) -> RRRStore:
+                     vertex_axis=None, partition=None,
+                     kind: str | None = None) -> RRRStore:
     """Rebuild a store from a `state()` tree (snapshot restore path).
 
-    Snapshots are elastic across layouts: with ``mesh`` given, bitmap and
-    sharded snapshots both restore into a `ShardedStore` on that mesh
-    (rows redistributed over any theta x vertex layout); without one, a
-    sharded snapshot restores into a compacted `BitmapStore`.  Index-list
-    snapshots are single-device only (the sharded *resident* arena is a
-    bitmap; on meshes the C4 index representation is a derived
-    `ShardedStore.index_view`, not a store kind).
+    Snapshots are elastic across layouts *and* at-rest formats: bitmap,
+    packed, compressed, and sharded snapshots all carry (or decode to)
+    plain bit rows, so any of them restores into any target
+    representation.  ``kind`` picks the target (None keeps the
+    snapshot's own representation — a ``"sharded"`` snapshot's ``rep``
+    tag when present, else bitmap).  With ``mesh`` given the result is a
+    `ShardedStore` whose tiles use the target codec; without one it is
+    the matching single-device store.  Index-list snapshots are
+    single-device, same-representation only (see `_restore_error`).
     """
-    kind = str(np.asarray(st["kind"]))
-    if kind not in STORE_KINDS:
-        raise ValueError(f"snapshot has unknown store kind {kind!r}")
+    snap_kind = str(np.asarray(st["kind"]))
+    known = set(STORE_KINDS) | set(_PACK_KINDS)
+    if snap_kind not in known:
+        raise ValueError(f"snapshot has unknown store kind {snap_kind!r}")
+    default = snap_kind
+    if snap_kind == "sharded":
+        default = str(np.asarray(st["rep"])) if "rep" in st else "bitmap"
+    target = default if kind is None else kind
     if mesh is not None:
-        if kind == "indices":
-            raise ValueError(
-                "IndexStore snapshots are single-device only: the sharded "
-                "resident arena is a bitmap, so an index-list snapshot "
-                "cannot restore onto a mesh. Restore without a mesh, or "
-                "re-run with the bitmap representation (IMMConfig("
-                "store='bitmap' or 'auto')), whose snapshots reshard "
-                "elastically (the mesh engine still serves the C4 index "
-                "representation through ShardedStore.index_view).")
+        if snap_kind == "indices" or target == "indices":
+            raise _restore_error(snap_kind, target, meshed=True)
+        codec = target if target in _PACK_KINDS else "bitmap"
         return ShardedStore.from_state(st, mesh=mesh, theta_axes=theta_axes,
                                        vertex_axis=vertex_axis,
-                                       partition=partition)
-    if kind == "sharded":
-        return BitmapStore.from_rows(np.asarray(st["R"]), int(st["n"]))
-    return STORE_KINDS[kind].from_state(st)
+                                       partition=partition, codec=codec)
+    if target == "sharded":
+        raise ValueError(
+            "target representation 'sharded' needs a mesh= argument")
+    if target == "indices" or snap_kind == "indices":
+        if target == "indices" and snap_kind == "indices":
+            return IndexStore.from_state(st)
+        raise _restore_error(snap_kind, target, meshed=False)
+    if target in _PACK_KINDS:
+        _load_pack_kinds()
+    if target == snap_kind:
+        # same representation, full-arena snapshot: restore in place
+        return STORE_KINDS[target].from_state(st)
+    n, rows = _live_rows_from_state(st)
+    return STORE_KINDS[target].from_rows(rows, n)

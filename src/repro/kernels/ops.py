@@ -21,6 +21,8 @@ from repro.kernels.fused_select import fused_select as _select_pallas
 from repro.kernels.ic_frontier import ic_frontier_step as _frontier_pallas
 from repro.kernels.fm_interaction import fm_interaction as _fm_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.packed_count import packed_count as _packed_count_pallas
+from repro.kernels.packed_count import token_count as _token_count_pallas
 
 
 def _on_tpu() -> bool:
@@ -45,6 +47,22 @@ def ic_frontier_step(frontier, visited, logq, rand, *, use_pallas=None,
         return _frontier_pallas(frontier, visited, logq, rand,
                                 interpret=interpret, **kw)
     return ref.ic_frontier_ref(frontier, visited, logq, rand).astype("uint8")
+
+
+def packed_count(packed, alive, *, n, use_pallas=None, interpret=False,
+                 **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _packed_count_pallas(packed, alive, n=n,
+                                    interpret=interpret, **kw)
+    return ref.packed_count_ref(packed, alive, n)
+
+
+def token_count(tokens, alive, *, n, use_pallas=None, interpret=False,
+                **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+        return _token_count_pallas(tokens, alive, n=n,
+                                   interpret=interpret, **kw)
+    return ref.token_count_ref(tokens, alive, n)
 
 
 def fm_interaction(v, *, use_pallas=None, interpret=False, **kw):

@@ -1,0 +1,158 @@
+"""Pallas TPU kernels: decode-and-count over encoded RRR arenas.
+
+The IMPack counting path (HBMax direction): arenas rest bit-packed
+(8 vertices per byte) or token-compressed (per-row literal/run token
+lists over the packed bytes — see ``repro.core.pack.codec``), and the
+greedy counter rebuild ``counter[v] = #alive sets containing v`` decodes
+*inside* the kernel, so the logical ``(theta, n)`` uint8 arena never
+materializes in HBM.
+
+`packed_count` — grid ``(n_byte_tiles, row_tiles)`` with rows as the
+contraction (minor) axis: each step unpacks a ``(Tr, Tb)`` byte tile to
+``(Tr, Tb*8)`` bits with shift/mask ops on the VPU and accumulates
+``alive_tile @ bits`` on the MXU into VMEM scratch; the epilogue writes
+the column tile once on the last row step.
+
+`token_count` — grid ``(col_tiles, row_tiles)``: each step rebuilds the
+``(Tr, Tn)`` bit tile from the rows' token lists by comparing token
+blocks against the tile's column ids (literal tokens contribute their
+byte's bit, run tokens cover their 32-byte superblock; the sentinel's
+code 0 never sets a bit), OR-reducing over the token axis in chunks to
+bound the broadcast, then accumulates the same masked matmul.
+
+Both return exact integer counts (f32 accumulation of 0/1 products);
+``interpret=True`` validates on CPU against the jnp oracles in
+``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _pad
+
+_SB = 32        # token superblock: bytes per saturated-run token
+_BASE = 512     # token = block * _BASE + code
+_SAT = 256      # code marking a saturated run
+
+
+def _packed_kernel(alive_ref, packed_ref, out_ref, acc_ref):
+    rr = pl.program_id(1)
+    nr = pl.num_programs(1)
+
+    @pl.when(rr == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bytes_ = packed_ref[...].astype(jnp.int32)              # (Tr, Tb)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 8), 2)
+    bits = ((bytes_[:, :, None] >> shifts) & 1).astype(jnp.float32)
+    bits = bits.reshape(bytes_.shape[0], -1)                # (Tr, Tb*8)
+    acc_ref[...] += jnp.dot(alive_ref[...], bits,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(rr == nr - 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "tile_r", "tile_b", "interpret"))
+def packed_count(packed, alive, *, n: int, tile_r: int = 256,
+                 tile_b: int = 64, interpret: bool = False):
+    """packed: (theta, ceil(n/8)) uint8, alive: (theta,) f32/bool ->
+    counter (n,) int32."""
+    theta, nb = packed.shape
+    tr, tb = min(tile_r, max(theta, 1)), min(tile_b, nb)
+    # neutral padding: zero bytes decode to zero bits, zero alive rows
+    # contribute nothing
+    pp = _pad.pad_to(_pad.pad_to(packed, 0, tr), 1, tb)
+    ap = _pad.pad_to(alive.astype(jnp.float32).reshape(1, -1), 1, tr)
+    grid = (pl.cdiv(nb, tb), pl.cdiv(theta, tr))
+    out = pl.pallas_call(
+        _packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tr), lambda j, r: (0, r)),
+            pl.BlockSpec((tr, tb), lambda j, r: (r, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tb * 8), lambda j, r: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, pl.cdiv(nb, tb) * tb * 8),
+                                       jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, tb * 8), jnp.float32)],
+        interpret=interpret,
+    )(ap, pp)
+    return out[0, :n]
+
+
+def _token_kernel(alive_ref, tokens_ref, out_ref, acc_ref, *, chunk: int):
+    rr = pl.program_id(1)
+    nr = pl.num_programs(1)
+
+    @pl.when(rr == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    toks = tokens_ref[...]                                  # (Tr, S) int32
+    tr, s_pad = toks.shape
+    tn = out_ref.shape[-1]
+    cols = (pl.program_id(0) * tn
+            + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1))
+    cblk = cols >> 3                                        # (1, Tn)
+    cbit = cols & 7
+    csb = (cblk // _SB) * _SB
+    bits = jnp.zeros((tr, tn), jnp.float32)
+    for s0 in range(0, s_pad, chunk):
+        t = toks[:, s0:s0 + chunk]                          # (Tr, CH)
+        blk = t // _BASE
+        code = t - blk * _BASE
+        lit = ((code < _SAT)[:, :, None]
+               & (blk[:, :, None] == cblk[None, :, :])
+               & (((code[:, :, None] >> cbit[None, :, :]) & 1) > 0))
+        sat = ((code == _SAT)[:, :, None]
+               & (blk[:, :, None] == csb[None, :, :]))
+        bits = jnp.maximum(
+            bits, (lit | sat).any(axis=1).astype(jnp.float32))
+    acc_ref[...] += jnp.dot(alive_ref[...], bits,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(rr == nr - 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "tile_r", "tile_n", "chunk", "interpret"))
+def token_count(tokens, alive, *, n: int, tile_r: int = 8,
+                tile_n: int = 256, chunk: int = 8,
+                interpret: bool = False):
+    """tokens: (theta, s_pad) int32 (see codec format), alive: (theta,)
+    f32/bool -> counter (n,) int32.  Sentinel tokens (code 0 at the
+    past-the-end block) decode to nothing; pad columns past ``n`` stay
+    zero because the encoder zero-pads the trailing byte."""
+    theta, s_pad = tokens.shape
+    tr = min(tile_r, max(theta, 1))
+    tn = tile_n
+    tp = _pad.pad_to(tokens, 0, tr)  # zero-pad rows: block 0 code 0 -> no bits
+    ap = _pad.pad_to(alive.astype(jnp.float32).reshape(1, -1), 1, tr)
+    ncols = -(-n // tn) * tn
+    grid = (ncols // tn, pl.cdiv(theta, tr))
+    kernel = functools.partial(_token_kernel, chunk=min(chunk, s_pad))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tr), lambda j, r: (0, r)),
+            pl.BlockSpec((tr, s_pad), lambda j, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tn), lambda j, r: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, ncols), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, tn), jnp.float32)],
+        interpret=interpret,
+    )(ap, tp)
+    return out[0, :n]

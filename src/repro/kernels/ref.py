@@ -77,3 +77,25 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def packed_count_ref(packed, alive, n: int):
+    """packed: (theta, ceil(n/8)) uint8 bit-packed rows (LSB-first),
+    alive: (theta,) f32/bool -> counter (n,) int32.
+
+    The decode-and-count oracle for bit-packed arenas: unpack to 0/1
+    bits, then the exact f32 masked matmul (`coverage_matvec_ref`).
+    """
+    from repro.core.pack.codec import unpack_bits
+    bits = unpack_bits(packed, int(n))
+    return (alive.astype(jnp.float32)
+            @ bits.astype(jnp.float32)).astype(jnp.int32)
+
+
+def token_count_ref(tokens, alive, n: int):
+    """tokens: (theta, s_pad) int32 literal/run token rows (see
+    ``repro.core.pack.codec``), alive: (theta,) -> counter (n,) int32."""
+    from repro.core.pack.codec import token_decode
+    bits = token_decode(tokens, int(n))
+    return (alive.astype(jnp.float32)
+            @ bits.astype(jnp.float32)).astype(jnp.int32)

@@ -36,7 +36,8 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
         eps: float = 0.5, baseline: bool = False, seed: int = 0,
         max_theta: int = 1 << 14, select_ks=(), snapshot_dir: str = None,
         mesh=None, backend: str = None, sampler: str = None,
-        metrics_out: str = None, trace_out: str = None, log=print):
+        store: str = "auto", metrics_out: str = None, trace_out: str = None,
+        log=print):
     if metrics_out or trace_out:
         obs.enable()
     exp = IMM_EXPERIMENTS[graph]
@@ -48,7 +49,7 @@ def run(graph: str, *, scale: float = None, model: str = "IC", k: int = 50,
 
     cfg = IMMConfig(
         k=k, eps=eps, model=model, backend=backend, sampler=sampler,
-        max_theta=max_theta, seed=seed,
+        max_theta=max_theta, seed=seed, store=store,
         selection_method="decrement" if baseline else "rebuild",
         adaptive_representation=not baseline,
     )
@@ -123,6 +124,13 @@ def main(argv=None):
                          "sampled store (repeatable)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="resume from / persist the engine store here")
+    ap.add_argument("--store", default="auto",
+                    choices=("auto", "bitmap", "indices", "packed",
+                             "compressed", "sharded"),
+                    help="RRR arena at-rest representation: 'packed' "
+                         "(bit-packed, 8x smaller) and 'compressed' "
+                         "(token lists) are the IMPack formats; all are "
+                         "seed-for-seed identical to 'bitmap'")
     ap.add_argument("--mesh", default=None,
                     help="RRR store mesh: an int or 'auto' (1D theta "
                          "sharding), 'RxC' e.g. '2x4' (2D theta x vertex "
@@ -138,7 +146,8 @@ def main(argv=None):
         eps=args.eps, baseline=args.baseline, max_theta=args.max_theta,
         select_ks=args.select_k, snapshot_dir=args.snapshot_dir,
         mesh=args.mesh, backend=args.backend, sampler=args.sampler,
-        metrics_out=args.metrics_out, trace_out=args.trace_out)
+        store=args.store, metrics_out=args.metrics_out,
+        trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -327,7 +327,8 @@ def _main_im(args):
     mesh = make_im_mesh(args.mesh)
     mesh_kw = mesh_engine_kwargs(mesh)
     cfg = IMMConfig(k=args.k, model=args.model, backend=args.backend,
-                    sampler=args.sampler, max_theta=args.max_theta)
+                    sampler=args.sampler, max_theta=args.max_theta,
+                    store=args.store)
     if args.deltas:
         from repro.stream import StreamEngine
         engine = StreamEngine(g, cfg, **mesh_kw)
@@ -415,7 +416,8 @@ def _main_tier(args):
 
     mesh_kw = mesh_engine_kwargs(make_im_mesh(args.mesh))
     cfg = IMMConfig(k=args.k, batch=min(args.max_theta, 256),
-                    max_theta=max(args.max_theta, 1 << 20), seed=0)
+                    max_theta=max(args.max_theta, 1 << 20), seed=0,
+                    store=args.store)
     tier = IMServe(quantum=args.quantum, refresh_budget=args.refresh_budget,
                    mesh_kwargs=mesh_kw)
     graphs, stream_map = {}, {}
@@ -491,6 +493,12 @@ def main(argv=None):
     ap.add_argument("--async-refresh", action="store_true",
                     help="--deltas mode: repair on a background worker "
                          "thread instead of cooperatively inside flush")
+    ap.add_argument("--store", default="auto",
+                    choices=("auto", "bitmap", "indices", "packed",
+                             "compressed", "sharded"),
+                    help="IM arena at-rest representation ('packed'/"
+                         "'compressed' = IMPack encoded tiles; results "
+                         "are bitwise-identical to 'bitmap')")
     ap.add_argument("--mesh", default=None,
                     help="IM store mesh: int or 'auto' (1D theta "
                          "sharding), 'RxC' e.g. '2x4' (2D theta x "

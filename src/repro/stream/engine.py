@@ -116,10 +116,11 @@ class StreamEngine:
         cfg = dataclasses.replace(cfg, sampler=name)
         graph = canonicalize(graph)
         if mesh is not None:
-            if cfg.store not in ("auto", "sharded"):
+            if cfg.store not in ("auto", "sharded", "packed", "compressed"):
                 raise ValueError(
-                    "streaming on a mesh requires the sharded bitmap "
-                    "store (cfg.store='auto')")
+                    "streaming on a mesh requires a sharded dense-at-rest "
+                    "store: cfg.store='auto' (sharded bitmap), 'packed', "
+                    "or 'compressed'")
             # balanced boundaries are derived from the *initial* graph
             # and stay fixed across deltas — a snapshot/restore (or a
             # fresh stream on the mutated graph) re-partitions, the
@@ -130,10 +131,12 @@ class StreamEngine:
                 part = resolve_partition(
                     getattr(cfg, "partition", "equal"), graph.n,
                     int(mesh.shape[vertex_axis]), dst=graph.edge_dst)
+            codec = ("bitmap" if cfg.store in ("auto", "sharded")
+                     else cfg.store)
             store = make_store("sharded", graph.n, mesh=mesh,
                                theta_axes=theta_axes,
                                vertex_axis=vertex_axis, policy=policy,
-                               partition=part)
+                               partition=part, codec=codec)
         else:
             kind = "bitmap" if cfg.store in ("auto", "sharded") else cfg.store
             store = make_store(kind, graph.n, policy=policy)

@@ -27,6 +27,8 @@ continues on the surviving rows with no rebuild while
 """
 from __future__ import annotations
 
+from functools import partial
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -40,6 +42,16 @@ def _touched_bitmap(R, verts, vmask):
     column.  Runs shard-local on a sharded arena (columns are
     replicated)."""
     memb = jnp.take(R, verts, axis=1) > 0                 # (cap, V)
+    return (memb & vmask[None, :]).any(axis=1)
+
+
+@partial(jax.jit, static_argnames=("codec",))
+def _touched_codec(R, verts, vmask, *, codec):
+    """Encoded-arena version (IMPack packed/compressed rows): membership
+    of the touched columns is decoded in place — a byte gather + shift
+    for packed rows, a token comparison for compressed ones — the
+    encoded arena never expands."""
+    memb = codec.decode_cols(R, verts)                    # (cap, V) bool
     return (memb & vmask[None, :]).any(axis=1)
 
 
@@ -82,6 +94,8 @@ def rows_touching(store, vertices) -> jnp.ndarray:
     sharded = getattr(store, "rows_touching_cols", None)
     if sharded is not None:
         return sharded(verts, vmask)
+    if store.representation in ("packed", "compressed"):
+        return _touched_codec(store.R, verts, vmask, codec=store.codec)
     if store.representation == "bitmap":
         return _touched_bitmap(store.R, verts, vmask)
     return _touched_indices(store.R, verts, vmask)

@@ -43,6 +43,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="4",
                     help="layout to check: an int (1D) or 'RxC' (2D)")
+    ap.add_argument("--store", default="auto",
+                    choices=("auto", "packed", "compressed"),
+                    help="at-rest arena format for the sharded engine "
+                         "('auto' = bitmap tiles; 'packed'/'compressed' "
+                         "run the IMPack codecs on every mesh tile)")
     args = ap.parse_args(argv)
 
     mesh = make_im_mesh(args.mesh)
@@ -53,12 +58,18 @@ def main(argv=None):
     kw = mesh_engine_kwargs(mesh)
 
     g = rmat_graph(128, 1024, seed=4)
-    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3)
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3,
+                    store=args.store)
+    # the reference stays a single-device bitmap: the IMPack formats
+    # must match IT, not just each other
+    cfg_dense = dataclasses.replace(cfg, store="auto")
 
-    dense = InfluenceEngine(g, cfg)
+    dense = InfluenceEngine(g, cfg_dense)
     sharded = InfluenceEngine(g, cfg, **kw)
     assert isinstance(dense.store, BitmapStore)
     assert isinstance(sharded.store, ShardedStore)
+    want_rep = "bitmap" if args.store == "auto" else args.store
+    assert sharded.store.representation == want_rep
 
     r_dense, r_sharded = dense.run(), sharded.run()
 
@@ -72,10 +83,15 @@ def main(argv=None):
     st = sharded.store
     shards = st.R.addressable_shards
     assert len(shards) == n_dev
-    assert all(s.data.shape == (st.cap_local, st.n_local) for s in shards), \
+    # per-device tiles are (cap_local, w_local) where w_local is the
+    # codec's at-rest width (== n_local bit columns for bitmap tiles)
+    assert all(s.data.shape == (st.cap_local, st.w_local) for s in shards), \
         [s.data.shape for s in shards]
     assert st.capacity == st.D * st.cap_local
     assert st.n_pad == st.Dv * st.n_local
+    if args.store == "packed":
+        # bit-packing actually shrank the resident tile
+        assert st.w_local == -(-st.n_local // 8), (st.w_local, st.n_local)
     if st.Dv > 1:
         # 2D: every device holds only its n/Dv vertex columns
         assert st.n_local < g.n, (st.n_local, g.n)
@@ -104,7 +120,7 @@ def main(argv=None):
         bst = bal.store
         assert not bst.partition.is_equal
         # boundaries are data-dependent but per-device tiles stay uniform
-        assert all(s.data.shape == (bst.cap_local, bst.n_local)
+        assert all(s.data.shape == (bst.cap_local, bst.w_local)
                    for s in bst.R.addressable_shards)
         imb["equal"] = balance_report(g.edge_dst, g.n, st.Dv)["imbalance"]
         imb["balanced"] = balance_report(
@@ -141,7 +157,10 @@ def main(argv=None):
         np.testing.assert_array_equal(on1.select(5).seeds, r_dense.seeds)
         flat = InfluenceEngine(g, cfg)
         assert flat.restore(d)
-        assert isinstance(flat.store, BitmapStore)
+        # meshless restore keeps the configured at-rest format
+        assert flat.store.representation == want_rep
+        if args.store == "auto":
+            assert isinstance(flat.store, BitmapStore)
         np.testing.assert_array_equal(flat.select(5).seeds, r_dense.seeds)
         # restored engines keep sampling from the snapshotted key stream,
         # identically to the dense engine
@@ -157,6 +176,7 @@ def main(argv=None):
 
     print(json.dumps({
         "ok": True, "devices": n_dev, "mesh": args.mesh,
+        "store": args.store,
         "theta": int(r_sharded.theta),
         "cap_local": int(st.cap_local), "n_local": int(st.n_local),
         "counts": [int(c) for c in st.counts],

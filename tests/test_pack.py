@@ -1,0 +1,435 @@
+"""IMPack: codecs, the decode-and-count kernel, encoded stores, the
+compress-before-evict pressure ladder, snapshot elasticity, and the
+engine/stream integration of the packed and compressed at-rest formats.
+
+The headline invariant everywhere: the at-rest representation never
+changes an answer.  Counts are integers in f32, so a packed or
+compressed arena holding the same RRR sets as a bitmap yields bitwise
+identical counters, argmaxes, tie-breaks, seeds, and influence — the
+formats only change how many bytes those sets occupy.
+
+Mesh-touching tests use however many devices the process has (1 in a
+plain run, 4 under scripts/ci.sh's forced-4-device pass); the real
+multi-device acceptance cells run through tests/force_mesh_check.py
+``--store packed|compressed`` (see test_sharded_store.py and ci.sh).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.configs.imm_snap import make_im_mesh, mesh_engine_kwargs
+from repro.core.engine import InfluenceEngine, IMMConfig
+from repro.core.pack import CompressedStore, PackedBitmapStore
+from repro.core.pack.codec import (
+    MIN_TOKEN_PAD, codec_for, pack_bits_np, token_decode_np, tokens_needed,
+    unpack_bits_np,
+)
+from repro.core.store import (
+    BitmapStore, ShardedStore, StorePressurePolicy, make_store,
+    store_from_state,
+)
+from repro.graphs import rmat_graph
+from repro.kernels import ops, ref
+from repro.stream import StreamEngine, random_delta
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bit_rows(rng, B, n, density=0.1):
+    """Random uint8 0/1 rows, a few of them adversarial: all-zero,
+    all-one (exercises the saturated-run token), single-bit."""
+    rows = (rng.random((B, n)) < density).astype(np.uint8)
+    if B >= 4:
+        rows[0] = 0
+        rows[1] = 1
+        rows[2] = 0
+        rows[2, n - 1] = 1
+    return rows
+
+
+def small_graph(seed=2):
+    return rmat_graph(96, 768, seed=seed)
+
+
+# ------------------------------------------------------------------ codecs --
+
+@pytest.mark.parametrize("kind", ["packed", "compressed"])
+@pytest.mark.parametrize("n", [5, 8, 96, 300])
+def test_codec_roundtrip(rng, kind, n):
+    """encode -> decode is the identity on bit rows for every width,
+    including non-byte-aligned and multi-superblock ones; decode_cols
+    and row_popcount agree with the decoded rows; the numpy decode
+    matches the jnp one (the snapshot path uses it)."""
+    bits = _bit_rows(rng, 16, n, density=0.3)
+    s_pad = int(tokens_needed(jnp.asarray(bits)).max())
+    codec = codec_for(kind, n, s_pad=max(s_pad, MIN_TOKEN_PAD))
+    stored = np.asarray(codec.encode(jnp.asarray(bits)))
+    assert stored.shape == (16, codec.width)
+    assert stored.dtype == np.dtype(codec.dtype)
+    back = np.asarray(codec.decode(jnp.asarray(stored)))
+    np.testing.assert_array_equal(back, bits)
+    np.testing.assert_array_equal(codec.decode_np(stored), bits)
+    cols = jnp.asarray([0, n // 2, n - 1], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode_cols(jnp.asarray(stored), cols)),
+        bits[:, np.asarray(cols)].astype(bool))
+    np.testing.assert_array_equal(
+        np.asarray(codec.row_popcount(jnp.asarray(stored))),
+        bits.sum(axis=1))
+
+
+def test_codec_np_jnp_agree(rng):
+    """The numpy pack/unpack helpers (snapshot restore path) invert the
+    jnp encoders bit-for-bit."""
+    bits = _bit_rows(rng, 8, 77)
+    packed = np.asarray(codec_for("packed", 77).encode(jnp.asarray(bits)))
+    np.testing.assert_array_equal(packed, pack_bits_np(bits))
+    np.testing.assert_array_equal(unpack_bits_np(packed, 77), bits)
+    tok = codec_for("compressed", 77, s_pad=32)
+    T = np.asarray(tok.encode(jnp.asarray(bits)))
+    np.testing.assert_array_equal(token_decode_np(T, 77), bits)
+
+
+# ----------------------------------------------------- decode-and-count ----
+
+@pytest.mark.parametrize("kind", ["packed", "compressed"])
+def test_count_kernel_interpret_matches_oracle(rng, kind):
+    """The Pallas decode-and-count kernel under ``interpret=True``
+    matches both the jnp oracle and a numpy ground truth — the CPU
+    validation gate for the TPU path."""
+    n, B = 200, 64
+    bits = _bit_rows(rng, B, n, density=0.15)
+    alive = (rng.random(B) < 0.7).astype(np.float32)
+    want = (alive[:, None] * bits).sum(axis=0).astype(np.int32)
+    codec = codec_for(kind, n, s_pad=max(
+        int(tokens_needed(jnp.asarray(bits)).max()), MIN_TOKEN_PAD))
+    stored = codec.encode(jnp.asarray(bits))
+    fn = ops.packed_count if kind == "packed" else ops.token_count
+    oracle = (ref.packed_count_ref if kind == "packed"
+              else ref.token_count_ref)(stored, jnp.asarray(alive), n)
+    interp = fn(stored, jnp.asarray(alive), n=n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(oracle), want)
+    np.testing.assert_array_equal(np.asarray(interp), want)
+
+
+# ---------------------------------------------- engine: unchanged answers --
+
+@pytest.mark.parametrize("model,backend", [
+    ("IC", None), ("IC", "pallas"), ("LT", None), ("WC", None)])
+@pytest.mark.parametrize("store", ["packed", "compressed"])
+def test_engine_equivalence_across_samplers(store, model, backend):
+    """Across the sampler matrix, an engine on an encoded arena is
+    seed-for-seed identical to the bitmap engine — seeds, influence,
+    covered_frac, counter — for rebuild AND decremental selection."""
+    g = small_graph()
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3, model=model,
+                    backend=backend, adaptive_representation=False)
+    ref_res = InfluenceEngine(g, cfg).run()
+    eng = InfluenceEngine(g, dataclasses.replace(cfg, store=store))
+    assert eng.store.representation == store
+    res = eng.run()
+    np.testing.assert_array_equal(ref_res.seeds, res.seeds)
+    np.testing.assert_array_equal(ref_res.counter, res.counter)
+    assert ref_res.influence == res.influence
+    assert ref_res.covered_frac == res.covered_frac
+    np.testing.assert_array_equal(
+        InfluenceEngine(g, cfg).run().seeds,
+        eng.select(5, method="decrement").seeds[:5])
+
+
+@pytest.mark.parametrize("store", ["packed", "compressed"])
+def test_engine_equivalence_on_local_mesh(store):
+    """Same invariant through the sharded path with whatever devices
+    the process has (ci.sh forces 4): encoded mesh tiles answer like
+    the single-device bitmap."""
+    g = small_graph()
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3)
+    ref_res = InfluenceEngine(g, cfg).run()
+    mesh = make_im_mesh(jax.device_count())
+    eng = InfluenceEngine(g, dataclasses.replace(cfg, store=store),
+                          **mesh_engine_kwargs(mesh))
+    assert isinstance(eng.store, ShardedStore)
+    assert eng.store.representation == store
+    res = eng.run()
+    np.testing.assert_array_equal(ref_res.seeds, res.seeds)
+    np.testing.assert_array_equal(ref_res.counter, res.counter)
+
+
+def test_adaptive_c4_still_picks_indices_over_packed_store():
+    """The C4 adaptive chooser composes with encoded arenas: sparse
+    rows flip selection to the index layout (decoded lazily from the
+    packed arena), dense rows stay on the store's native layout —
+    answers identical either way."""
+    g = rmat_graph(128, 256, seed=1)           # sparse: tiny RRR sets
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3, store="packed",
+                    adaptive_representation=True, sparse_rep_min_n=1,
+                    switch_ratio=1)            # l_max < n flips to indices
+    eng = InfluenceEngine(g, cfg)
+    res = eng.run()
+    assert res.representation == "indices"
+    dense_cfg = dataclasses.replace(cfg, adaptive_representation=False)
+    dense_res = InfluenceEngine(g, dense_cfg).run()
+    assert dense_res.representation == "packed"
+    np.testing.assert_array_equal(res.seeds, dense_res.seeds)
+
+
+# ------------------------------------------------- pressure-ladder edges --
+
+def _batches(rng, n, count, batch):
+    return [_bit_rows(rng, batch, n) for _ in range(count // batch)]
+
+
+def test_ladder_compresses_before_evicting(rng):
+    """Compress-before-evict ordering: a write that would overflow the
+    byte cap first morphs the arena down the ladder — bitmap tiles
+    become packed tiles, 8x more rows fit the same byte budget — and
+    nothing is evicted.  The resident rows survive the morph intact
+    (exact counter over every batch ever written)."""
+    n = 96
+    mesh = make_im_mesh(jax.device_count())
+    policy = StorePressurePolicy(max_bytes=48 * n, ladder=("packed",))
+    store = make_store("sharded", n, mesh=mesh, theta_axes=("data",),
+                       policy=policy)
+    assert store.representation == "bitmap"
+    assert store.row_cap == 48
+    batches = _batches(rng, n, 48, 16)
+    for b in batches:
+        store.add_batch(jnp.asarray(b))
+    assert store.count == 48 and store.representation == "bitmap"
+    # the next batch does not fit at bitmap width -> the ladder fires
+    extra = _bit_rows(rng, 16, n)
+    store.add_batch(jnp.asarray(extra))
+    assert store.representation == "packed"
+    assert store.count == 64        # nothing evicted: width shrank instead
+    assert store.row_cap == 8 * 48  # 8x more rows under the same bytes
+    np.testing.assert_array_equal(
+        np.asarray(store.counter),
+        np.concatenate(batches + [extra]).sum(axis=0))
+
+
+def test_ladder_staleness_first_then_fifo_eviction(rng):
+    """Victim order is deterministic: dead rows are compacted away
+    before any live row is touched, then the *oldest* live rows go
+    FIFO.  With the ladder exhausted the surviving set is exactly the
+    newest ``cap`` rows."""
+    n = 96
+    store = CompressedStore(n, policy=StorePressurePolicy(max_rows=48))
+    rows = _bit_rows(rng, 48, n)
+    store.add_batch(jnp.asarray(rows))
+    # kill 8 stale rows in the middle: they must be reclaimed first
+    dead = np.zeros(store.capacity, bool)
+    dead[8:16] = True
+    assert store.kill_rows(jnp.asarray(dead)) == 8
+    incoming = _bit_rows(rng, 8, n)
+    store.add_batch(jnp.asarray(incoming))     # fits via compaction alone
+    assert store.count == 48 and store.dead == 0
+    live_then = np.concatenate([rows[:8], rows[16:48], incoming])
+    np.testing.assert_array_equal(np.asarray(store.counter),
+                                  live_then.sum(axis=0))
+    # now full of live rows: the next batch must evict the OLDEST 8
+    incoming2 = _bit_rows(rng, 8, n)
+    store.add_batch(jnp.asarray(incoming2))
+    assert store.count == 48
+    survivors = np.concatenate([live_then[8:], incoming2])
+    np.testing.assert_array_equal(np.asarray(store.counter),
+                                  survivors.sum(axis=0))
+
+
+def test_sharded_per_shard_caps_with_packed_tiles(rng):
+    """A byte budget caps *physical* per-row bytes, so packed tiles
+    admit 8x the rows of bitmap tiles under the same budget; eviction
+    under the cap stays per-shard FIFO and the counter stays exact."""
+    n = 96
+    mesh = make_im_mesh(jax.device_count())
+    kw = dict(mesh=mesh, theta_axes=("data",))
+    budget = StorePressurePolicy(max_bytes=64 * n)   # 64 bitmap rows
+    bm = make_store("sharded", n, policy=budget, **kw)
+    pk = make_store("sharded", n, codec="packed", policy=budget, **kw)
+    assert pk.row_cap == 8 * bm.row_cap
+    cap = pk.row_cap
+    batches = _batches(rng, n, cap, cap // 4)
+    for b in batches:
+        pk.add_batch(jnp.asarray(b))
+    assert pk.count == cap
+    # one more batch: every shard evicts its oldest cap/(4D) local rows,
+    # which is exactly its slice of the first batch -> the survivors are
+    # batches[1:] plus the incoming rows, on every shard count
+    extra = _bit_rows(rng, cap // 4, n)
+    pk.add_batch(jnp.asarray(extra))
+    assert pk.count == cap
+    np.testing.assert_array_equal(
+        np.asarray(pk.counter),
+        np.concatenate(batches[1:] + [extra]).sum(axis=0))
+
+
+def test_eviction_on_exactly_full_arena(rng):
+    """Edge cases at the cap boundary: an exactly-full arena evicts
+    exactly the incoming batch size; a batch larger than the whole cap
+    raises instead of silently truncating."""
+    n = 96
+    store = PackedBitmapStore(n, policy=StorePressurePolicy(max_rows=32))
+    rows = _bit_rows(rng, 32, n)
+    store.add_batch(jnp.asarray(rows))
+    assert store.count == store.row_cap == 32
+    nxt = _bit_rows(rng, 8, n)
+    store.add_batch(jnp.asarray(nxt))
+    assert store.count == 32
+    np.testing.assert_array_equal(
+        np.asarray(store.counter),
+        np.concatenate([rows[8:], nxt]).sum(axis=0))
+    with pytest.raises(ValueError, match="exceeds the policy row cap"):
+        store.add_batch(jnp.asarray(_bit_rows(rng, 33, n)))
+
+
+# ------------------------------------------------------ snapshot matrix ----
+
+@pytest.mark.parametrize("src_kind", ["bitmap", "packed", "compressed"])
+@pytest.mark.parametrize("dst_kind", ["bitmap", "packed", "compressed"])
+def test_snapshot_elasticity_across_kinds(rng, src_kind, dst_kind):
+    """Any dense at-rest snapshot restores into any dense at-rest
+    store (decoded rows are the interchange format) with identical
+    counters and membership."""
+    n = 96
+    src = make_store(src_kind, n)
+    rows = _bit_rows(rng, 40, n)
+    src.add_batch(jnp.asarray(rows))
+    dead = np.zeros(src.capacity, bool)
+    dead[3:7] = True
+    src.kill_rows(jnp.asarray(dead))
+    dst = store_from_state(src.state(), kind=dst_kind)
+    assert dst.representation == dst_kind
+    np.testing.assert_array_equal(np.asarray(src.counter),
+                                  np.asarray(dst.counter))
+    S = jnp.asarray([[1, 5, 90], [0, 2, 4]], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(src.hits(S)),
+                                  np.asarray(dst.hits(S)))
+
+
+def test_engine_snapshot_roundtrip_packed_to_mesh(rng):
+    """Engine-level elasticity: a packed single-device snapshot resumes
+    on a mesh as compressed (and back) without changing selections."""
+    g = small_graph()
+    cfg = IMMConfig(k=5, batch=64, max_theta=256, seed=3, store="packed")
+    eng = InfluenceEngine(g, cfg)
+    res = eng.run()
+    with tempfile.TemporaryDirectory() as d:
+        eng.snapshot(d)
+        mesh = make_im_mesh(jax.device_count())
+        comp = InfluenceEngine(
+            g, dataclasses.replace(cfg, store="compressed"),
+            **mesh_engine_kwargs(mesh))
+        assert comp.restore(d)
+        assert comp.store.representation == "compressed"
+        np.testing.assert_array_equal(res.seeds, comp.select(5).seeds)
+
+
+def test_store_from_state_names_all_supported_combinations(rng):
+    """The restore error is one coherent message naming every supported
+    (representation, mesh) combination."""
+    n = 96
+    idx = make_store("indices", n)
+    # sparse rows only: an all-ones row would widen l_pad past n
+    idx.add_batch(jnp.asarray(
+        (rng.random((8, n)) < 0.1).astype(np.uint8)))
+    mesh = make_im_mesh(jax.device_count())
+    with pytest.raises(ValueError) as ei:
+        store_from_state(idx.state(), mesh=mesh, theta_axes=("data",))
+    msg = str(ei.value)
+    assert "(representation, mesh)" in msg
+    for word in ("bitmap", "packed", "compressed", "indices", "sharded"):
+        assert word in msg, f"{word!r} missing from: {msg}"
+
+
+# ---------------------------------------------------------------- stream ----
+
+def test_stream_invalidate_and_refresh_on_packed(rng):
+    """Reverse-touch staleness queries decode membership in place on
+    encoded arenas: a StreamEngine on packed rows marks the same rows
+    stale and refreshes to the same seeds as the bitmap StreamEngine."""
+    g = small_graph()
+    cfg = IMMConfig(k=5, batch=64, max_theta=512, seed=7)
+    ref_s = StreamEngine(g, cfg)
+    pk = StreamEngine(g, dataclasses.replace(cfg, store="packed"))
+    ref_s.extend(256), pk.extend(256)
+    d = random_delta(ref_s.graph, np.random.default_rng(12),
+                     inserts=3, deletes=3, reweights=3)
+    stale_ref = ref_s.apply_delta(d)
+    stale_pk = pk.apply_delta(d)
+    assert stale_ref == stale_pk
+    ref_s.refresh(), pk.refresh()
+    np.testing.assert_array_equal(ref_s.select(5).seeds,
+                                  pk.select(5).seeds)
+
+
+# ------------------------------------------------------------------- obs ----
+
+def test_obs_gauges_report_physical_bytes(rng):
+    """The byte gauges report encoded (physical) arena bytes — 8x less
+    for packed than bitmap — and the compress_ratio gauge reports
+    logical bits over physical bytes."""
+    n = 96
+    try:
+        obs.enable()
+        vals = {}
+        for kind in ("bitmap", "packed"):
+            obs.reset()
+            obs.enable()
+            store = make_store(kind, n)
+            store.add_batch(jnp.asarray(_bit_rows(rng, 32, n)))
+            snap = obs.snapshot()
+            vals[kind] = {
+                "arena": snap["gauges"]["store.arena_bytes"]["value"],
+                "perdev": snap["gauges"]["store.bytes_per_device"]["value"],
+                "ratio": snap["gauges"]["store.compress_ratio"]["value"],
+            }
+            assert vals[kind]["arena"] == store.capacity * store._row_bytes()
+        assert vals["bitmap"]["arena"] == 8 * vals["packed"]["arena"]
+        assert vals["packed"]["perdev"] == vals["packed"]["arena"]
+        assert vals["packed"]["ratio"] == 8.0
+        assert vals["bitmap"]["ratio"] == 1.0
+    finally:
+        obs.reset()
+
+
+# ----------------------------------------- forced multi-device subprocess --
+
+def _run_force_mesh(devices: int, mesh: str, store: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    inherited = " ".join(
+        f for f in env.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count"))
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + inherited).strip()
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "force_mesh_check.py"),
+         "--mesh", mesh, "--store", store],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def test_packed_forced_4dev_subprocess():
+    """1D acceptance cell for the packed tiles: 4 forced host devices,
+    per-device buffers are (cap_local, ceil(n/8)) and answers match the
+    single-device bitmap engine."""
+    out = _run_force_mesh(4, "4", "packed")
+    assert out["ok"] and out["store"] == "packed"
+
+
+def test_compressed_forced_8dev_2x4_subprocess():
+    """2D acceptance cell for the token tiles: a forced-8-device 2x4
+    mesh runs compressed tiles over both arena axes, seed-for-seed with
+    the single-device bitmap engine."""
+    out = _run_force_mesh(8, "2x4", "compressed")
+    assert out["ok"] and out["store"] == "compressed"

@@ -682,14 +682,19 @@ def test_imserver_rejects_refresh_budget_on_static_engine():
 
 def test_index_store_mesh_fails_fast_with_workaround():
     """Mesh + indices is refused at construction and at snapshot restore
-    with a message naming the bitmap workaround (used to fail late and
-    obscurely at the first select)."""
+    with a message naming the supported (representation, mesh)
+    combinations (used to fail late and obscurely at the first
+    select)."""
     g = rmat_graph(48, 256, seed=0)
     with pytest.raises(ValueError, match="bitmap"):
         InfluenceEngine(g, IMMConfig(store="indices"), mesh=theta_mesh())
     idx = make_store("indices", 16)
     idx.add_batch(jnp.asarray(np.eye(4, 16, dtype=np.uint8)))
-    with pytest.raises(ValueError, match="single-device only.*bitmap"):
+    # the restore matrix error is one coherent message naming every
+    # supported combination, not a single bitmap-only hint
+    with pytest.raises(ValueError, match=r"(?s)\(representation, mesh\)"
+                                         r".*bitmap.*packed.*compressed"
+                                         r".*indices.*without a mesh"):
         store_from_state(idx.state(), mesh=theta_mesh())
     with pytest.raises(ValueError, match="bitmap"):
         StreamEngine(g, IMMConfig(store="indices"), mesh=theta_mesh())
