@@ -20,6 +20,15 @@ theta x vertex mesh (`mesh_tag` derives it from a ``jax.sharding.Mesh``).
 ``device_kind`` the platform they were measured on (``cpu``/``tpu``/
 ``gpu``) — committed BENCH files are only comparable when both match.
 
+Two *optional* cross-bench keys exist beyond the extras free-for-all
+(PR 10): ``impl`` — which kernel implementation actually ran
+(``pallas``/``interpret``/``oracle``, as proven by the
+``kernels.dispatch`` obs counter rather than inferred from
+``device_kind``) — and ``achieved_frac`` — the measured fraction of the
+roofline bound per ``repro.launch.roofline.achieved_frac``.  They are
+validated *when present* (`OPTIONAL_KEYS`), so BENCH files written
+before they existed still pass the schema gate unchanged.
+
 Use `bench_row` to build rows and `write_bench` to emit the file — both
 validate the schema, so a bench cannot silently drop a core key.
 """
@@ -31,6 +40,13 @@ import subprocess
 
 SCHEMA_KEYS = ("name", "mesh", "n", "theta", "wall_s")
 STAMP_KEYS = ("git_sha", "device_kind")
+# optional cross-bench keys: validators run only when the key is present,
+# so rows (and whole files) written before a key existed still validate
+OPTIONAL_KEYS = {
+    "impl": lambda v: v in ("pallas", "interpret", "oracle"),
+    "achieved_frac": lambda v: (isinstance(v, (int, float))
+                                and 0.0 <= float(v) <= 1.0),
+}
 
 
 def git_sha() -> str:
@@ -123,6 +139,11 @@ def write_bench(path: str, rows: list[dict]) -> str:
         missing = [k for k in SCHEMA_KEYS if k not in row]
         if missing:
             raise ValueError(f"bench row {i} is missing {missing}: {row}")
+        for k, ok in OPTIONAL_KEYS.items():
+            if k in row and not ok(row[k]):
+                raise ValueError(
+                    f"bench row {i} has malformed optional key "
+                    f"{k}={row[k]!r}: {row}")
         for k in STAMP_KEYS:
             row.setdefault(k, stamp[k])
     with open(path, "w") as f:

@@ -11,10 +11,13 @@ events with microsecond ``ts``/``dur``, plus at least one span from
 every tier named in ``--tiers``.
 
     python scripts/check_obs.py --metrics M.json --trace T.json \
-        --tiers engine,store,serve
+        --tiers engine,store,serve --require-counter kernels.dispatch
 
 Either artifact may be omitted; exits non-zero with a pointed message on
-the first violation.  CI runs this against the artifacts a tiny launch
+the first violation.  ``--require-counter`` (repeatable) additionally
+asserts a named counter series is present in the metrics snapshot — CI
+uses it to prove the ``kernels.dispatch`` impl accounting survives all
+the way into exported artifacts.  CI runs this against the artifacts a tiny launch
 campaign exports (scripts/ci.sh).
 """
 from __future__ import annotations
@@ -30,7 +33,7 @@ def fail(msg: str):
     sys.exit(f"check_obs: {msg}")
 
 
-def check_metrics(path: str) -> str:
+def check_metrics(path: str, require_counters: list[str] = ()) -> str:
     with open(path) as f:
         snap = json.load(f)
     if not isinstance(snap, dict):
@@ -57,6 +60,13 @@ def check_metrics(path: str) -> str:
         if sum(c for _, c in buckets) != h["count"]:
             fail(f"{path}: histogram {key!r} bucket counts do not sum "
                  f"to count={h['count']}")
+    for name in require_counters:
+        # a bare name matches itself or any labeled series of that name
+        # (series keys render labels as "name{k=v,...}")
+        if not any(key == name or key.startswith(name + "{")
+                   for key in snap["counters"]):
+            fail(f"{path}: required counter {name!r} absent "
+                 f"(saw {sorted(snap['counters'])})")
     n = (len(snap["counters"]) + len(snap["gauges"])
          + len(snap["histograms"]))
     return (f"metrics OK: {len(snap['counters'])} counters, "
@@ -105,12 +115,20 @@ def main(argv=None):
     ap.add_argument("--tiers", default="engine,store,serve",
                     help="comma-separated tiers the trace must contain "
                          "at least one span from")
+    ap.add_argument("--require-counter", action="append", default=[],
+                    metavar="NAME",
+                    help="fail unless the metrics snapshot contains this "
+                         "counter (exact series key, or a bare name that "
+                         "matches any 'NAME{...}' labeled series); "
+                         "repeatable")
     args = ap.parse_args(argv)
     if not args.metrics and not args.trace:
         fail("nothing to check: pass --metrics and/or --trace")
+    if args.require_counter and not args.metrics:
+        fail("--require-counter needs --metrics")
     tiers = [t for t in args.tiers.split(",") if t]
     if args.metrics:
-        print(check_metrics(args.metrics))
+        print(check_metrics(args.metrics, args.require_counter))
     if args.trace:
         print(check_trace(args.trace, tiers))
 

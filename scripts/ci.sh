@@ -29,6 +29,7 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
         tests/test_stream.py \
         tests/test_sampler_matrix.py \
         tests/test_pack.py \
+        tests/test_fused_pipeline.py \
         "tests/test_engine_store.py::test_sharded_strategy_through_engine_matches_local" \
         "tests/test_sharded_and_integration.py::test_select_dense_sharded_equals_local"
 
@@ -85,6 +86,39 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     python -m benchmarks.pack_memory --tiny \
         --out "${TMPDIR:-/tmp}/BENCH_9.json"
 
+# fused RRR pipeline smoke (BENCH_10): the one-chain sample->write->count
+# path vs the legacy two-call path at identical seeds — the emitter itself
+# asserts bitwise-equal counters, seed sets, covered_frac and influence
+# before writing a row — first single-device, then on a forced 4-device
+# 2x2 theta x vertex mesh
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.kernel_pipeline --tiny \
+        --out "${TMPDIR:-/tmp}/BENCH_10.json"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m benchmarks.kernel_pipeline --tiny --mesh 2x2 \
+        --out "${TMPDIR:-/tmp}/BENCH_10.json"
+
+# fused-pipeline schema gate: every BENCH_10 row must carry the kernel /
+# fused / impl / achieved_frac fields the roofline layer reports, and the
+# optional-key validation in benchmarks/_emit.py must have let them pass
+python - "${TMPDIR:-/tmp}/BENCH_10.json" <<'PY'
+import json, sys
+rows = json.load(open(sys.argv[1]))
+assert rows, "BENCH_10.json has no rows"
+for row in rows:
+    missing = [k for k in ("kernel", "fused", "impl", "achieved_frac")
+               if k not in row]
+    assert not missing, f"row {row.get('name')} missing {missing}"
+    assert row["impl"] in ("pallas", "interpret", "oracle"), row
+    assert 0.0 <= row["achieved_frac"] <= 1.0, row
+fused = [r for r in rows if r.get("fused")]
+assert fused and all("speedup" in r for r in fused), \
+    "fused rows must report speedup vs the unfused twin"
+print(f"BENCH_10 schema OK: {len(rows)} rows carry "
+      f"kernel/fused/impl/achieved_frac")
+PY
+
 # streaming benchmark smoke (tiny evolving graph; the non-slow analogue of
 # the full benchmarks/stream_runtime.py run) — exercises delta apply,
 # row-granular refresh, and the bounded-memory mode end-to-end
@@ -134,7 +168,8 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         --trace-out "${TMPDIR:-/tmp}/obs_trace.json"
 python scripts/check_obs.py \
     --metrics "${TMPDIR:-/tmp}/obs_metrics.json" \
-    --trace "${TMPDIR:-/tmp}/obs_trace.json" --tiers engine,store
+    --trace "${TMPDIR:-/tmp}/obs_trace.json" --tiers engine,store \
+    --require-counter kernels.dispatch
 
 # ...and the serving tier under the same flags: the trace must now also
 # carry stream (deltas + refresh) and serve (admission/cache/batch) spans

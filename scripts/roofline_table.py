@@ -1,6 +1,12 @@
 """Build the EXPERIMENTS.md §Roofline table from experiments/cells/*.json.
 
     PYTHONPATH=src python scripts/roofline_table.py [--md]
+    PYTHONPATH=src python scripts/roofline_table.py --peaks [--md]
+
+``--peaks`` prints the ``device_kind``-keyed hardware peak table
+(``repro.launch.roofline.HW_PEAKS``) that ``achieved_frac`` and the
+BENCH_10 kernel-pipeline rows are normalized against, instead of the
+dry-run cell table.
 """
 import argparse
 import glob
@@ -52,12 +58,41 @@ def fmt(rows, md=False):
     return "\n".join(lines)
 
 
+def fmt_peaks(md=False):
+    from repro.launch.roofline import HW_PEAKS
+    hdr = ["device_kind", "name", "peak_bf16_TFLOP/s", "HBM_GB/s",
+           "ICI_GB/s", "HBM_GiB"]
+    out = [[k, hw["name"],
+            f"{hw['peak_flops_bf16']/1e12:.1f}",
+            f"{hw['hbm_bytes_per_s']/1e9:.0f}",
+            f"{hw['ici_bytes_per_s']/1e9:.0f}",
+            f"{hw['hbm_bytes']/2**30:.0f}"]
+           for k, hw in HW_PEAKS.items()]
+    if md:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "|".join(["---"] * len(hdr)) + "|"]
+        for r in out:
+            lines.append("| " + " | ".join(r) + " |")
+        return "\n".join(lines)
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in out))
+              for i, h in enumerate(hdr)]
+    lines = ["  ".join(str(h).ljust(w) for h, w in zip(hdr, widths))]
+    for r in out:
+        lines.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--md", action="store_true")
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--peaks", action="store_true",
+                    help="print the device_kind-keyed hardware peak table")
     args = ap.parse_args()
-    rows = load_cells()
-    if args.mesh:
-        rows = [r for r in rows if r.get("mesh") == args.mesh]
-    print(fmt(rows, md=args.md))
+    if args.peaks:
+        print(fmt_peaks(md=args.md))
+    else:
+        rows = load_cells()
+        if args.mesh:
+            rows = [r for r in rows if r.get("mesh") == args.mesh]
+        print(fmt(rows, md=args.md))

@@ -109,6 +109,13 @@ class IMMConfig:
     # matmul (dense/pallas backends; ignored off-mesh).  Pure scheduling:
     # overlap on/off never changes a sampled set
     overlap: bool = True
+    # fuse the sample->write->count chain into ONE jit per batch (the
+    # (B, n) batch rows never rest as a separate device array — see
+    # repro.core.fused): "auto" fuses whenever the store's at-rest form
+    # supports it (bitmap/packed arenas, sharded bitmap/packed tiles),
+    # "off" forces the historical two-call path.  Pure execution fusion:
+    # the PRNG stream and every stored byte are bitwise-identical
+    fused_pipeline: str = "auto"   # "auto" | "off"
     # full sampler-name override ("WC/pallas+stable", a legacy alias, or a
     # user registration); None = compose from (model, backend, stable)
     sampler: Optional[str] = None
@@ -211,6 +218,7 @@ class InfluenceEngine:
         # backend), batches flow sampler -> arena as lists — no (B, n)
         # bitmap densification and no bitmap_to_indices pass at the write
         self._reset_index_emission()
+        self._rebind_fused()
         self._select_cache: dict = {}
 
     def _resolve_partition(self, mesh, vertex_axis):
@@ -235,6 +243,20 @@ class InfluenceEngine:
         if (self.store.representation == "indices"
                 and getattr(self._sample, "supports_index_emit", False)):
             self._emit_l = int(getattr(self.store, "l_pad", 4))
+
+    def _rebind_fused(self) -> None:
+        """(Re)build the fused sample->write->count extender for the
+        current (store, bound sampler) pair — None when disabled or
+        unsupported (index emission, IndexStore), in which case `extend`
+        keeps the historical two-call path.  Called at construction and
+        after every store swap or sampler rebind."""
+        self._fused = None
+        if getattr(self.cfg, "fused_pipeline", "auto") == "off" or self._emit_l:
+            return
+        from repro.core.fused import make_fused_extender
+        self._fused = make_fused_extender(
+            self.store, self._sample, self.cfg,
+            sampler_name=self.sampler_name)
 
     # ------------------------------------------------------------ sampling
 
@@ -262,6 +284,9 @@ class InfluenceEngine:
                                   sampler=self.sampler_name):
                         rows_idx, counter = self._sample_index_batch(sub)
                     self.store.add_index_batch(rows_idx, counter)
+                elif (self._fused is not None
+                        and self._fused.extend_once(sub)):
+                    pass  # one fused jit did sample+write+count for sub
                 else:
                     with obs.span("sample", tier="engine",
                                   sampler=self.sampler_name):
@@ -329,6 +354,7 @@ class InfluenceEngine:
         self._sample = bind_sampler(
             get_sampler(self.sampler_name), graph, self.cfg,
             placement=getattr(self.store, "batch_sharding", None))
+        self._rebind_fused()
 
     # ----------------------------------------------------------- selection
 
@@ -511,6 +537,7 @@ class InfluenceEngine:
             kind=target)
         self.key = jnp.asarray(tree["key"])
         self._reset_index_emission()
+        self._rebind_fused()
         self._select_cache.clear()
 
     def restore(self, directory: str, *, tag: str = "engine") -> bool:

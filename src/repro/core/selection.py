@@ -50,6 +50,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.graphs.partition import vertex_partition
+from repro.kernels import ops as kops
 from repro.sparse.scatter import bincount_weighted
 
 
@@ -441,6 +442,175 @@ def select_sparse_sharded(mesh, R_idx, valid, n: int, k: int, *,
     return fn(R_idx, valid, starts_arr)
 
 
+# ---------------------------------------------------------------- fused ----
+
+@partial(jax.jit, static_argnames=("n", "k", "method", "codec", "interpret"))
+def select_fused(R, valid, n: int, k: int, method: str = "rebuild", *,
+                 codec=None, interpret: bool = False):
+    """Greedy selection whose per-round reduction runs through the
+    `repro.kernels.ops` dispatch (Pallas on TPU, ``interpret=True`` for
+    CPU kernel validation, jnp oracle elsewhere) — the fused counterpart
+    of `select_dense`/`select_packed`/`select_compressed`, bitwise-equal
+    to all of them over the same rows (exact integer counts in f32, and
+    the `fused_select` kernel's tie-break equals ``jnp.argmax``).
+
+    ``R`` is the at-rest arena in the layout ``codec`` names: raw
+    ``(theta, n) uint8`` bitmaps when ``codec`` is None/bitmap, encoded
+    ``(theta, codec.width)`` tiles otherwise — encoded arenas are
+    counted with the decode-and-count kernels, so the decoded
+    ``(theta, n)`` block never exists.  For bitmap rebuild rounds the
+    `fused_select` kernel returns the winning vertex directly and the
+    per-round ``(n,)`` counter is never materialized either.
+    """
+    kind = "bitmap" if codec is None else codec.kind
+
+    def counter_of(alive):
+        a = alive.astype(jnp.float32)
+        if kind == "bitmap":
+            return kops.coverage_matvec(a, R, interpret=interpret)
+        if kind == "packed":
+            return kops.packed_count(
+                R, a, n=n, interpret=interpret).astype(jnp.float32)
+        return kops.token_count(
+            R, a, n=n, interpret=interpret).astype(jnp.float32)
+
+    def member(v):
+        if kind == "bitmap":
+            return R[:, v] > 0
+        return codec.decode_cols(R, v.reshape(1))[:, 0]
+
+    if method == "rebuild":
+        def body(i, state):
+            alive, seeds, gains = state
+            if kind == "bitmap":
+                _, v = kops.fused_select(
+                    alive.astype(jnp.float32), R, interpret=interpret)
+                v = v.astype(jnp.int32)
+            else:
+                v = jnp.argmax(counter_of(alive)).astype(jnp.int32)
+            covered = member(v) & alive
+            gain = covered.sum(dtype=jnp.int32)
+            return alive & ~covered, seeds.at[i].set(v), gains.at[i].set(gain)
+
+        alive, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (valid, jnp.zeros((k,), jnp.int32), jnp.zeros((k,), jnp.int32)))
+    elif method == "decrement":
+        def body(i, state):
+            alive, counter, seeds, gains = state
+            v = jnp.argmax(counter).astype(jnp.int32)
+            covered = member(v) & alive
+            gain = covered.sum(dtype=jnp.int32)
+            counter = counter - counter_of(covered)
+            return (alive & ~covered, counter,
+                    seeds.at[i].set(v), gains.at[i].set(gain))
+
+        alive, _, seeds, gains = jax.lax.fori_loop(
+            0, k, body,
+            (valid, counter_of(valid), jnp.zeros((k,), jnp.int32),
+             jnp.zeros((k,), jnp.int32)))
+    else:
+        raise ValueError(f"unknown method {method}")
+
+    n_valid = jnp.maximum(valid.sum(dtype=jnp.float32), 1.0)
+    return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
+
+
+def select_fused_sharded(mesh, R, valid, k: int, *,
+                         theta_axes=("data",), vertex_axis=None,
+                         method: str = "rebuild", n: int | None = None,
+                         partition=None, codec=None,
+                         interpret: bool = False):
+    """`select_dense_sharded` with every per-tile reduction routed
+    through the `repro.kernels.ops` dispatch: bitmap tiles reduce with
+    `coverage_matvec`, packed/compressed tiles with the decode-and-count
+    kernels — so encoded tiles are *never* whole-tile decoded, per round
+    or otherwise (membership of the winner is a one-column
+    ``decode_cols``).  Pad-column masking, balanced-partition offsets and
+    the argmax tie-break all go through the shared
+    `_vertex_sharded_pick`, so selections are bitwise-identical to the
+    unfused sharded strategies (and to the single-device ones) on any
+    mesh and either column layout.
+    """
+    axes = tuple(theta_axes)
+    if method not in ("rebuild", "decrement"):
+        raise ValueError(f"unknown method {method}")
+    starts_arr = _starts_for(mesh, vertex_axis, n, partition)
+    kind = "bitmap" if codec is None else codec.kind
+    n_tile = None if codec is None else codec.n_cols
+
+    def local_select(R_local, valid_local, starts=None):
+        def partial_of(alive):
+            a = alive.astype(jnp.float32)
+            if kind == "bitmap":
+                return kops.coverage_matvec(a, R_local, interpret=interpret)
+            if kind == "packed":
+                return kops.packed_count(
+                    R_local, a, n=n_tile,
+                    interpret=interpret).astype(jnp.float32)
+            return kops.token_count(
+                R_local, a, n=n_tile,
+                interpret=interpret).astype(jnp.float32)
+
+        def member_local(lv):
+            if kind == "bitmap":
+                return R_local[:, lv] > 0
+            return codec.decode_cols(R_local, lv.reshape(1))[:, 0]
+
+        def pick(counter, alive):
+            if vertex_axis is not None:
+                return _vertex_sharded_pick(
+                    counter, alive, n, vertex_axis, member_local, starts)
+            v = jnp.argmax(counter).astype(jnp.int32)
+            return v, member_local(v) & alive
+
+        if method == "rebuild":
+            def body(i, state):
+                alive, seeds, gains = state
+                counter = jax.lax.psum(partial_of(alive), axes)
+                v, covered = pick(counter, alive)
+                gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+                return (alive & ~covered,
+                        seeds.at[i].set(v), gains.at[i].set(gain))
+
+            alive, seeds, gains = jax.lax.fori_loop(
+                0, k, body,
+                (valid_local, jnp.zeros((k,), jnp.int32),
+                 jnp.zeros((k,), jnp.int32)),
+            )
+        else:
+            def body(i, state):
+                alive, partial, seeds, gains = state
+                counter = jax.lax.psum(partial, axes)
+                v, covered = pick(counter, alive)
+                gain = jax.lax.psum(covered.sum(dtype=jnp.int32), axes)
+                partial = partial - partial_of(covered)
+                return (alive & ~covered, partial,
+                        seeds.at[i].set(v), gains.at[i].set(gain))
+
+            alive, _, seeds, gains = jax.lax.fori_loop(
+                0, k, body,
+                (valid_local, partial_of(valid_local),
+                 jnp.zeros((k,), jnp.int32), jnp.zeros((k,), jnp.int32)),
+            )
+        n_valid = jnp.maximum(
+            jax.lax.psum(valid_local.sum(dtype=jnp.float32), axes), 1.0)
+        return seeds, gains.sum(dtype=jnp.float32) / n_valid, gains
+
+    out_specs = (P(), P(), P())
+    if starts_arr is None:
+        fn = shard_map(
+            local_select, mesh=mesh,
+            in_specs=(P(axes, vertex_axis), P(axes)), out_specs=out_specs,
+        )
+        return fn(R, valid)
+    fn = shard_map(
+        local_select, mesh=mesh,
+        in_specs=(P(axes, vertex_axis), P(axes), P()), out_specs=out_specs,
+    )
+    return fn(R, valid, starts_arr)
+
+
 def greedy_select(R_or_idx, valid, k: int, *, n: int | None = None,
                   representation: str = "bitmap", method: str = "rebuild"):
     """Unified entry point used by the IMM driver."""
@@ -519,11 +689,53 @@ def _sharded_sparse_strategy(method):
     return run
 
 
+def _fused_dense_strategy(method):
+    def run(view, k, *, pallas_interpret=False, **_):
+        return select_fused(view.R, view.valid, view.n, k, method,
+                            interpret=bool(pallas_interpret))
+    return run
+
+
+def _fused_codec_strategy(method):
+    def run(view, k, *, codec=None, pallas_interpret=False, **_):
+        if codec is None:
+            raise ValueError(
+                "fused packed/compressed selection needs the store codec")
+        return select_fused(view.R, view.valid, view.n, k, method,
+                            codec=codec, interpret=bool(pallas_interpret))
+    return run
+
+
+def _fused_sharded_strategy(method):
+    def run(view, k, *, mesh=None, theta_axes=("data",), vertex_axis=None,
+            partition=None, codec=None, pallas_interpret=False, **_):
+        if mesh is None:
+            raise ValueError("sharded selection needs a mesh")
+        return select_fused_sharded(
+            mesh, view.R, view.valid, k,
+            theta_axes=theta_axes, vertex_axis=vertex_axis, method=method,
+            n=view.n, partition=partition, codec=codec,
+            interpret=bool(pallas_interpret))
+    return run
+
+
 for _m in ("rebuild", "decrement"):
     register_selection(f"{_m}-dense", _dense_strategy(_m))
     register_selection(f"{_m}-sparse", _sparse_strategy(_m))
     register_selection(f"{_m}-sharded", _sharded_strategy(_m))
     register_selection(f"{_m}-sharded-sparse", _sharded_sparse_strategy(_m))
+    # the fused-kernel strategies (PR 10): selection_method="fused-rebuild"
+    # / "fused-decrement" routes every layout's reductions through the
+    # kernels/ops dispatch.  Index-list layouts have no Pallas kernel —
+    # they delegate to the plain strategies so the C4 adaptive switch
+    # under a fused method never dead-ends
+    register_selection(f"fused-{_m}-dense", _fused_dense_strategy(_m))
+    register_selection(f"fused-{_m}-packed", _fused_codec_strategy(_m))
+    register_selection(f"fused-{_m}-compressed", _fused_codec_strategy(_m))
+    register_selection(f"fused-{_m}-sharded", _fused_sharded_strategy(_m))
+    register_selection(f"fused-{_m}-sparse", _sparse_strategy(_m))
+    register_selection(f"fused-{_m}-sharded-sparse",
+                       _sharded_sparse_strategy(_m))
 
 
 # ------------------------------------------- Ripples-faithful baseline ----

@@ -325,6 +325,13 @@ class _ArenaBase:
         B = batch_sizes.shape[0]
         self.sizes = _write_rows(self.sizes, batch_sizes, jnp.int32(self.count))
         self.counter = self.counter + counter
+        self._note_write(int(B))
+
+    def _note_write(self, B: int):
+        """Host-side bookkeeping after ``B`` rows landed in the arena —
+        shared by `add_batch` and the fused sample->write->count path
+        (`repro.core.fused`), which commits rows without ever staging a
+        separate batch array."""
         self.count += int(B)
         self.version += 1
         if obs.enabled():
@@ -744,6 +751,28 @@ def _psum_if(x, axis):
     return x if axis is None else jax.lax.psum(x, axis)
 
 
+def _tile_write_body(codec, vertex_axis):
+    """The per-tile arena write body (the function `shard_map` runs on
+    every (theta-shard, vertex-shard) tile): encode + write the batch
+    block at the shard's row offset, fuse the size/counter updates, and
+    advance the shard count.  Shared verbatim between the unfused
+    `_sharded_write_kernels` path and the fused sample->write->count
+    chain (`repro.core.fused`), so both compile the identical trace."""
+
+    def write(R, sizes, counter, counts, rows, incs):
+        start = counts[0]
+        stored = rows if codec is None else codec.encode(rows)
+        R = jax.lax.dynamic_update_slice(R, stored, (start, jnp.int32(0)))
+        live = jnp.arange(rows.shape[0], dtype=jnp.int32) < incs[0]
+        row_sizes = _psum_if(rows.sum(axis=1, dtype=jnp.int32), vertex_axis)
+        row_sizes = jnp.where(live, row_sizes, 0)
+        sizes = jax.lax.dynamic_update_slice(sizes, row_sizes, (start,))
+        counter = counter + rows.sum(axis=0, dtype=jnp.int32)[None, :]
+        return R, sizes, counter, counts + incs
+
+    return write
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_write_kernels(mesh, theta_axes, vertex_axis, codec=None):
     """Compiled per-(mesh, axes) store kernels, shared across stores.
@@ -769,17 +798,7 @@ def _sharded_write_kernels(mesh, theta_axes, vertex_axis, codec=None):
     is fused: the encoded block is a jit temporary of the write kernel.
     """
     sp_rows, sp_vec = P(theta_axes, vertex_axis), P(theta_axes)
-
-    def write(R, sizes, counter, counts, rows, incs):
-        start = counts[0]
-        stored = rows if codec is None else codec.encode(rows)
-        R = jax.lax.dynamic_update_slice(R, stored, (start, jnp.int32(0)))
-        live = jnp.arange(rows.shape[0], dtype=jnp.int32) < incs[0]
-        row_sizes = _psum_if(rows.sum(axis=1, dtype=jnp.int32), vertex_axis)
-        row_sizes = jnp.where(live, row_sizes, 0)
-        sizes = jax.lax.dynamic_update_slice(sizes, row_sizes, (start,))
-        counter = counter + rows.sum(axis=0, dtype=jnp.int32)[None, :]
-        return R, sizes, counter, counts + incs
+    write = _tile_write_body(codec, vertex_axis)
 
     write_fn = jax.jit(
         shard_map(write, mesh=mesh,
@@ -1486,7 +1505,15 @@ class ShardedStore:
             self.R, self.sizes, self._counter, self._counts = self._write_fn(
                 self.R, self.sizes, self._counter, self._counts, visited, incs)
             self._counts_host += incs_np
-            self.version += 1
+        self._note_write(B)
+        return slots
+
+    def _note_write(self, B: int):
+        """Host-side bookkeeping after ``B`` rows landed (``count`` is
+        derived from ``_counts_host``, so unlike the arena stores only
+        the version bump and gauges live here).  Shared by `add_batch`
+        and the fused write chain (`repro.core.fused`)."""
+        self.version += 1
         if obs.enabled():
             # host arithmetic on shard shapes only — never a device read;
             # byte gauges report *physical* at-rest bytes (the encoded
@@ -1500,7 +1527,6 @@ class ShardedStore:
                 self.cap_local * self.w_local * itemsize)
             obs.gauge("store.compress_ratio").set(
                 self.D * self.cap_local * self.n_pad / max(arena, 1))
-        return slots
 
     # ----------------------------------------------------- row lifecycle ----
 

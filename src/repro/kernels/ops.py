@@ -10,12 +10,24 @@ through this dispatch, so a pallas-backed engine runs the fused MXU
 kernel on TPU and falls back to the bitwise-equivalent jnp oracle
 anywhere else — same math, so off-TPU results match the ``dense``
 backend exactly.
+
+Every wrapper records the resolved implementation on the
+``kernels.dispatch{kernel=...,impl=pallas|interpret|oracle}`` obs
+counter, so benches and CI can *prove* which path ran instead of
+inferring it from ``device_kind``.  The recording happens in the host
+Python wrapper — i.e. at trace time when the call sits inside ``jit`` /
+``shard_map`` — so the counter counts *compilations routed through each
+impl*, not executions (a cached jit re-executes without re-dispatching).
+That is exactly the question CI asks ("which impl was compiled in?"),
+and it keeps the obs package's no-device-code contract intact.
 """
 from __future__ import annotations
 
 import jax
 
+from repro import obs
 from repro.kernels import ref
+from repro.kernels.commit import arena_commit as _commit_pallas
 from repro.kernels.coverage_matvec import coverage_matvec as _coverage_pallas
 from repro.kernels.fused_select import fused_select as _select_pallas
 from repro.kernels.ic_frontier import ic_frontier_step as _frontier_pallas
@@ -29,29 +41,55 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_impl(use_pallas=None, interpret: bool = False) -> str:
+    """The impl a dispatch with these flags routes to, without calling it:
+    ``"interpret"`` (Pallas through the interpreter), ``"pallas"``
+    (compiled kernel), or ``"oracle"`` (the jnp reference)."""
+    if interpret:
+        return "interpret"
+    if use_pallas or (use_pallas is None and _on_tpu()):
+        return "pallas"
+    return "oracle"
+
+
+def _dispatch(kernel: str, use_pallas, interpret) -> bool:
+    """Resolve the impl, record ``kernels.dispatch``, return whether the
+    Pallas entry point (compiled or interpreted) should run."""
+    impl = resolve_impl(use_pallas, interpret)
+    obs.counter("kernels.dispatch", kernel=kernel, impl=impl).add(1)
+    return impl != "oracle"
+
+
 def coverage_matvec(alive, R, *, use_pallas=None, interpret=False, **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("coverage_matvec", use_pallas, interpret):
         return _coverage_pallas(alive, R, interpret=interpret, **kw)
     return ref.coverage_matvec_ref(alive, R)
 
 
 def fused_select(alive, R, *, use_pallas=None, interpret=False, **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("fused_select", use_pallas, interpret):
         return _select_pallas(alive, R, interpret=interpret, **kw)
     return ref.fused_select_ref(alive, R)
 
 
 def ic_frontier_step(frontier, visited, logq, rand, *, use_pallas=None,
                      interpret=False, **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("ic_frontier_step", use_pallas, interpret):
         return _frontier_pallas(frontier, visited, logq, rand,
                                 interpret=interpret, **kw)
     return ref.ic_frontier_ref(frontier, visited, logq, rand).astype("uint8")
 
 
+def arena_commit(rows, *, kind="bitmap", use_pallas=None, interpret=False,
+                 **kw):
+    if _dispatch("arena_commit", use_pallas, interpret):
+        return _commit_pallas(rows, kind=kind, interpret=interpret, **kw)
+    return ref.arena_commit_ref(rows, kind)
+
+
 def packed_count(packed, alive, *, n, use_pallas=None, interpret=False,
                  **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("packed_count", use_pallas, interpret):
         return _packed_count_pallas(packed, alive, n=n,
                                     interpret=interpret, **kw)
     return ref.packed_count_ref(packed, alive, n)
@@ -59,21 +97,21 @@ def packed_count(packed, alive, *, n, use_pallas=None, interpret=False,
 
 def token_count(tokens, alive, *, n, use_pallas=None, interpret=False,
                 **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("token_count", use_pallas, interpret):
         return _token_count_pallas(tokens, alive, n=n,
                                    interpret=interpret, **kw)
     return ref.token_count_ref(tokens, alive, n)
 
 
 def fm_interaction(v, *, use_pallas=None, interpret=False, **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("fm_interaction", use_pallas, interpret):
         return _fm_pallas(v, interpret=interpret, **kw)
     return ref.fm_interaction_ref(v)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, use_pallas=None,
                     interpret=False, **kw):
-    if use_pallas or (use_pallas is None and _on_tpu()) or interpret:
+    if _dispatch("flash_attention", use_pallas, interpret):
         return _flash_pallas(q, k, v, causal=causal, window=window,
                              interpret=interpret, **kw)
     return ref.attention_ref(q, k, v, causal=causal, window=window)

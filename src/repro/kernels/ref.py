@@ -79,6 +79,25 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     return out.astype(q.dtype)
 
 
+def arena_commit_ref(rows, kind: str = "bitmap"):
+    """rows: (B, n) uint8/bool 0/1 -> (stored, colsum (n,) int32).
+
+    The fused encode-and-count oracle: ``stored`` is the at-rest block
+    (identity for ``"bitmap"``, LSB-first `pack_bits` for ``"packed"``)
+    and ``colsum`` is the batch's per-vertex counter contribution — the
+    two quantities the store write path needs, in one definition.
+    """
+    rows = rows.astype(jnp.uint8)
+    colsum = rows.sum(axis=0, dtype=jnp.int32)
+    if kind == "bitmap":
+        return rows, colsum
+    if kind != "packed":
+        raise ValueError(f"arena_commit kind must be bitmap|packed, "
+                         f"got {kind!r}")
+    from repro.core.pack.codec import pack_bits
+    return pack_bits(rows), colsum
+
+
 def packed_count_ref(packed, alive, n: int):
     """packed: (theta, ceil(n/8)) uint8 bit-packed rows (LSB-first),
     alive: (theta,) f32/bool -> counter (n,) int32.

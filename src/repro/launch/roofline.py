@@ -28,6 +28,123 @@ import re
 from repro.launch.mesh import TPU_V5E
 
 
+# ------------------------------------------------- device peak table ----
+#
+# Peaks keyed by ``device_kind`` (what ``jax.devices()[0].platform`` /
+# benchmarks._emit.device_kind() report).  The TPU row is the v5e the
+# production mesh targets (launch/mesh.py); the GPU row is an A100-class
+# part (dense bf16 tensor-core peak, HBM2e, NVLink per direction); the
+# CPU row is a deliberately round-number server-class socket estimate
+# (AVX-512 F32 throughput, dual-channel-ish DRAM) so CPU BENCH rows get
+# an order-of-magnitude achieved fraction rather than a meaningless one.
+# The "unknown" fallback is tiny on purpose: an unrecognized platform
+# reports achieved_frac ~ 1.0-clamped garbage loudly instead of quietly
+# flattering numbers.
+
+HW_PEAKS = {
+    "tpu": TPU_V5E,
+    "gpu": {
+        "name": "A100-40G class",
+        "peak_flops_bf16": 312e12,
+        "hbm_bytes_per_s": 1.555e12,
+        "ici_bytes_per_s": 300e9,
+        "hbm_bytes": 40 * 2**30,
+    },
+    "cpu": {
+        "name": "server CPU (estimate)",
+        "peak_flops_bf16": 1e12,
+        "hbm_bytes_per_s": 5e10,
+        "ici_bytes_per_s": 1e10,
+        "hbm_bytes": 64 * 2**30,
+    },
+    "unknown": {
+        "name": "unknown device",
+        "peak_flops_bf16": 1e9,
+        "hbm_bytes_per_s": 1e9,
+        "ici_bytes_per_s": 1e9,
+        "hbm_bytes": 1 * 2**30,
+    },
+}
+
+
+def peaks_for(device_kind: str | None = None) -> dict:
+    """The `HW_PEAKS` row for ``device_kind`` (auto-detected from the
+    default jax backend when None; anything unrecognized gets the
+    explicit "unknown" fallback, never a KeyError)."""
+    if device_kind is None:
+        try:
+            import jax
+            device_kind = jax.devices()[0].platform
+        except Exception:
+            device_kind = "unknown"
+    return HW_PEAKS.get(str(device_kind), HW_PEAKS["unknown"])
+
+
+# --------------------------------------------- per-kernel cost models ----
+#
+# Analytic (flops, bytes) estimates for the Pallas kernels in
+# ``repro.kernels`` — the *useful* work, not what a given impl happens
+# to execute, so ``achieved_frac`` compares impls against the same
+# yardstick.  Shapes are the kwargs each entry names; counts assume f32
+# accumulation (2 flops per MAC) and one HBM touch per logical input and
+# output byte.
+
+KERNEL_COST_MODELS = {
+    # masked counter rebuild: (theta,) x (theta, n) mat-vec
+    "coverage_matvec": lambda theta, n: (
+        2.0 * theta * n, theta * n + 4.0 * theta + 4.0 * n),
+    # same reduction fused with the argmax (outputs are scalars)
+    "fused_select": lambda theta, n: (
+        2.0 * theta * n + n, theta * n + 4.0 * theta),
+    # one probabilistic-BFS step: frontier @ logq + activation test
+    "ic_frontier_step": lambda B, n: (
+        2.0 * B * n * n + 4.0 * B * n,
+        4.0 * n * n + 3.0 * B * n),
+    # encode + column-count over one sampled batch (the commit tail of
+    # the fused chain): bitmap stores B*n bytes back, packed B*n/8
+    "arena_commit": lambda B, n, kind="bitmap": (
+        (2.0 if kind == "packed" else 1.0) * B * n,
+        B * n + (B * n / 8.0 if kind == "packed" else B * n) + 4.0 * n),
+    # decode-and-count over a bit-packed arena
+    "packed_count": lambda theta, n: (
+        3.0 * theta * n, theta * n / 8.0 + 4.0 * theta + 4.0 * n),
+    # decode-and-count over token rows (s_pad int32 tokens per row)
+    "token_count": lambda theta, n, s_pad=8: (
+        3.0 * theta * n, 4.0 * theta * s_pad + 4.0 * theta + 4.0 * n),
+    # the full fused sample->write->count chain: `steps` frontier
+    # passes + the commit (BENCH_10's kernel row)
+    "sample_write_count": lambda B, n, steps=4, kind="bitmap": tuple(
+        a + b for a, b in zip(
+            tuple(x * steps for x in
+                  KERNEL_COST_MODELS["ic_frontier_step"](B=B, n=n)),
+            KERNEL_COST_MODELS["arena_commit"](B=B, n=n, kind=kind))),
+}
+
+
+def kernel_cost(kernel: str, **shape) -> tuple[float, float]:
+    """(flops, bytes) of ``kernel`` at ``shape`` per
+    `KERNEL_COST_MODELS`; raises KeyError for an unmodeled kernel so a
+    bench cannot silently report a cost of zero."""
+    return KERNEL_COST_MODELS[kernel](**shape)
+
+
+def achieved_frac(kernel: str, wall_s: float, *,
+                  device_kind: str | None = None, **shape) -> float:
+    """Achieved fraction of the roofline bound: the kernel's analytic
+    best-case time on ``device_kind`` (max of its compute and memory
+    terms against `peaks_for`) divided by the measured ``wall_s``,
+    clamped to [0, 1].  This is an *estimate* keyed by the cost model —
+    its job in BENCH_10 is comparing fused vs unfused on the same
+    yardstick, not absolute attainment."""
+    if wall_s <= 0.0:
+        return 0.0
+    flops, bytes_acc = kernel_cost(kernel, **shape)
+    hw = peaks_for(device_kind)
+    t_bound = max(flops / hw["peak_flops_bf16"],
+                  bytes_acc / hw["hbm_bytes_per_s"])
+    return min(t_bound / wall_s, 1.0)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

@@ -20,7 +20,12 @@ devices).  Asserts the C1 acceptance criteria:
     answer — and on the 2D rmat cell the balanced layout reports
     strictly lower per-tile edge imbalance;
   * snapshot/restore round-trips across layouts (this mesh -> 1D -> 1
-    shard -> none) without changing answers.
+    shard -> none) without changing answers;
+  * the fused sample->write->count chain (``fused_pipeline="auto"``, the
+    default) is bitwise identical to an explicitly-unfused run, and the
+    ``fused-rebuild``/``fused-decrement`` selection strategies match
+    their legacy spellings — including on the balanced 2D layout, where
+    pad-column masks and partition offsets must not perturb either.
 
 Prints one JSON line on success (consumed by the pytest wrapper).
 """
@@ -109,6 +114,21 @@ def main(argv=None):
     np.testing.assert_array_equal(
         sel_dec.seeds, dense.select(5, method="decrement").seeds)
 
+    # --- fused pipeline (PR 10): auto is the default above — prove it
+    # against an explicitly-unfused run, and the fused selection
+    # strategies against their legacy spellings, on this mesh/store cell
+    unfused = InfluenceEngine(
+        g, dataclasses.replace(cfg, fused_pipeline="off"), **kw)
+    r_unf = unfused.run()
+    np.testing.assert_array_equal(r_sharded.seeds, r_unf.seeds)
+    np.testing.assert_array_equal(r_sharded.counter, r_unf.counter)
+    np.testing.assert_array_equal(
+        sharded.select(5, method="fused-rebuild").seeds, sel_reb.seeds)
+    np.testing.assert_array_equal(
+        sharded.select(5, method="fused-rebuild").gains, sel_reb.gains)
+    np.testing.assert_array_equal(
+        sharded.select(5, method="fused-decrement").seeds, sel_dec.seeds)
+
     # --- layout & schedule invariance: balanced blocks, overlap off -----
     imb = {"equal": 1.0, "balanced": 1.0}
     if st.Dv > 1:
@@ -134,6 +154,20 @@ def main(argv=None):
             g, dataclasses.replace(cfg, partition="balanced",
                                    overlap=False), **kw)
         np.testing.assert_array_equal(r_dense.seeds, both.run().seeds)
+        # fused chain + fused selection on the balanced 2D layout: the
+        # pad-column masks and partition offsets must not perturb either
+        bal_unf = InfluenceEngine(
+            g, dataclasses.replace(cfg, partition="balanced",
+                                   fused_pipeline="off"), **kw)
+        r_bal_unf = bal_unf.run()
+        np.testing.assert_array_equal(r_bal.seeds, r_bal_unf.seeds)
+        np.testing.assert_array_equal(r_bal.counter, r_bal_unf.counter)
+        np.testing.assert_array_equal(
+            bal.select(5, method="fused-rebuild").seeds,
+            bal.select(5, method="rebuild").seeds)
+        np.testing.assert_array_equal(
+            bal.select(5, method="fused-decrement").seeds,
+            bal.select(5, method="decrement").seeds)
     noov = InfluenceEngine(
         g, dataclasses.replace(cfg, overlap=False), **kw)
     r_noov = noov.run()

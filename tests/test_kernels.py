@@ -146,3 +146,33 @@ def test_flash_attention_dtypes(dtype):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------------- arena_commit ----
+#
+# the commit tail of the fused sample->write->count chain: encode (bitmap
+# passthrough or MXU bit-pack) + exact int32 column count in one pass.
+# Equality is bitwise, not approximate — the engine's fused path commits
+# these bytes and counts directly into the arena.
+
+@pytest.mark.parametrize("B,n", [(64, 128), (33, 100), (128, 1000),
+                                 (1, 7), (127, 513)])
+@pytest.mark.parametrize("kind", ["bitmap", "packed"])
+def test_arena_commit_bitwise(B, n, kind):
+    key = jax.random.PRNGKey(B * 13 + n)
+    rows = (jax.random.uniform(key, (B, n)) < 0.3).astype(jnp.uint8)
+    stored, colsum = ops.arena_commit(rows, kind=kind, interpret=True)
+    sref, cref = ref.arena_commit_ref(rows, kind=kind)
+    np.testing.assert_array_equal(np.asarray(stored), np.asarray(sref))
+    np.testing.assert_array_equal(np.asarray(colsum), np.asarray(cref))
+
+
+@pytest.mark.parametrize("kind", ["bitmap", "packed"])
+def test_arena_commit_tilings(kind):
+    rows = (jax.random.uniform(jax.random.PRNGKey(3), (200, 300))
+            < 0.5).astype(jnp.uint8)
+    got_s, got_c = ops.arena_commit(rows, kind=kind, interpret=True,
+                                    tile_rows=64, tile_n=128)
+    ref_s, ref_c = ref.arena_commit_ref(rows, kind=kind)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(ref_c))
